@@ -1,0 +1,73 @@
+"""Paper Figures 9-10 analogue: measured axhelm variant performance.
+
+Times the jitted variants on this host (CPU — wall numbers are for RELATIVE
+comparison between variants; the absolute roofline story is the v5e model
+from bench_paper_roofline / the dry-run).  Reports us/element and effective
+GFLOPS = F_ax / t (the paper's P_eff, which charges recalculation time but
+not recalculation FLOPs)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import axhelm as ax, geometry, mesh_gen
+from repro.core.paper_roofline import axhelm_cost
+from repro.core.spectral import basis
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    jax.block_until_ready(fn(*args))   # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def rows(n: int = 7, e: int = 512, d: int = 1):
+    b = basis(n)
+    mesh = mesh_gen.deform_trilinear(
+        mesh_gen.box_mesh(8, 8, e // 64, n), seed=1)
+    verts = jnp.asarray(mesh.verts, jnp.float32)
+    rng = np.random.default_rng(0)
+    shape = (e, b.n1, b.n1, b.n1) if d == 1 else (e, d, b.n1, b.n1, b.n1)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    lam0 = jnp.ones((e, b.n1, b.n1, b.n1), jnp.float32)
+    lam1 = jnp.full((e, b.n1, b.n1, b.n1), 0.1, jnp.float32)
+
+    out = []
+    for helm in (False, True):
+        variants = (("precomputed", {}), ("trilinear", {}),
+                    (("merged" if helm else "partial"), {}))
+        for vname, _ in variants:
+            kw = dict(lam0=lam0, lam1=lam1) if helm else {}
+            op = ax.make_axhelm(vname, b, verts, helmholtz=helm,
+                                dtype=jnp.float32, **kw)
+            fn = jax.jit(op.apply)
+            t = _time(fn, x)
+            cost = axhelm_cost(n, d, helm, vname, fp_size=4)
+            out.append({
+                "equation": "helmholtz" if helm else "poisson",
+                "variant": vname,
+                "us_per_elem": t / e * 1e6,
+                "p_eff_gflops": cost.f_ax * e / t / 1e9,
+                "p_tot_gflops": cost.f_tot * e / t / 1e9,
+            })
+    return out
+
+
+def main():
+    print("# bench_axhelm (CPU wall, relative): eq,variant,us_per_elem,"
+          "p_eff_gflops,p_tot_gflops")
+    for r in rows():
+        print(f"bench_axhelm,{r['equation']},{r['variant']},"
+              f"{r['us_per_elem']:.2f},{r['p_eff_gflops']:.2f},"
+              f"{r['p_tot_gflops']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

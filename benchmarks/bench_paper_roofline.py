@@ -1,0 +1,53 @@
+"""Paper Figures 7-8 analogue: analytic roofline anatomy per platform/variant.
+
+For each (platform, equation, d, variant) this prints R_orig/R_eff/R_tot,
+T_mem vs T_cmp, and the bound — reproducing the paper's roofline-anatomy
+figures on A100 and K100 plus this repo's TPU v5e target.
+"""
+
+from __future__ import annotations
+
+from repro.core.paper_roofline import PLATFORMS, roofline
+
+VARIANTS = {
+    False: ["precomputed", "parallelepiped", "trilinear", "partial"],
+    True: ["precomputed", "parallelepiped", "trilinear", "merged"],
+}
+
+
+def rows(n: int = 7):
+    out = []
+    for pname, platform in PLATFORMS.items():
+        for helm in (False, True):
+            for d in (1, 3):
+                base = roofline(platform, n, d, helm, "precomputed")
+                for variant in VARIANTS[helm]:
+                    r = roofline(platform, n, d, helm, variant,
+                                 use_tc=pname != "k100")
+                    out.append({
+                        "platform": pname,
+                        "equation": "helmholtz" if helm else "poisson",
+                        "d": d,
+                        "variant": variant,
+                        "t_mem_us": r["t_mem"] * 1e6,
+                        "t_cmp_us": r["t_cmp"] * 1e6,
+                        "bound": r["bound"],
+                        "r_eff_gflops": r["r_eff"] / 1e9,
+                        "r_tot_gflops": r["r_tot"] / 1e9,
+                        "uplift_vs_orig": r["r_eff"] / base["r_eff"],
+                    })
+    return out
+
+
+def main():
+    print("# paper_roofline: platform,eq,d,variant,t_mem_us,t_cmp_us,bound,"
+          "r_eff_gflops,uplift")
+    for r in rows():
+        print(f"paper_roofline,{r['platform']},{r['equation']},{r['d']},"
+              f"{r['variant']},{r['t_mem_us']:.5f},{r['t_cmp_us']:.5f},"
+              f"{r['bound']},{r['r_eff_gflops']:.1f},"
+              f"{r['uplift_vs_orig']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serve a small LM with continuous batching (fixed decode slots).
+
+Submits a burst of variable-length requests, drains them through the engine,
+and reports slot utilization + per-request outputs.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-0.6b]
+          [--slots 4] [--requests 10] [--max-new 16]
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import repro.configs as configs
+    from repro.models.config import reduced_config
+    from repro.models.params import init_from_specs
+    from repro.models.registry import build_model
+    from repro.serving.engine import Request, ServeEngine
+
+    cfg = reduced_config(configs.get(args.arch))
+    model = build_model(cfg)
+    params = init_from_specs(jax.random.PRNGKey(0), model.param_specs())
+    engine = ServeEngine(model, params, max_len=args.max_len,
+                         slots=args.slots, eos_id=-1)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for uid in range(args.requests):
+        n = int(rng.integers(4, 24))
+        req = Request(uid=uid,
+                      prompt=rng.integers(1, cfg.vocab_size,
+                                          size=n).astype(np.int32),
+                      max_new_tokens=args.max_new)
+        reqs.append(req)
+        engine.submit(req)
+
+    t0 = time.perf_counter()
+    steps = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    total_new = sum(len(r.output) for r in reqs)
+    print(f"served {len(reqs)} requests / {total_new} tokens in {steps} "
+          f"decode steps, {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s, slot-util="
+          f"{total_new / max(steps * args.slots, 1):.0%})")
+    for r in reqs[:3]:
+        print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

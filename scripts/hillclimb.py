@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: one experiment per invocation (fresh XLA state).
+
+Cells (chosen per the assignment rubric from the baseline roofline table):
+  nekbone  — most representative of the paper's technique: axhelm variant
+             sweep on the v5e model (the paper's own claim, reproduced as
+             roofline terms) + a beyond-paper fused-contraction layout.
+  kimi     — most collective-bound cell (kimi-k2 train_4k): grad-accum /
+             FSDP-regather trade, remat grouping.
+  zamba    — worst useful-compute ratio (zamba2 train_4k): SSD chunk size
+             and score-precision iterations.
+
+Usage: PYTHONPATH=src python scripts/hillclimb.py <experiment> [--out f]
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _measure(fn, args, out_shardings=None, donate=()):
+    from repro.launch.hlo_analysis import analyze_hlo
+    t0 = time.time()
+    compiled = jax.jit(fn, out_shardings=out_shardings,
+                       donate_argnums=donate).lower(*args).compile()
+    dt = time.time() - t0
+    ma = compiled.memory_analysis()
+    walk = analyze_hlo(compiled.as_text())
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return {
+        "compile_s": round(dt, 1),
+        "peak_gib": round(peak / 2**30, 2),
+        "temp_gib": round(ma.temp_size_in_bytes / 2**30, 2),
+        "flops_per_dev": walk.flops,
+        "traffic_per_dev": walk.traffic_bytes,
+        "collective_per_dev": walk.collective_total,
+        "collectives": {k: round(v) for k, v in
+                        walk.collective_bytes.items()},
+        "t_compute_s": walk.flops / 197e12,
+        "t_memory_s": walk.traffic_bytes / 819e9,
+        "t_collective_s": walk.collective_total / 50e9,
+    }
+
+
+def exp_nekbone(variant: str, d: int, helm: bool, fused: bool):
+    """axhelm on the production mesh, one variant/layout."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import axhelm as ax, geometry
+    from repro.core.spectral import basis as make_basis
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    b = make_basis(7)
+    n1 = 8
+    e_total = 1_048_576
+    dt = jnp.float32
+    dhat = jnp.asarray(b.dhat, dt)
+    sh = NamedSharding(mesh, P(("data", "model")))
+    xshape = (e_total, n1, n1, n1) if d == 1 else (e_total, d, n1, n1, n1)
+    x_abs = jax.ShapeDtypeStruct(xshape, dt, sharding=sh)
+    v_abs = jax.ShapeDtypeStruct((e_total, 8, 3), dt, sharding=sh)
+    g_abs = jax.ShapeDtypeStruct((e_total, n1, n1, n1, 7), dt, sharding=sh)
+    ge_abs = jax.ShapeDtypeStruct((e_total, 7), dt, sharding=sh)
+
+    if fused:
+        # beyond-paper: one stacked differentiation matrix -> a single
+        # (3*N1, N1) x (N1, ...) contraction family instead of 3 separate
+        # einsums (bigger MXU tiles, fewer fusions)
+        dstack = jnp.concatenate([dhat, dhat, dhat], axis=0)
+
+    def step_trilinear(x, verts):
+        if not fused:
+            return ax.axhelm_trilinear(x, verts, b, dhat)
+        factors = geometry.factors_trilinear(verts, b)
+        from repro.core import sumfact
+        xr = sumfact.apply_dr(x, dhat)
+        xs = sumfact.apply_ds(x, dhat)
+        xt = sumfact.apply_dt(x, dhat)
+        g = factors.g
+        if x.ndim == 5:
+            g = g[:, None]
+        gxr = g[..., 0] * xr + g[..., 1] * xs + g[..., 2] * xt
+        gxs = g[..., 1] * xr + g[..., 3] * xs + g[..., 4] * xt
+        gxt = g[..., 2] * xr + g[..., 4] * xs + g[..., 5] * xt
+        return sumfact.grad_ref_transpose(gxr, gxs, gxt, dhat)
+
+    def step_precomputed(x, gpack):
+        f = geometry.GeomFactors(gpack[..., :6], gpack[..., 6])
+        return ax.axhelm_precomputed(x, f, dhat)
+
+    def step_parallelepiped(x, gelem):
+        w3 = jnp.asarray(b.w3, dt)
+        g = gelem[:, None, None, None, :6] * w3[..., None]
+        gwj = gelem[:, None, None, None, 6] * w3
+        if x.ndim == 5:
+            g, gwj = g[:, None], gwj[:, None]
+        f = geometry.GeomFactors(g, gwj)
+        return ax.axhelm_precomputed(x, f, dhat)
+
+    with mesh:
+        if variant == "trilinear":
+            row = _measure(step_trilinear, (x_abs, v_abs))
+        elif variant == "precomputed":
+            row = _measure(step_precomputed, (x_abs, g_abs))
+        else:
+            row = _measure(step_parallelepiped, (x_abs, ge_abs))
+    f_ax = (12 * n1**4 + 15 * n1**3) * d * e_total
+    row.update(experiment="nekbone", variant=variant, d=d,
+               fused=fused, model_flops_total=float(f_ax))
+    return row
+
+
+def exp_lm(arch: str, shape: str, cfg_overrides=None, train_overrides=None,
+           label=""):
+    from repro.launch import cells as cells_lib
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    cell = cells_lib.build_cell(arch, shape, mesh,
+                                cfg_overrides=cfg_overrides,
+                                train_overrides=train_overrides)
+    with mesh:
+        row = _measure(cell.fn, cell.args, cell.out_shardings, cell.donate)
+    row.update(experiment=f"{arch}:{shape}", label=label,
+               meta=cell.meta, cfg_overrides=cfg_overrides or {},
+               train_overrides=train_overrides or {},
+               model_flops_total=cells_lib.model_flops(
+                   __import__("repro.configs", fromlist=["get"]).get(arch),
+                   cell.case))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("exp")
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+    e = args.exp
+
+    if e.startswith("nekbone"):
+        _, variant, d, helm, fused = e.split(":")
+        row = exp_nekbone(variant, int(d), helm == "helm", fused == "fused")
+    elif e.startswith("kimi"):
+        # kimi:ga=<n>[:nofsdp]
+        parts = e.split(":")
+        ga = int(parts[1].split("=")[1])
+        row = exp_lm("kimi-k2-1t-a32b", "train_4k",
+                     train_overrides={"grad_accum": ga}, label=e)
+    elif e.startswith("zamba"):
+        # zamba:chunk=<n>[:bf16]
+        over = {}
+        for part in e.split(":")[1:]:
+            if part.startswith("chunk="):
+                over["ssm_chunk"] = int(part.split("=")[1])
+            elif part == "bf16":
+                over["ssm_score_dtype"] = "bfloat16"
+            elif part.startswith("remat="):
+                over["remat"] = part.split("=")[1]
+        row = exp_lm("zamba2-2.7b", "train_4k", cfg_overrides=over, label=e)
+    elif e.startswith("smollm"):
+        # smollm:cp (context-parallel attention via padded heads)
+        over = {}
+        if "heads16" in e:
+            over = {"num_heads": 16, "num_kv_heads": 8, "head_dim": 64}
+        row = exp_lm("smollm-360m", "train_4k", cfg_overrides=over, label=e)
+    else:
+        raise SystemExit(f"unknown experiment {e}")
+
+    row["name"] = e
+    print(json.dumps(row))
+    with open(args.out, "a") as f:
+        f.write(json.dumps(row) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Core library: the paper's matrix-free HOSFEM contribution in JAX.
+
+Subsystems: spectral basis, element geometry + geometric-factor
+recalculation (the paper's contribution), sum-factorization contractions,
+the axhelm operator variants, gather-scatter, PCG, mesh generation, and
+the paper's analytic roofline model.
+"""
+
+from repro.core import (  # noqa: F401
+    axhelm,
+    gather_scatter,
+    geometry,
+    mesh_gen,
+    nekbone,
+    paper_roofline,
+    pcg,
+    spectral,
+    sumfact,
+)

@@ -1,0 +1,277 @@
+"""The axhelm operator: element-local Y^(e) = A^(e) X^(e), all paper variants.
+
+A^(e) = D^T [lam0 * G] D  (+ Helmholtz: + diag(lam1 * Gwj)), applied matrix-
+free by sum factorization.  The variants differ ONLY in where the geometric
+factors come from — the paper's central idea:
+
+  precomputed     paper Alg. 2 — read 6(+1) factor arrays from memory
+                  (the original Nekbone/NekRS kernel, our baseline).
+  parallelepiped  paper Alg. 4 — 7 scalars per *element*, zero-cost recalc.
+  trilinear       paper Alg. 3 — 24 scalars (8 vertices) per element,
+                  low-cost analytic recalculation at every node.
+  merged          paper §4.1.1 (Helmholtz) — trilinear recalc with gScale/gwj
+                  folded into the lambda fields (Lam2, Lam3): no division,
+                  no determinant in the hot loop.
+  partial         paper §4.1.2 (Poisson) — trilinear recalc of adj(K) only;
+                  gScale (containing the division) is re-read from memory.
+
+Shapes: x is (E, N1, N1, N1) for a scalar field (d = 1) or
+(E, d, N1, N1, N1) for a vector field; factors broadcast over d.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import geometry, sumfact
+from repro.core.geometry import GeomFactors, JT_SCALE
+from repro.core.spectral import SpectralBasis
+
+__all__ = [
+    "VARIANTS",
+    "axhelm_precomputed",
+    "axhelm_trilinear",
+    "axhelm_parallelepiped",
+    "axhelm_merged",
+    "axhelm_partial",
+    "setup_merged_lambdas",
+    "setup_partial_gscale",
+    "element_diagonal",
+    "make_axhelm",
+]
+
+VARIANTS = ("precomputed", "trilinear", "parallelepiped", "merged", "partial")
+
+
+def _expand(a: Optional[jnp.ndarray], x: jnp.ndarray) -> Optional[jnp.ndarray]:
+    """Broadcast a per-node factor (E, N1, N1, N1[, 6]) against x's d axis."""
+    if a is None or x.ndim == 4:
+        return a
+    return a[:, None] if a is not None else None
+
+
+def _core(x: jnp.ndarray, g: jnp.ndarray, dhat: jnp.ndarray,
+          lam0: Optional[jnp.ndarray] = None,
+          mass: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Shared contraction core: y = D^T (lam0 * G) D x (+ mass * x).
+
+    g: (..., N1, N1, N1, 6) packed [g00,g01,g02,g11,g12,g22];
+    lam0/mass: optional (..., N1, N1, N1) pointwise fields.
+    """
+    xr, xs, xt = sumfact.grad_ref(x, dhat)
+    g00, g01, g02 = g[..., 0], g[..., 1], g[..., 2]
+    g11, g12, g22 = g[..., 3], g[..., 4], g[..., 5]
+    gxr = g00 * xr + g01 * xs + g02 * xt
+    gxs = g01 * xr + g11 * xs + g12 * xt
+    gxt = g02 * xr + g12 * xs + g22 * xt
+    if lam0 is not None:
+        gxr, gxs, gxt = lam0 * gxr, lam0 * gxs, lam0 * gxt
+    y = sumfact.grad_ref_transpose(gxr, gxs, gxt, dhat)
+    if mass is not None:
+        y = y + mass * x
+    return y
+
+
+def axhelm_precomputed(x: jnp.ndarray, factors: GeomFactors, dhat: jnp.ndarray,
+                       lam0: Optional[jnp.ndarray] = None,
+                       lam1: Optional[jnp.ndarray] = None,
+                       helmholtz: bool = False) -> jnp.ndarray:
+    """Paper Algorithm 2: factors read from (pre-assembled) arrays."""
+    mass = None
+    if helmholtz:
+        mass = factors.gwj if lam1 is None else lam1 * factors.gwj
+    return _core(x, _expand(factors.g, x), dhat,
+                 lam0=_expand(lam0, x), mass=_expand(mass, x))
+
+
+def axhelm_trilinear(x: jnp.ndarray, verts: jnp.ndarray, basis: SpectralBasis,
+                     dhat: jnp.ndarray,
+                     lam0: Optional[jnp.ndarray] = None,
+                     lam1: Optional[jnp.ndarray] = None,
+                     helmholtz: bool = False) -> jnp.ndarray:
+    """Paper Algorithm 3: on-the-fly analytic recalculation (trilinear)."""
+    factors = geometry.factors_trilinear(verts, basis)
+    return axhelm_precomputed(x, factors, dhat, lam0, lam1, helmholtz)
+
+
+def axhelm_parallelepiped(x: jnp.ndarray, verts: jnp.ndarray,
+                          basis: SpectralBasis, dhat: jnp.ndarray,
+                          lam0: Optional[jnp.ndarray] = None,
+                          lam1: Optional[jnp.ndarray] = None,
+                          helmholtz: bool = False) -> jnp.ndarray:
+    """Paper Algorithm 4: constant-J elements, 7 scalars per element."""
+    factors = geometry.factors_parallelepiped(verts, basis)
+    return axhelm_precomputed(x, factors, dhat, lam0, lam1, helmholtz)
+
+
+def setup_merged_lambdas(verts: jnp.ndarray, basis: SpectralBasis,
+                         lam0: jnp.ndarray, lam1: jnp.ndarray):
+    """Precompute Lam2 = gScale*lam0 and Lam3 = gwj*lam1 (paper §4.1.1).
+
+    Done once before the solve; the hot kernel then avoids the determinant
+    and the division entirely.
+    """
+    jt = geometry.jacobian_trilinear(verts, basis, unscaled=True)
+    det = jnp.linalg.det(jt)
+    w3 = jnp.asarray(basis.w3, dtype=verts.dtype)
+    gscale = JT_SCALE * w3 / det
+    gwj = (JT_SCALE ** 3) * w3 * det
+    return gscale * lam0, gwj * lam1
+
+
+def setup_partial_gscale(verts: jnp.ndarray, basis: SpectralBasis) -> jnp.ndarray:
+    """Precompute gScale = w3/(8 det(Jt)) for partial recalculation (§4.1.2)."""
+    jt = geometry.jacobian_trilinear(verts, basis, unscaled=True)
+    w3 = jnp.asarray(basis.w3, dtype=verts.dtype)
+    return JT_SCALE * w3 / jnp.linalg.det(jt)
+
+
+def _adjugate_factors(verts: jnp.ndarray, basis: SpectralBasis) -> jnp.ndarray:
+    """adj(K~) of the unscaled Jacobian, packed (..., N1,N1,N1, 6).
+
+    This is the division-free part of Algorithm 3 shared by the merged and
+    partial variants.
+    """
+    jt = geometry.jacobian_trilinear(verts, basis, unscaled=True)
+    j = jt
+    k00 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 0])
+    k01 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 1])
+    k02 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 2])
+    k11 = jnp.einsum("...a,...a->...", j[..., :, 1], j[..., :, 1])
+    k12 = jnp.einsum("...a,...a->...", j[..., :, 1], j[..., :, 2])
+    k22 = jnp.einsum("...a,...a->...", j[..., :, 2], j[..., :, 2])
+    return jnp.stack([
+        k11 * k22 - k12 * k12,
+        k02 * k12 - k01 * k22,
+        k01 * k12 - k02 * k11,
+        k00 * k22 - k02 * k02,
+        k01 * k02 - k00 * k12,
+        k00 * k11 - k01 * k01,
+    ], axis=-1)
+
+
+def axhelm_merged(x: jnp.ndarray, verts: jnp.ndarray, basis: SpectralBasis,
+                  dhat: jnp.ndarray, lam2: jnp.ndarray,
+                  lam3: jnp.ndarray) -> jnp.ndarray:
+    """Paper §4.1.1 (Helmholtz): G = adj(K~) * Lam2, mass = Lam3."""
+    adj = _adjugate_factors(verts, basis)
+    g = adj * lam2[..., None]
+    return _core(x, _expand(g, x), dhat, mass=_expand(lam3, x))
+
+
+def axhelm_partial(x: jnp.ndarray, verts: jnp.ndarray, basis: SpectralBasis,
+                   dhat: jnp.ndarray, gscale: jnp.ndarray) -> jnp.ndarray:
+    """Paper §4.1.2 (Poisson): recompute adj(K~), re-read gScale from memory."""
+    adj = _adjugate_factors(verts, basis)
+    if x.ndim == 5:
+        g = adj[:, None] * gscale[:, None, ..., None]
+    else:
+        g = adj * gscale[..., None]
+    return _core(x, g, dhat)
+
+
+def element_diagonal(factors: GeomFactors, dhat: jnp.ndarray,
+                     lam0: Optional[jnp.ndarray] = None,
+                     lam1: Optional[jnp.ndarray] = None,
+                     helmholtz: bool = False) -> jnp.ndarray:
+    """Closed-form diag(A^(e)) via sum factorization (for Jacobi/PCG).
+
+    diag(kji) = sum_m Dhat(m,i)^2 g'00(k,j,m) + sum_m Dhat(m,j)^2 g'11(k,m,i)
+              + sum_m Dhat(m,k)^2 g'22(m,j,i)
+              + 2 Dhat(i,i) Dhat(j,j) g'01 + 2 Dhat(i,i) Dhat(k,k) g'02
+              + 2 Dhat(j,j) Dhat(k,k) g'12   (all at (k,j,i))
+              (+ lam1 * gwj for Helmholtz),
+    with g' = lam0 * g — lam0 lives INSIDE the contraction (it is evaluated
+    at the summation node n, not at the diagonal node).
+    """
+    g = factors.g
+    if lam0 is not None:
+        g = g * lam0[..., None]
+    d2 = dhat * dhat
+    dd = jnp.diagonal(dhat)
+    diag = jnp.einsum("mi,...m->...i", d2, g[..., 0])
+    diag = diag + jnp.einsum("mj,...mi->...ji", d2, g[..., 3])
+    diag = diag + jnp.einsum("mk,...mji->...kji", d2, g[..., 5])
+    di = dd[None, None, :]
+    dj = dd[None, :, None]
+    dk = dd[:, None, None]
+    diag = diag + 2.0 * (di * dj * g[..., 1] + di * dk * g[..., 2]
+                         + dj * dk * g[..., 4])
+    if helmholtz:
+        diag = diag + (factors.gwj if lam1 is None else lam1 * factors.gwj)
+    return diag
+
+
+class AxhelmOp(NamedTuple):
+    """A ready-to-apply element operator plus its setup products."""
+
+    apply: Callable[[jnp.ndarray], jnp.ndarray]
+    factors: Optional[GeomFactors]  # precomputed factors when available
+    variant: str
+    helmholtz: bool
+
+
+def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
+                coords: Optional[jnp.ndarray] = None,
+                lam0: Optional[jnp.ndarray] = None,
+                lam1: Optional[jnp.ndarray] = None,
+                helmholtz: bool = False,
+                dtype=jnp.float64) -> AxhelmOp:
+    """Build an axhelm closure for a mesh (one-time setup outside the solve).
+
+    `coords` (physical node coordinates) is required for the `precomputed`
+    variant on general meshes; for trilinear meshes it is derived from verts.
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown axhelm variant {variant!r}")
+    dhat = jnp.asarray(basis.dhat, dtype=dtype)
+    verts = jnp.asarray(verts, dtype=dtype)
+
+    if variant == "precomputed":
+        if coords is None:
+            coords = geometry.node_coords(verts, basis)
+        factors = geometry.factors_discrete(jnp.asarray(coords, dtype=dtype), basis)
+
+        def apply(x):
+            return axhelm_precomputed(x, factors, dhat, lam0, lam1, helmholtz)
+        return AxhelmOp(apply, factors, variant, helmholtz)
+
+    if variant == "trilinear":
+        def apply(x):
+            return axhelm_trilinear(x, verts, basis, dhat, lam0, lam1, helmholtz)
+        return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
+                        variant, helmholtz)
+
+    if variant == "parallelepiped":
+        def apply(x):
+            return axhelm_parallelepiped(x, verts, basis, dhat, lam0, lam1,
+                                         helmholtz)
+        return AxhelmOp(apply, geometry.factors_parallelepiped(verts, basis),
+                        variant, helmholtz)
+
+    if variant == "merged":
+        if not helmholtz:
+            raise ValueError("merged scalar factors apply to Helmholtz only")
+        node_shape = verts.shape[:-2] + (basis.n1,) * 3
+        l0 = jnp.broadcast_to(jnp.asarray(
+            1.0 if lam0 is None else lam0, dtype=dtype), node_shape)
+        l1 = jnp.broadcast_to(jnp.asarray(
+            1.0 if lam1 is None else lam1, dtype=dtype), node_shape)
+        lam2, lam3 = setup_merged_lambdas(verts, basis, l0, l1)
+
+        def apply(x):
+            return axhelm_merged(x, verts, basis, dhat, lam2, lam3)
+        return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
+                        variant, helmholtz)
+
+    # partial (Poisson)
+    if helmholtz:
+        raise ValueError("partial recalculation applies to Poisson only")
+    gscale = setup_partial_gscale(verts, basis)
+
+    def apply(x):
+        return axhelm_partial(x, verts, basis, dhat, gscale)
+    return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
+                    variant, helmholtz)

@@ -1,0 +1,48 @@
+"""Gather-scatter: the actions of Q and Q^T (paper Algorithm 1, gslib role).
+
+Q is the sparse binary global-to-local matrix (Eq. 2); it is never built.
+  scatter (Q):   global field (Ng[, d])            -> local (E, N1,N1,N1[, d])
+  gather  (Q^T): local  (E, N1,N1,N1[, d])         -> global (Ng[, d]) sum
+
+On a sharded mesh the gather is the only cross-element (and cross-device)
+communication of the solver: XLA lowers the segment-sum over replicated ids to
+an all-reduce over the element axis — exactly gslib's role in Nek.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["scatter", "gather", "dssum", "multiplicity"]
+
+
+def scatter(x_global: jnp.ndarray, global_ids: jnp.ndarray) -> jnp.ndarray:
+    """Q x: copy global dof values to element-local nodes."""
+    return x_global[global_ids]
+
+
+def gather(y_local: jnp.ndarray, global_ids: jnp.ndarray,
+           n_global: int) -> jnp.ndarray:
+    """Q^T y: sum element-local values into global dofs."""
+    ids = global_ids.reshape(-1)
+    if y_local.ndim == global_ids.ndim:  # scalar field
+        return jax.ops.segment_sum(y_local.reshape(-1), ids,
+                                   num_segments=n_global)
+    # vector field: trailing component axis
+    d = y_local.shape[-1]
+    vals = y_local.reshape(-1, d)
+    return jax.ops.segment_sum(vals, ids, num_segments=n_global)
+
+
+def dssum(y_local: jnp.ndarray, global_ids: jnp.ndarray,
+          n_global: int) -> jnp.ndarray:
+    """Direct-stiffness summation: Q Q^T y (Nek's dssum)."""
+    return scatter(gather(y_local, global_ids, n_global), global_ids)
+
+
+def multiplicity(global_ids: jnp.ndarray, n_global: int) -> jnp.ndarray:
+    """Number of elements sharing each global dof (gslib 'vmult')."""
+    ones = jnp.ones(global_ids.size, dtype=jnp.float32)
+    return jax.ops.segment_sum(ones, global_ids.reshape(-1),
+                               num_segments=n_global)

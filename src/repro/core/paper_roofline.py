@@ -1,0 +1,113 @@
+"""The paper's analytic roofline model (Tables 3-4, Eq. 6-8, 18-20).
+
+All quantities are per element; `I = F / M` is the operational intensity.
+`roofline()` evaluates R_eff / R_tot (Eq. 20) for any (platform, variant,
+equation, d) — this reproduces the anatomy of Figures 7-8 and extends it with
+the TPU v5e target used by the rest of this repo.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["Platform", "PLATFORMS", "AxhelmCost", "axhelm_cost", "roofline"]
+
+
+@dataclass(frozen=True)
+class Platform:
+    name: str
+    peak_gc: float      # FLOP/s, general-purpose cores (paper P_peakGC)
+    peak_tc: float      # FLOP/s, matrix units (P_peakTC); == peak_gc if none
+    bandwidth: float    # achieved global-memory bytes/s (paper's B)
+    fp_size: int        # bytes per word in the hot kernel
+
+    @property
+    def pbr(self) -> float:
+        """Peak-to-bandwidth ratio (minimum intensity to reach peak)."""
+        return self.peak_gc / self.bandwidth
+
+
+PLATFORMS = {
+    # Paper Table 5.  A100: FP64, TC-capable (19.5 TF FP64 TC, 9.7 TF CUDA
+    # cores), 1360 GB/s achieved. K100: FP64 24.5 TF, 520 GB/s achieved, no TC.
+    "a100": Platform("a100", 9.7e12, 19.5e12, 1.360e12, 8),
+    "k100": Platform("k100", 24.5e12, 24.5e12, 0.520e12, 8),
+    # This repo's target: TPU v5e, bf16 MXU peak, HBM bandwidth per chip.
+    # The MXU plays the Tensor-Core role; there is no separate GC peak for
+    # matmuls, so peak_tc == peak_gc (vector ops run on the VPU but the hot
+    # contraction work is MXU-shaped).
+    "v5e": Platform("v5e", 1.97e14, 1.97e14, 8.19e11, 2),
+}
+
+
+@dataclass(frozen=True)
+class AxhelmCost:
+    """Per-element FLOPs and bytes for one axhelm application."""
+
+    f_ax: float      # useful FLOPs (Table 3)
+    f_regeo: float   # recalculation FLOPs (Table 4)
+    f_rs: float      # FLOPs offloadable to matrix units (8 N1^3 d per paper)
+    m_bytes: float   # total global-memory bytes (M_geo + M_XYL + Dhat)
+
+    @property
+    def f_tot(self) -> float:
+        return self.f_ax + self.f_regeo
+
+
+def axhelm_cost(n: int, d: int, helmholtz: bool, variant: str,
+                fp_size: int = 8) -> AxhelmCost:
+    """Tables 3 & 4 of the paper, per element.
+
+    variant in {precomputed, parallelepiped, trilinear, merged, partial}.
+    `merged` (Helmholtz) and `partial` (Poisson) are the Section 4.1 column.
+    """
+    n1 = n + 1
+    is_helm = 1 if helmholtz else 0
+    # Table 3: F_ax = d * (12 N1^4 + (15 + 5 isHelm) N1^3)
+    f_ax = d * (12.0 * n1**4 + (15.0 + 5.0 * is_helm) * n1**3)
+    # Tensor-core-eligible contraction work (paper: F_rs = 8 N1^3 d ... per
+    # k-layer over N1 layers => 8 N1^4 d of the 12 N1^4 d contraction FLOPs).
+    f_rs = 8.0 * n1**4 * d
+    # M_XYL: X and Y (d each) + lambda0/lambda1 for Helmholtz (Eq. 7).
+    m_xyl = (2.0 * is_helm + 2.0 * d) * n1**3
+    # Table 4 per variant: geometry traffic (words) and recalc FLOPs.
+    if variant == "precomputed":
+        m_geo, f_regeo = (6.0 + is_helm) * n1**3, 0.0
+    elif variant == "parallelepiped":
+        m_geo, f_regeo = (6.0 + is_helm) * 1.0, (7.0 + is_helm) * n1**3
+    elif variant == "trilinear":
+        m_geo = 24.0
+        f_regeo = 72.0 * n1 + 51.0 * n1**2 + (82.0 + is_helm * 3.0) * n1**3
+    elif variant in ("merged", "partial"):
+        if variant == "merged" and not helmholtz:
+            raise ValueError("merged is the Helmholtz optimization")
+        if variant == "partial" and helmholtz:
+            raise ValueError("partial is the Poisson optimization")
+        is_pois = 0 if helmholtz else 1
+        m_geo = 24.0 + is_pois * n1**3
+        f_regeo = 72.0 * n1 + 51.0 * n1**2 + 66.0 * n1**3
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    m_bytes = (m_geo + m_xyl + n1**2) * fp_size  # + N1^2 for Dhat (Table 3)
+    return AxhelmCost(f_ax, f_regeo, f_rs, m_bytes)
+
+
+def roofline(platform: Platform, n: int, d: int, helmholtz: bool,
+             variant: str, use_tc: bool = True) -> dict:
+    """Eq. 18-20: T_mem, T_cmp, R_eff, R_tot (per element, seconds/FLOPs)."""
+    cost = axhelm_cost(n, d, helmholtz, variant, platform.fp_size)
+    t_mem = cost.m_bytes / platform.bandwidth
+    peak_tc = platform.peak_tc if use_tc else platform.peak_gc
+    f_rs = cost.f_rs if use_tc else 0.0
+    t_cmp = f_rs / peak_tc + (cost.f_tot - f_rs) / platform.peak_gc
+    t_min = max(t_mem, t_cmp)
+    return {
+        "variant": variant,
+        "t_mem": t_mem,
+        "t_cmp": t_cmp,
+        "bound": "mem" if t_mem >= t_cmp else "cmp",
+        "r_eff": cost.f_ax / t_min,
+        "r_tot": cost.f_tot / t_min,
+        "intensity": cost.f_tot / cost.m_bytes,
+        "cost": cost,
+    }

@@ -1,0 +1,1 @@
+"""Data pipeline: deterministic resumable synthetic streams + prefetch."""

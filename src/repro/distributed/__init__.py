@@ -1,0 +1,1 @@
+"""Distribution: sharding context/rules, collectives, gradient compression."""

@@ -1,0 +1,51 @@
+"""Sharding context threaded through model code.
+
+`ShardCtx` carries the mesh and the axis-name conventions; `None` means
+single-device execution (tests).  Models receive it explicitly — no globals.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["ShardCtx", "make_ctx", "batch_axes", "constraint"]
+
+
+class ShardCtx(NamedTuple):
+    mesh: Mesh
+    data_axes: Tuple[str, ...]    # axes sharding the batch, e.g. ("pod","data")
+    model_axis: str               # tensor/expert-parallel axis
+
+    @property
+    def ep_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def dp_size(self) -> int:
+        size = 1
+        for a in self.data_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+
+def make_ctx(mesh: Optional[Mesh]) -> Optional[ShardCtx]:
+    if mesh is None:
+        return None
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    return ShardCtx(mesh, data_axes, "model" if "model" in names else names[-1])
+
+
+def constraint(x, ctx: Optional[ShardCtx], spec: P):
+    """with_sharding_constraint that no-ops off-mesh."""
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, spec))

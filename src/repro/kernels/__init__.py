@@ -1,0 +1,1 @@
+"""Pallas kernels for the compute hot-spots the paper optimizes (axhelm)."""

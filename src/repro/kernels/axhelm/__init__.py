@@ -1,0 +1,4 @@
+"""Pallas TPU axhelm kernels: kernel.py (pallas_call), ops.py (jit wrapper),
+ref.py (pure-jnp oracle)."""
+
+from repro.kernels.axhelm.ops import axhelm, reference  # noqa: F401

@@ -1,0 +1,206 @@
+"""Pallas TPU kernels for axhelm (all geometric-factor variants).
+
+TPU adaptation of the paper's GPU kernels (see DESIGN.md §3):
+
+  * the CUDA "one 2D thread block per element" becomes a 1-D Pallas grid over
+    *blocks of EB elements*; each grid step holds (EB, d, N1^3) of X in VMEM,
+  * the Tensor-Core WMMA contractions become MXU `dot_general`s: the three
+    sum-factorization contractions are reshaped into matmuls whose batch/row
+    dimension is EB*d*N1{,^2} — element batching fills the MXU the way the
+    paper's k-layer/warp unrolling fills WMMA fragments,
+  * `__constant__` D̂_N becomes a (N1, N1) VMEM operand broadcast to every
+    grid step (index_map -> block 0),
+  * the on-the-fly trilinear recalculation (paper Algorithm 3) runs *inside*
+    the kernel on the (EB, 8, 3) vertex block — geometry traffic drops from
+    (6+isHelm)*N1^3 words/element to 24 words/element, exactly the paper's
+    trade.
+
+Compute is fp32 (TPU has no fp64 MXU; DESIGN.md §7); accumulation is forced
+fp32 via `preferred_element_type` even for bf16 inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import geometry
+
+__all__ = ["build_axhelm_call"]
+
+_F32 = jnp.float32
+
+
+def _grad(x: jnp.ndarray, dhat: jnp.ndarray):
+    """Sum-factorization gradient as three explicit MXU matmuls.
+
+    x: (B, N1, N1, N1) fp32 with B = EB*d.  Returns xr, xs, xt same shape.
+    """
+    b, n1 = x.shape[0], x.shape[-1]
+    # D_r: rows of x along i: (B*N1^2, N1) @ Dhat^T
+    xm = x.reshape(b * n1 * n1, n1)
+    xr = jax.lax.dot_general(xm, dhat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=_F32)
+    xr = xr.reshape(x.shape)
+    # D_s: batched (N1, N1) slices over (B*N1_k): Dhat @ x[b,k]
+    x2 = x.reshape(b * n1, n1, n1)
+    xs = jax.lax.dot_general(x2, dhat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=_F32)
+    # result (batch, i, j) -> transpose to (batch, j, i)
+    xs = xs.transpose(0, 2, 1).reshape(x.shape)
+    # D_t: (B, N1_k, N1^2): Dhat @ x[b]
+    x3 = x.reshape(b, n1, n1 * n1)
+    xt = jax.lax.dot_general(x3, dhat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=_F32)
+    xt = xt.transpose(0, 2, 1).reshape(x.shape)
+    return xr, xs, xt
+
+
+def _grad_transpose(gxr, gxs, gxt, dhat):
+    """y = D_r^T gxr + D_s^T gxs + D_t^T gxt (same matmul shapes, Dhat^T)."""
+    b, n1 = gxr.shape[0], gxr.shape[-1]
+    ym = jax.lax.dot_general(gxr.reshape(b * n1 * n1, n1), dhat,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=_F32).reshape(gxr.shape)
+    ys = jax.lax.dot_general(gxs.reshape(b * n1, n1, n1), dhat,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=_F32)
+    ym = ym + ys.transpose(0, 2, 1).reshape(gxr.shape)
+    yt = jax.lax.dot_general(gxt.reshape(b, n1, n1 * n1), dhat,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=_F32)
+    return ym + yt.transpose(0, 2, 1).reshape(gxr.shape)
+
+
+def _apply_factors(xr, xs, xt, g6, lam0):
+    """gx* = (lam0) * G . (xr, xs, xt); g6: (EB, N1,N1,N1, 6), x*: (EB, d, ...)."""
+    g = g6[:, None]  # broadcast over d
+    gxr = g[..., 0] * xr + g[..., 1] * xs + g[..., 2] * xt
+    gxs = g[..., 1] * xr + g[..., 3] * xs + g[..., 4] * xt
+    gxt = g[..., 2] * xr + g[..., 4] * xs + g[..., 5] * xt
+    if lam0 is not None:
+        l0 = lam0[:, None]
+        gxr, gxs, gxt = l0 * gxr, l0 * gxs, l0 * gxt
+    return gxr, gxs, gxt
+
+
+def _trilinear_factors_block(verts, xi, w3):
+    """Vectorized paper Algorithm 3 on an (EB, 8, 3) vertex block -> (g, gwj)."""
+    terms = geometry.trilinear_terms(verts, xi)
+    t = xi[:, None, None, None]
+    e0 = terms.e0[..., None, :, None, :]
+    e1 = terms.e1[..., None, :, None, :]
+    f0 = terms.f0[..., None, None, :, :]
+    f1 = terms.f1[..., None, None, :, :]
+    n1 = xi.shape[0]
+    full = verts.shape[:-2] + (n1,) * 3 + (3,)
+    jt = jnp.stack([jnp.broadcast_to(e0 + t * e1, full),
+                    jnp.broadcast_to(f0 + t * f1, full),
+                    jnp.broadcast_to(terms.jcol2[..., None, :, :, :], full)],
+                   axis=-1)
+    return geometry.factors_from_jacobian(jt, w3, scale=geometry.JT_SCALE)
+
+
+def _kernel(*refs, variant: str, helmholtz: bool, has_lam0: bool,
+            has_lam1: bool, d: int):
+    """Unified kernel body; ref order matches build_axhelm_call's input list."""
+    it = iter(refs[:-1])
+    out_ref = refs[-1]
+    dhat = next(it)[...].astype(_F32)
+
+    g6 = gwj = None
+    if variant == "precomputed":
+        g6 = next(it)[...].astype(_F32)
+        if helmholtz:
+            gwj = next(it)[...].astype(_F32)
+    elif variant == "trilinear":
+        xi = next(it)[...].astype(_F32)[:, 0]          # (N1, 1) -> (N1,)
+        w3 = next(it)[...].astype(_F32)
+        verts = next(it)[...].astype(_F32)
+        factors = _trilinear_factors_block(verts, xi, w3)
+        g6, gwj = factors.g, factors.gwj
+    elif variant == "parallelepiped":
+        w3 = next(it)[...].astype(_F32)
+        gelem = next(it)[...].astype(_F32)             # (EB, 7)
+        g6 = gelem[:, None, None, None, :6] * w3[None, ..., None]
+        gwj = gelem[:, None, None, None, 6] * w3[None]
+    else:
+        raise ValueError(variant)
+
+    x = next(it)[...].astype(_F32)                     # (EB, d, N1, N1, N1)
+    lam0 = next(it)[...].astype(_F32) if has_lam0 else None
+    lam1 = next(it)[...].astype(_F32) if has_lam1 else None
+
+    eb, n1 = x.shape[0], x.shape[-1]
+    xb = x.reshape(eb * d, n1, n1, n1)
+    xr, xs, xt = _grad(xb, dhat)
+    shape5 = (eb, d, n1, n1, n1)
+    gxr, gxs, gxt = _apply_factors(xr.reshape(shape5), xs.reshape(shape5),
+                                   xt.reshape(shape5), g6, lam0)
+    y = _grad_transpose(gxr.reshape(eb * d, n1, n1, n1),
+                        gxs.reshape(eb * d, n1, n1, n1),
+                        gxt.reshape(eb * d, n1, n1, n1), dhat).reshape(shape5)
+    if helmholtz:
+        mass = gwj if lam1 is None else lam1 * gwj
+        y = y + mass[:, None] * x
+    out_ref[...] = y.astype(out_ref.dtype)
+
+
+def build_axhelm_call(variant: str, *, e_total: int, d: int, n1: int,
+                      block_elems: int, helmholtz: bool, has_lam0: bool,
+                      has_lam1: bool, out_dtype, interpret: bool):
+    """Construct the pallas_call for a given static configuration.
+
+    Returns (call, input_order) where input_order names the expected operand
+    sequence for documentation/testing.
+    """
+    if e_total % block_elems != 0:
+        raise ValueError("e_total must be padded to a multiple of block_elems")
+    eb = block_elems
+    grid = (e_total // eb,)
+
+    def bcast(shape):
+        return pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    def per_elem(*rest):
+        shape = (eb,) + rest
+        return pl.BlockSpec(shape, lambda i, _n=len(rest): (i,) + (0,) * _n)
+
+    in_specs = [bcast((n1, n1))]                       # dhat
+    names = ["dhat"]
+    if variant == "precomputed":
+        in_specs.append(per_elem(n1, n1, n1, 6)); names.append("g6")
+        if helmholtz:
+            in_specs.append(per_elem(n1, n1, n1)); names.append("gwj")
+    elif variant == "trilinear":
+        in_specs += [bcast((n1, 1)), bcast((n1, n1, n1)), per_elem(8, 3)]
+        names += ["xi", "w3", "verts"]
+    elif variant == "parallelepiped":
+        in_specs += [bcast((n1, n1, n1)), per_elem(7)]
+        names += ["w3", "gelem"]
+    else:
+        raise ValueError(variant)
+
+    in_specs.append(per_elem(d, n1, n1, n1)); names.append("x")
+    if has_lam0:
+        in_specs.append(per_elem(n1, n1, n1)); names.append("lam0")
+    if has_lam1:
+        in_specs.append(per_elem(n1, n1, n1)); names.append("lam1")
+
+    out_spec = pl.BlockSpec((eb, d, n1, n1, n1),
+                            lambda i: (i, 0, 0, 0, 0))
+    kern = functools.partial(_kernel, variant=variant, helmholtz=helmholtz,
+                             has_lam0=has_lam0, has_lam1=has_lam1, d=d)
+    call = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((e_total, d, n1, n1, n1), out_dtype),
+        interpret=interpret,
+    )
+    return call, names

@@ -1,0 +1,158 @@
+"""Jit'd public wrappers for the Pallas axhelm kernels.
+
+Handles layout normalization ((E, N1^3) scalar vs (E, d, N1^3) vector
+fields), element padding to the block size, operand assembly per variant,
+and interpret-mode selection (interpret=True off-TPU so the kernels validate
+on CPU)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import geometry
+from repro.core.spectral import SpectralBasis
+from repro.kernels.axhelm import ref as ref_mod
+from repro.kernels.axhelm.kernel import build_axhelm_call
+
+__all__ = ["axhelm", "default_block_elems"]
+
+
+def default_block_elems(n1: int, d: int) -> int:
+    """Pick EB so a block's X tile is ~MXU/VPU sized but VMEM-light.
+
+    Target ~64-128 rows of (EB*d*N1^2, N1) in the contraction matmuls and a
+    VMEM footprint of a few hundred KiB per operand.
+    """
+    rows_per_elem = d * n1 * n1
+    eb = max(1, int(np.ceil(128 / rows_per_elem)))
+    # keep X block under ~1 MiB fp32
+    while eb > 1 and eb * d * n1**3 * 4 > 1 << 20:
+        eb //= 2
+    return eb
+
+
+def _should_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "variant", "helmholtz", "block_elems", "interpret", "n"))
+def _axhelm_impl(x, dhat, xi2, w3, geom_operand, lam0, lam1, *, variant,
+                 helmholtz, block_elems, interpret, n):
+    n1 = n + 1
+    e_total, d = x.shape[0], x.shape[1]
+    eb = block_elems
+    pad = (-e_total) % eb
+    ep = e_total + pad
+
+    def pad_e(a, fill=0.0):
+        if pad == 0 or a is None:
+            return a
+        widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, widths, constant_values=fill)
+
+    xp = pad_e(x)
+    geom_p = geom_operand
+    if variant == "trilinear":
+        # pad with the reference cube so det(J) != 0 in dead elements
+        if pad:
+            ref_verts = jnp.asarray(
+                [[(i & 1) * 2 - 1, ((i >> 1) & 1) * 2 - 1, ((i >> 2) & 1) * 2 - 1]
+                 for i in range(8)], dtype=geom_operand.dtype)
+            geom_p = jnp.concatenate(
+                [geom_operand, jnp.broadcast_to(ref_verts, (pad, 8, 3))], axis=0)
+    elif variant == "parallelepiped":
+        if pad:
+            unit = jnp.array([1.0, 0, 0, 1, 0, 1, 1], dtype=geom_operand.dtype)
+            geom_p = jnp.concatenate(
+                [geom_operand, jnp.broadcast_to(unit, (pad, 7))], axis=0)
+    else:
+        geom_p = pad_e(geom_operand)
+
+    lam0_p, lam1_p = pad_e(lam0), pad_e(lam1)
+
+    call, _ = build_axhelm_call(
+        variant, e_total=ep, d=d, n1=n1, block_elems=eb, helmholtz=helmholtz,
+        has_lam0=lam0 is not None, has_lam1=lam1 is not None,
+        out_dtype=x.dtype, interpret=interpret)
+
+    operands = [dhat]
+    if variant == "precomputed":
+        g6 = geom_p[..., :6]
+        operands.append(g6)
+        if helmholtz:
+            operands.append(geom_p[..., 6])
+    elif variant == "trilinear":
+        operands += [xi2, w3, geom_p]
+    else:  # parallelepiped
+        operands += [w3, geom_p]
+    operands.append(xp)
+    if lam0 is not None:
+        operands.append(lam0_p)
+    if lam1 is not None:
+        operands.append(lam1_p)
+
+    y = call(*operands)
+    return y[:e_total]
+
+
+def axhelm(x: jnp.ndarray, basis: SpectralBasis, variant: str,
+           geom: jnp.ndarray,
+           lam0: Optional[jnp.ndarray] = None,
+           lam1: Optional[jnp.ndarray] = None,
+           helmholtz: bool = False,
+           block_elems: Optional[int] = None,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Apply axhelm via the Pallas kernel.
+
+    x:    (E, N1,N1,N1) scalar field or (E, d, N1,N1,N1) vector field.
+    geom: variant-dependent —
+          precomputed:    (E, N1,N1,N1, 7)   [g00..g22, gwj] packed
+          trilinear:      (E, 8, 3)          vertices
+          parallelepiped: (E, 7)             per-element scalars
+    """
+    squeeze = x.ndim == 4
+    if squeeze:
+        x = x[:, None]
+    n1 = basis.n1
+    d = x.shape[1]
+    eb = block_elems or default_block_elems(n1, d)
+    dt = x.dtype
+    dhat = jnp.asarray(basis.dhat, dtype=dt)
+    xi2 = jnp.asarray(basis.points, dtype=dt)[:, None]
+    w3 = jnp.asarray(basis.w3, dtype=dt)
+    y = _axhelm_impl(x, dhat, xi2, w3, geom, lam0, lam1,
+                     variant=variant, helmholtz=helmholtz, block_elems=eb,
+                     interpret=_should_interpret(interpret), n=basis.n)
+    return y[:, 0] if squeeze else y
+
+
+def reference(x, basis: SpectralBasis, variant: str, geom, lam0=None,
+              lam1=None, helmholtz=False):
+    """Dispatch to the pure-jnp oracle with the same operand convention."""
+    squeeze = x.ndim == 4
+    if squeeze:
+        x = x[:, None]
+    dt = x.dtype
+    dhat = jnp.asarray(basis.dhat, dtype=dt)
+    xi = jnp.asarray(basis.points, dtype=dt)
+    w3 = jnp.asarray(basis.w3, dtype=dt)
+    if variant == "precomputed":
+        y = ref_mod.axhelm_precomputed(x, geom[..., :6], geom[..., 6], dhat,
+                                       lam0, lam1, helmholtz)
+    elif variant == "trilinear":
+        y = ref_mod.axhelm_trilinear(x, geom, xi, w3, dhat, lam0, lam1,
+                                     helmholtz)
+    elif variant == "parallelepiped":
+        y = ref_mod.axhelm_parallelepiped(x, geom, w3, dhat, lam0, lam1,
+                                          helmholtz)
+    else:
+        raise ValueError(variant)
+    return y[:, 0] if squeeze else y

@@ -1,0 +1,85 @@
+"""Pure-jnp oracle for the Pallas axhelm kernels.
+
+Shapes follow the kernel convention: x is (E, d, N1, N1, N1) (d static),
+factors per the variant.  These reuse the validated `repro.core` math — the
+Pallas kernels must agree with these references bit-for-bit up to dtype
+tolerance for every shape/dtype sweep in the tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import geometry, sumfact
+from repro.core.geometry import GeomFactors
+
+
+def _core(x, g, dhat, lam0=None, mass=None):
+    """y = D^T (lam0 * G) D x (+ mass * x); factors broadcast over d."""
+    g = g[:, None]  # (E, 1, N1, N1, N1, 6)
+    xr, xs, xt = sumfact.grad_ref(x, dhat)
+    gxr = g[..., 0] * xr + g[..., 1] * xs + g[..., 2] * xt
+    gxs = g[..., 1] * xr + g[..., 3] * xs + g[..., 4] * xt
+    gxt = g[..., 2] * xr + g[..., 4] * xs + g[..., 5] * xt
+    if lam0 is not None:
+        l0 = lam0[:, None]
+        gxr, gxs, gxt = l0 * gxr, l0 * gxs, l0 * gxt
+    y = sumfact.grad_ref_transpose(gxr, gxs, gxt, dhat)
+    if mass is not None:
+        y = y + mass[:, None] * x
+    return y
+
+
+def axhelm_precomputed(x: jnp.ndarray, g: jnp.ndarray, gwj: Optional[jnp.ndarray],
+                       dhat: jnp.ndarray,
+                       lam0: Optional[jnp.ndarray] = None,
+                       lam1: Optional[jnp.ndarray] = None,
+                       helmholtz: bool = False) -> jnp.ndarray:
+    """Paper Alg. 2. g: (E, N1,N1,N1, 6); gwj/lam*: (E, N1,N1,N1)."""
+    mass = None
+    if helmholtz:
+        mass = gwj if lam1 is None else lam1 * gwj
+    return _core(x, g, dhat, lam0=None if lam0 is None else lam0, mass=mass)
+
+
+def axhelm_trilinear(x: jnp.ndarray, verts: jnp.ndarray, xi: jnp.ndarray,
+                     w3: jnp.ndarray, dhat: jnp.ndarray,
+                     lam0: Optional[jnp.ndarray] = None,
+                     lam1: Optional[jnp.ndarray] = None,
+                     helmholtz: bool = False) -> jnp.ndarray:
+    """Paper Alg. 3 (on-the-fly recalc) oracle. verts: (E, 8, 3)."""
+    terms = geometry.trilinear_terms(verts, xi)
+    t = xi[:, None, None, None]
+    e0 = terms.e0[..., None, :, None, :]
+    e1 = terms.e1[..., None, :, None, :]
+    f0 = terms.f0[..., None, None, :, :]
+    f1 = terms.f1[..., None, None, :, :]
+    n1 = xi.shape[0]
+    full = verts.shape[:-2] + (n1,) * 3 + (3,)
+    jt = jnp.stack([jnp.broadcast_to(e0 + t * e1, full),
+                    jnp.broadcast_to(f0 + t * f1, full),
+                    jnp.broadcast_to(terms.jcol2[..., None, :, :, :], full)],
+                   axis=-1)
+    factors = geometry.factors_from_jacobian(jt, w3, scale=geometry.JT_SCALE)
+    return axhelm_precomputed(x, factors.g, factors.gwj, dhat, lam0, lam1,
+                              helmholtz)
+
+
+def axhelm_parallelepiped(x: jnp.ndarray, gelem: jnp.ndarray, w3: jnp.ndarray,
+                          dhat: jnp.ndarray,
+                          lam0: Optional[jnp.ndarray] = None,
+                          lam1: Optional[jnp.ndarray] = None,
+                          helmholtz: bool = False) -> jnp.ndarray:
+    """Paper Alg. 4 oracle.  gelem: (E, 7) = [adjK/det x6, det] (unweighted)."""
+    g = gelem[:, None, None, None, :6] * w3[None, ..., None]
+    gwj = gelem[:, None, None, None, 6] * w3[None]
+    return axhelm_precomputed(x, g, gwj, dhat, lam0, lam1, helmholtz)
+
+
+def gelem_from_verts(verts: jnp.ndarray) -> jnp.ndarray:
+    """The 7 per-element scalars of Algorithm 4 from vertices."""
+    j = geometry.jacobian_parallelepiped(verts)
+    f: GeomFactors = geometry.factors_from_jacobian(j, jnp.ones((), verts.dtype))
+    return jnp.concatenate([f.g, f.gwj[..., None]], axis=-1)

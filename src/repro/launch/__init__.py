@@ -1,0 +1,1 @@
+"""Launch: production mesh, multi-pod dry-run, HLO cost walker, train/serve CLIs."""

@@ -1,0 +1,250 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable closure.
+
+For each cell this builds the abstract, sharded argument trees
+(ShapeDtypeStruct stand-ins — no allocation) and the jitted step function:
+
+  train_4k     -> train_step(state, batch)          (donated state)
+  prefill_32k  -> prefill(params, batch)
+  decode_*     -> decode_step(params, token, cache, cur_len) (donated cache)
+
+Skip rules (DESIGN.md §5): long_500k only for sub-quadratic archs
+(zamba2-2.7b, xlstm-350m).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.configs as configs
+from repro.distributed.context import ShardCtx, make_ctx
+from repro.models import params as params_lib
+from repro.models.config import ModelConfig, SHAPE_CASES, ShapeCase
+from repro.models.params import ParamSpec
+from repro.models.registry import build_model, train_input_specs
+from repro.training import optimizer as opt_mod
+from repro.training.train_loop import TrainConfig, make_train_step
+
+__all__ = ["build_cell", "cell_is_skipped", "all_cells", "active_params",
+           "model_flops"]
+
+SUBQUADRATIC = {"zamba2-2.7b", "xlstm-350m"}
+HBM_BYTES = 16 * 1024**3          # TPU v5e
+
+
+def cell_is_skipped(cfg: ModelConfig, case: ShapeCase) -> Optional[str]:
+    if case.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return ("long_500k needs sub-quadratic attention; "
+                f"{cfg.name} is full-attention (documented skip)")
+    return None
+
+
+def all_cells():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        for case in SHAPE_CASES.values():
+            yield arch, cfg, case
+
+
+# ------------------------------------------------------------ accounting ---
+
+def _spec_params(specs, skip_keys=("embed", "rope_table")) -> float:
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        keys = [getattr(p, "key", "") for p in path]
+        if any(k in skip_keys for k in keys):
+            continue
+        total += math.prod(leaf.shape)
+    return total
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Non-embedding parameters touched per token (MoE: top-k fraction)."""
+    model = build_model(cfg)
+    specs = model.param_specs()
+    total = _spec_params(specs)
+    if cfg.is_moe:
+        # scale the routed-expert block down to the activated fraction
+        expert = 0.0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+            keys = [getattr(p, "key", "") for p in path]
+            if "experts" in keys:
+                expert += math.prod(leaf.shape)
+        total -= expert * (1.0 - cfg.experts_per_token / cfg.num_experts)
+    return total
+
+
+def model_flops(cfg: ModelConfig, case: ShapeCase) -> float:
+    """MODEL_FLOPS: 6*N_active*tokens (train) / 2*N_active*tokens (inference)."""
+    n = active_params(cfg)
+    if case.kind == "train":
+        tokens = case.global_batch * case.seq_len
+        return 6.0 * n * tokens
+    if case.kind == "prefill":
+        tokens = case.global_batch * case.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * case.global_batch        # decode: one token per seq
+
+
+# --------------------------------------------------------------- builder ---
+
+def pick_train_config(cfg: ModelConfig, case: ShapeCase,
+                      ctx: ShardCtx) -> Tuple[TrainConfig, ModelConfig]:
+    """grad_accum + remat policy sized to the 16 GB/chip budget."""
+    dp = ctx.dp_size
+    per_dev = max(case.global_batch // dp, 1)
+    # activation boundary budget: L * mb * S * D * 2B <= ~2 GiB
+    act = lambda mb: (cfg.num_layers * mb * case.seq_len * cfg.d_model * 2)
+    ga = 1
+    while ga < per_dev and act(per_dev // ga) > 2 * 1024**3:
+        ga *= 2
+    mcfg = cfg
+    if act(per_dev // ga) > 2 * 1024**3:       # mb=1 still too big
+        g = max(int(round(math.sqrt(cfg.num_layers))), 2)
+        n_scan = cfg.num_layers - (cfg.first_dense_layers if cfg.is_moe
+                                   else 0)
+        while n_scan % g:
+            g -= 1
+        if g > 1:
+            mcfg = cfg.replace(scan_group=g)
+    big = active_params(cfg) > 2e10 or cfg.is_moe
+    return TrainConfig(grad_accum=ga, eight_bit_optimizer=big,
+                       accum_dtype="bfloat16" if big else "float32"), mcfg
+
+
+@dataclass
+class Cell:
+    arch: str
+    case: ShapeCase
+    fn: Callable
+    args: tuple
+    out_shardings: Any
+    donate: tuple
+    meta: dict
+
+
+def _state_specs(param_specs, tcfg: TrainConfig):
+    """ParamSpec tree for the full train state (mirrors adamw_init)."""
+    def per(s: ParamSpec):
+        if not tcfg.eight_bit_optimizer:
+            f = ParamSpec(s.shape, s.axes)
+            return {"m": f, "v": f}
+        last = s.shape[-1] if s.shape else 1
+        bs = min(opt_mod._BLOCK, last) if last else 1
+        nblk = -(-last // bs) if bs else 1
+        bshape = s.shape[:-1] + (nblk,)
+        q = ParamSpec(s.shape, s.axes, dtype=jnp.int8)
+        sc = ParamSpec(bshape, s.axes)
+        return {"m": opt_mod.QState(q, sc, sc),
+                "v": opt_mod.QState(q, sc, sc)}
+    mu = jax.tree.map(per, param_specs,
+                      is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {
+        "params": param_specs,
+        "opt": {"mu": mu, "count": ParamSpec((), ())},
+        "step": ParamSpec((), (), dtype=jnp.int32),
+    }
+
+
+def _batch_shardings(batch_specs, ctx: ShardCtx, batch: int):
+    def shard(sd: jax.ShapeDtypeStruct):
+        spec = P(ctx.data_axes) if batch % ctx.dp_size == 0 else P()
+        return jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype,
+            sharding=NamedSharding(ctx.mesh, spec))
+    return jax.tree.map(shard, batch_specs)
+
+
+def build_cell(arch: str, case_name: str, mesh: Mesh,
+               cfg_overrides: Optional[dict] = None,
+               train_overrides: Optional[dict] = None) -> Cell:
+    """cfg_overrides / train_overrides: §Perf hillclimb knobs (e.g.
+    {'ssm_chunk': 64} / {'grad_accum': 4})."""
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    case = SHAPE_CASES[case_name]
+    skip = cell_is_skipped(cfg, case)
+    if skip:
+        raise ValueError(skip)
+    ctx = make_ctx(mesh)
+
+    if case.kind == "train":
+        tcfg, mcfg = pick_train_config(cfg, case, ctx)
+        if train_overrides:
+            import dataclasses
+            tcfg = dataclasses.replace(tcfg, **train_overrides)
+        model = build_model(mcfg)
+        specs = model.param_specs()
+        state_specs = _state_specs(specs, tcfg)
+        state_abs = params_lib.abstract_params(state_specs, mesh)
+        state_shardings = params_lib.specs_to_shardings(state_specs, mesh)
+        batch_abs = _batch_shardings(
+            train_input_specs(mcfg, case.global_batch, case.seq_len), ctx,
+            case.global_batch)
+        step = make_train_step(model, tcfg, ctx)
+        meta = {"grad_accum": tcfg.grad_accum,
+                "eight_bit": tcfg.eight_bit_optimizer,
+                "scan_group": mcfg.scan_group}
+        return Cell(arch, case, step, (state_abs, batch_abs),
+                    (state_shardings, None), donate=(0,), meta=meta)
+
+    model = build_model(cfg)
+    specs = model.param_specs()
+    params_abs = params_lib.abstract_params(specs, mesh)
+
+    if case.kind == "prefill":
+        batch_abs = _batch_shardings(
+            train_input_specs(cfg, case.global_batch, case.seq_len), ctx,
+            case.global_batch)
+
+        def prefill_fn(p, b):
+            return model.prefill(p, b, ctx)
+        return Cell(arch, case, prefill_fn, (params_abs, batch_abs), None,
+                    donate=(), meta={})
+
+    # decode: cache filled to seq_len, one new token
+    cache_sds = model.cache_spec(case.global_batch, case.seq_len)
+    cache_p = model.cache_pspec(ctx, case.global_batch)
+
+    def shard_cache(sd: jax.ShapeDtypeStruct):
+        if len(sd.shape) == 5 and sd.shape[2] == case.seq_len:
+            spec = cache_p              # a KV-style (L, B, S, KV, Dh) leaf
+        elif len(sd.shape) >= 2:
+            # recurrent state (L, B, heads?, ...): batch over data when
+            # divisible; a heads-like dim over 'model' when divisible
+            entries = [None] * len(sd.shape)
+            if (sd.shape[1] == case.global_batch
+                    and case.global_batch % ctx.dp_size == 0):
+                entries[1] = ctx.data_axes
+            if (len(sd.shape) >= 3 and sd.shape[2]
+                    % ctx.mesh.shape[ctx.model_axis] == 0):
+                entries[2] = ctx.model_axis
+            spec = P(*entries)
+        else:
+            spec = P()
+        return jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(ctx.mesh, spec))
+
+    cache_abs = jax.tree.map(shard_cache, cache_sds)
+    tok_spec = P(ctx.data_axes) if case.global_batch % ctx.dp_size == 0 \
+        else P()
+    token_abs = jax.ShapeDtypeStruct(
+        (case.global_batch, 1), jnp.int32,
+        sharding=NamedSharding(ctx.mesh, tok_spec))
+    len_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(p, t, c, n):
+        return model.decode_step(p, t, c, n, ctx)
+
+    return Cell(arch, case, decode_fn,
+                (params_abs, token_abs, cache_abs, len_abs), None,
+                donate=(2,), meta={})

@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+mesh; record memory analysis, XLA cost analysis, and the HLO-walker roofline
+inputs.  MUST set XLA_FLAGS before any other import (jax locks the device
+count at first init) — hence the two lines above.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+        --shape train_4k [--multi-pod] [--out results.jsonl]
+    PYTHONPATH=src python -m repro.launch.dryrun --nekbone [--multi-pod]
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    from repro.launch import cells as cells_lib
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cell = cells_lib.build_cell(arch, shape, mesh)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.fn, out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    txt = compiled.as_text()
+    walk = analyze_hlo(txt)
+
+    row = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "lower_s": round(t1 - t0, 1),
+        "compile_s": round(t2 - t1, 1),
+        "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
+        "out_bytes_per_dev": int(ma.output_size_in_bytes),
+        "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+        "alias_bytes_per_dev": int(ma.alias_size_in_bytes),
+        "peak_bytes_per_dev": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        "xla_flops_per_dev": float(ca.get("flops", 0.0)),
+        "xla_bytes_per_dev": float(ca.get("bytes accessed", 0.0)),
+        "walker_flops_per_dev": walk.flops,
+        "walker_traffic_per_dev": walk.traffic_bytes,
+        "collective_wire_per_dev": walk.collective_total,
+        "collectives": {k: round(v) for k, v in
+                        walk.collective_bytes.items()},
+        "model_flops_total": cells_lib.model_flops(
+            __import__("repro.configs", fromlist=["get"]).get(arch),
+            cell.case),
+        "meta": cell.meta,
+        "fits_hbm": bool(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                         + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+                         < cells_lib.HBM_BYTES),
+    }
+    return row
+
+
+def run_nekbone(multi_pod: bool) -> dict:
+    """Dry-run the paper's own workload: one PCG iteration's Y=AX on the
+    production mesh (elements sharded over data axes, element batch over
+    model)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import repro.configs as configs
+    from repro.core import axhelm as axhelm_mod
+    from repro.core.spectral import basis as make_basis
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.mesh import make_production_mesh
+
+    ncfg = configs.get("nekbone")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    b = make_basis(ncfg.order)
+    n1 = b.n1
+    e_total = 1_048_576  # 2^20 elements (paper's upper batch size)
+    dt = jnp.float32
+    dhat = jnp.asarray(b.dhat, dt)
+
+    elem_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    sh = NamedSharding(mesh, P(elem_axes))
+    x_abs = jax.ShapeDtypeStruct((e_total, n1, n1, n1), dt, sharding=sh)
+    v_abs = jax.ShapeDtypeStruct((e_total, 8, 3), dt, sharding=sh)
+
+    def axhelm_step(x, verts):
+        return axhelm_mod.axhelm_trilinear(x, verts, b, dhat)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(axhelm_step).lower(x_abs, v_abs)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    walk = analyze_hlo(compiled.as_text())
+    f_ax = 12 * n1**4 + 15 * n1**3
+    return {
+        "arch": "nekbone-axhelm-trilinear", "shape": f"E=2^20 N={ncfg.order}",
+        "mesh": "2x16x16" if multi_pod else "16x16", "devices": mesh.size,
+        "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+        "arg_bytes_per_dev": int(ma.argument_size_in_bytes),
+        "temp_bytes_per_dev": int(ma.temp_size_in_bytes),
+        "peak_bytes_per_dev": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes),
+        "xla_flops_per_dev": float(ca.get("flops", 0.0)),
+        "walker_flops_per_dev": walk.flops,
+        "walker_traffic_per_dev": walk.traffic_bytes,
+        "collective_wire_per_dev": walk.collective_total,
+        "collectives": {k: round(v) for k, v in
+                        walk.collective_bytes.items()},
+        "model_flops_total": float(f_ax * e_total),
+        "meta": {"variant": "trilinear"}, "fits_hbm": True,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str, choices=[
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--nekbone", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    if args.nekbone:
+        row = run_nekbone(args.multi_pod)
+    else:
+        row = run_cell(args.arch, args.shape, args.multi_pod)
+
+    print(json.dumps(row))
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps(row) + "\n")
+    return row
+
+
+if __name__ == "__main__":
+    main()

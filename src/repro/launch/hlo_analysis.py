@@ -1,0 +1,334 @@
+"""HLO cost walker: FLOPs, HBM traffic, and collective bytes from compiled HLO.
+
+Why not `compiled.cost_analysis()` alone?  XLA's cost analysis counts a
+`while` body ONCE, so anything under `lax.scan` (our layer stacks, microbatch
+accumulation, attention KV chunking) is undercounted by its trip count.  This
+walker parses `compiled.as_text()` and:
+
+  * multiplies loop bodies by their `known_trip_count` (emitted by XLA for
+    counted loops — all our scans),
+  * counts dot/convolution FLOPs from shapes + contracting dims (recursing
+    into fusions/calls),
+  * estimates HBM traffic as the operand+output bytes of executed
+    fusion-level ops (on TPU, fusion boundaries ARE the HBM round-trips;
+    dynamic-update-slice is special-cased as in-place),
+  * sums per-collective wire bytes with ring-algorithm factors
+    (all-reduce 2x(n-1)/n, all-gather/reduce-scatter/all-to-all (n-1)/n,
+    collective-permute 1x).
+
+All numbers are per-device (the SPMD module is per-device).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                 "bitcast", "while", "conditional", "after-all",
+                 "partition-id", "replica-id", "iota", "rng-bit-generator",
+                 "custom-call"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str            # operand list + attributes, raw
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) \
+                + v * mult
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _parse_operands(rest: str) -> List[str]:
+    """Operand names up to the closing paren of the op's argument list."""
+    depth = 1
+    out, cur = [], []
+    for ch in rest:
+        if depth == 1 and ch == ",":
+            out.append("".join(cur)); cur = []
+            continue
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for o in out:
+        m = re.search(r"%([\w.\-]+)", o)
+        names.append(m.group(1) if m else "")
+    return names
+
+
+def _parse_computations(txt: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in txt.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            name, type_str, opcode, rest = m.groups()
+            instr = Instr(name, type_str, opcode, rest,
+                          _parse_operands(rest))
+            comps[cur].append(instr)
+    return comps
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(rest: str) -> Optional[int]:
+    m = re.search(r'known_trip_count[\\"]*:\s*{[\\"]*n[\\"]*:[\\"]*(\d+)',
+                  rest)
+    return int(m.group(1)) if m else None
+
+
+def _called(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+class _Walker:
+    def __init__(self, comps: Dict[str, List[Instr]]):
+        self.comps = comps
+        self.shapes: Dict[Tuple[str, str], str] = {}
+        for cname, instrs in comps.items():
+            for i in instrs:
+                self.shapes[(cname, i.name)] = i.type_str
+        self._memo: Dict[Tuple[str, bool], HloCost] = {}
+        self.contributors: Dict[str, float] = {}
+
+    def tally(self, cname: str, entry: str):
+        """Fill self.contributors with per-op traffic x loop multipliers."""
+        mults: Dict[str, float] = {entry: 1.0}
+        order = [entry]
+        seen = {entry}
+        while order:
+            c = order.pop(0)
+            for i in self.comps.get(c, []):
+                if i.opcode == "while":
+                    body = _called(i.rest, "body")
+                    trip = _trip_count(i.rest) or 1
+                    if body:
+                        mults[body] = mults.get(body, 0.0) \
+                            + mults[c] * trip
+                        if body not in seen:
+                            seen.add(body); order.append(body)
+        for c, m in mults.items():
+            for i in self.comps.get(c, []):
+                if i.opcode in _SKIP_TRAFFIC or i.opcode.endswith("-done"):
+                    continue
+                if i.opcode == "fusion":
+                    b = self._fusion_traffic(c, i)
+                else:
+                    b = self._plain_traffic(c, i)
+                key = f"{i.opcode}:{i.name}@{c}"
+                self.contributors[key] = self.contributors.get(key, 0.0) \
+                    + b * m
+
+    def _dot_flops(self, cname: str, i: Instr) -> float:
+        out_numel = max(1, math.prod(_shape_dims(i.type_str)))
+        lhs_type = self.shapes.get((cname, i.operands[0]), "")
+        lhs_dims = _shape_dims(lhs_type)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", i.rest)
+        contract = 1
+        if m and m.group(1) and lhs_dims:
+            for d in m.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    contract *= lhs_dims[di]
+        return 2.0 * out_numel * contract
+
+    def _conv_flops(self, cname: str, i: Instr) -> float:
+        out_dims = _shape_dims(i.type_str)
+        out_numel = max(1, math.prod(out_dims))
+        rhs_type = self.shapes.get((cname, i.operands[1]), "") \
+            if len(i.operands) > 1 else ""
+        rhs_dims = _shape_dims(rhs_type)
+        if not rhs_dims:
+            return 0.0
+        o = max(rhs_dims[0], 1)
+        return 2.0 * out_numel * math.prod(rhs_dims) / o
+
+    def cost(self, cname: str, inside_fusion: bool = False) -> HloCost:
+        key = (cname, inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        total = HloCost()
+        for i in self.comps.get(cname, []):
+            op = i.opcode
+            if op == "while":
+                body = _called(i.rest, "body")
+                cond = _called(i.rest, "condition")
+                trip = _trip_count(i.rest) or 1
+                if body:
+                    total.add(self.cost(body, inside_fusion), trip)
+                if cond:
+                    total.add(self.cost(cond, inside_fusion), trip)
+                continue
+            if op == "conditional":
+                for branch in re.findall(
+                        r"(?:branch_computations=\{|true_computation=|"
+                        r"false_computation=)%?([\w.\-]+)", i.rest):
+                    total.add(self.cost(branch, inside_fusion), 1.0)
+                continue
+            if op == "fusion":
+                called = _called(i.rest, "calls")
+                if called:
+                    inner = self.cost(called, True)
+                    total.flops += inner.flops
+                    for k, v in inner.collective_bytes.items():
+                        total.collective_bytes[k] = \
+                            total.collective_bytes.get(k, 0.0) + v
+                if not inside_fusion:
+                    total.traffic_bytes += self._fusion_traffic(cname, i)
+                continue
+            if op == "call":
+                called = _called(i.rest, "to_apply")
+                if called:
+                    total.add(self.cost(called, inside_fusion), 1.0)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(cname, i)
+            elif op == "convolution":
+                total.flops += self._conv_flops(cname, i)
+            if op in COLLECTIVES or any(op.startswith(c + "-start")
+                                        for c in COLLECTIVES):
+                base = op.replace("-start", "")
+                op_bytes = sum(_type_bytes(self.shapes.get(
+                    (cname, o), "")) for o in i.operands if o)
+                out_bytes = _type_bytes(i.type_str)
+                n = _group_size(i.rest, 1)
+                frac = (n - 1) / n if n > 1 else 0.0
+                if base == "all-reduce":
+                    wire = 2.0 * op_bytes * frac
+                elif base == "all-gather":
+                    wire = out_bytes * frac
+                elif base in ("reduce-scatter", "all-to-all"):
+                    wire = op_bytes * frac
+                else:  # collective-permute
+                    wire = op_bytes
+                total.collective_bytes[base] = \
+                    total.collective_bytes.get(base, 0.0) + wire
+            if not inside_fusion and op not in _SKIP_TRAFFIC \
+                    and not op.endswith("-done"):
+                total.traffic_bytes += self._plain_traffic(cname, i)
+        self._memo[key] = total
+        return total
+
+    def _operand_bytes(self, cname: str, i: Instr) -> float:
+        return sum(_type_bytes(self.shapes.get((cname, o), ""))
+                   for o in i.operands if o)
+
+    def _plain_traffic(self, cname: str, i: Instr) -> float:
+        out_b = _type_bytes(i.type_str)
+        if i.opcode == "dynamic-update-slice":
+            # in-place: traffic = update slice read+write, not the big buffer
+            upd = _type_bytes(self.shapes.get((cname, i.operands[1]), "")) \
+                if len(i.operands) > 1 else 0
+            return 2.0 * upd
+        if i.opcode == "dynamic-slice":
+            return 2.0 * out_b
+        return self._operand_bytes(cname, i) + out_b
+
+    def _fusion_traffic(self, cname: str, i: Instr) -> float:
+        out_b = _type_bytes(i.type_str)
+        op_b = self._operand_bytes(cname, i)
+        if "dynamic-update-slice" in i.rest or "dynamic_update_slice" \
+                in i.rest:
+            # in-place fused DUS: drop the aliased big operand
+            biggest = max((_type_bytes(self.shapes.get((cname, o), ""))
+                           for o in i.operands if o), default=0)
+            if biggest and abs(biggest - out_b) <= 0.01 * out_b:
+                return (op_b - biggest) + out_b
+        return op_b + out_b
+
+
+def analyze_hlo(txt: str, entry: Optional[str] = None,
+                top_n: int = 0) -> HloCost:
+    comps = _parse_computations(txt)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.MULTILINE)
+        entry = m.group(1) if m else next(iter(comps))
+    w = _Walker(comps)
+    cost = w.cost(entry)
+    if top_n:
+        w.tally(entry, entry)
+        top = sorted(w.contributors.items(), key=lambda kv: -kv[1])[:top_n]
+        cost.top = top  # type: ignore[attr-defined]
+    return cost

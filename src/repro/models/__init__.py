@@ -1,0 +1,1 @@
+"""Model stack: transformer/MoE/SSM/hybrid/enc-dec families + param specs."""

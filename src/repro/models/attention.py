@@ -1,0 +1,162 @@
+"""GQA attention: chunked-causal (flash-style) for train/prefill, cached decode.
+
+The chunked path scans over KV blocks with an online-softmax accumulator so
+peak memory is O(S * chunk) instead of O(S^2) — mandatory for the 32k
+prefill cells on 16 GB chips.  Scan trip counts are static, so the HLO cost
+walker can fold them back into the roofline (launch/hlo_analysis.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["causal_attention", "decode_attention", "full_attention"]
+
+_NEG = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, Dh) -> (B, S, KV*groups, Dh) for GQA."""
+    if groups == 1:
+        return k
+    b, s, kv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None], (b, s, kv, groups, dh)).reshape(
+        b, s, kv * groups, dh)
+
+
+def full_attention(q, k, v, causal: bool = True,
+                   q_offset: int = 0) -> jnp.ndarray:
+    """Reference O(S^2)-memory attention. q: (B,Sq,H,Dh); k/v: (B,Sk,KV,Dh)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    k = _repeat_kv(k, h // kv)
+    v = _repeat_kv(v, h // kv)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + q_offset
+        ki = jnp.arange(k.shape[1])[None, :]
+        scores = jnp.where(ki <= qi, scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+class _Acc(NamedTuple):
+    m: jnp.ndarray    # (B, H, Sq) running max
+    l: jnp.ndarray    # (B, H, Sq) running denom
+    o: jnp.ndarray    # (B, Sq, H, Dh) running numerator
+
+
+def causal_attention(q, k, v, chunk: int = 1024,
+                     causal: bool = True) -> jnp.ndarray:
+    """Chunked self-attention (train/prefill path), causal or bidirectional.
+
+    Scans KV in `chunk`-sized blocks with online softmax so peak memory is
+    O(S*chunk); with causal=True the mask is applied per block
+    (fully-masked future blocks still execute — a known 2x-FLOP ceiling
+    noted in EXPERIMENTS.md §Perf as a hillclimb lever).
+    """
+    b, s, h, dh = q.shape
+    if s <= chunk:
+        return full_attention(q, k, v, causal=causal)
+    valid = s
+    if s % chunk:  # pad to a chunk multiple
+        pad = chunk - s % chunk
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(a, padw) for a in (q, k, v))
+        s = q.shape[1]
+    kvh = k.shape[2]
+    k = _repeat_kv(k, h // kvh)
+    v = _repeat_kv(v, h // kvh)
+    nblk = s // chunk
+    kb = k.reshape(b, nblk, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nblk, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qi = jnp.arange(s)[:, None]
+
+    def body(acc: _Acc, blk):
+        kc, vc, blk_idx = blk
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, kc).astype(jnp.float32) * scale
+        ki = blk_idx * chunk + jnp.arange(chunk)[None, :]
+        mask = (ki <= qi) if causal else (ki < valid)
+        sc = jnp.where(mask, sc, _NEG)
+        m_new = jnp.maximum(acc.m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(acc.m - m_new)
+        l_new = acc.l * corr + p.sum(axis=-1)
+        o_new = acc.o * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, vc.astype(jnp.float32))
+        return _Acc(m_new, l_new, o_new), None
+
+    init = _Acc(jnp.full((b, h, s), _NEG, jnp.float32),
+                jnp.zeros((b, h, s), jnp.float32),
+                jnp.zeros((b, s, h, dh), jnp.float32))
+    acc, _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nblk)))
+    out = acc.o / acc.l.transpose(0, 2, 1)[..., None]
+    return out[:, :valid].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache,
+                     length: Optional[jnp.ndarray] = None,
+                     chunk: int = 4096) -> jnp.ndarray:
+    """Single-token decode vs a (B, S, KV, Dh) cache (memory-bound matvecs).
+
+    Flash-decode style: the cache is scanned in `chunk` blocks with an
+    online-softmax accumulator, so per-step temporaries are O(B*chunk), not
+    O(B*S) — at 32k a monolithic decode materializes fp32 upcasts of the
+    whole cache.  `length` masks positions >= length (ragged serving).
+    """
+    b, sq, h, dh = q.shape
+    s = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+
+    if s <= chunk or s % chunk:
+        sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache).astype(
+            jnp.float32) * scale
+        if length is not None:
+            pos = jnp.arange(s)
+            mask = pos[None, :] < length[:, None]
+            sc = jnp.where(mask[:, None, None, None, :], sc, _NEG)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v_cache.dtype),
+                         v_cache)
+        return out.reshape(b, sq, h, dh)
+
+    nblk = s // chunk
+    kb = k_cache.reshape(b, nblk, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v_cache.reshape(b, nblk, chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(acc, blk):
+        kc, vc, blk_idx = blk
+        # barrier: stops XLA:CPU from hoisting the (upcasting) dot operand
+        # convert out of the loop, which would materialize an fp32 copy of
+        # the whole cache (TPU consumes bf16 natively; barrier is free)
+        kc, vc = jax.lax.optimization_barrier((kc, vc))
+        sc = jnp.einsum("bqkgd,bskd->bkgqs", qg, kc).astype(
+            jnp.float32) * scale
+        if length is not None:
+            pos = blk_idx * chunk + jnp.arange(chunk)
+            mask = pos[None, :] < length[:, None]
+            sc = jnp.where(mask[:, None, None, None, :], sc, _NEG)
+        m, l, o = acc
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    init = (jnp.full((b, kvh, g, sq), _NEG, jnp.float32),
+            jnp.zeros((b, kvh, g, sq), jnp.float32),
+            jnp.zeros((b, kvh, g, sq, dh), jnp.float32))
+    (m, l, o), _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nblk)))
+    out = o / l[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)

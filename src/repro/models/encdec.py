@@ -1,0 +1,201 @@
+"""Encoder-decoder LM (SeamlessM4T-style backbone; speech frontend stubbed).
+
+Encoder: bidirectional attention + MLP over projected audio frames.
+Decoder: causal self-attention + cross-attention to the encoder output.
+Serving caches both the decoder self-KV and the (static) cross-KV.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import ShardCtx, constraint
+from repro.models import attention, rope, transformer
+from repro.models.config import ModelConfig
+from repro.models.losses import chunked_ce, project_logits
+from repro.models.layers import (embed, embedding_spec, linear, linear_spec,
+                                 rms_norm, rms_norm_spec)
+from repro.models.transformer import remat_wrap, stack_specs
+
+__all__ = ["EncDecLM"]
+
+
+def cross_attn_spec(cfg: ModelConfig, dtype):
+    return transformer.attn_spec(cfg, dtype)
+
+
+def cross_attn_apply(p, x, enc_kv, cfg: ModelConfig, ctx):
+    """q from decoder x; k/v precomputed from encoder output."""
+    b, s, _ = x.shape
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, h, dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+    k, v = enc_kv
+    if s == k.shape[1]:          # prefill-sized: chunked to bound memory
+        o = attention.causal_attention(q, k, v, chunk=cfg.attn_chunk,
+                                       causal=False)
+    else:                        # decode: tiny q against full enc K/V
+        o = attention.full_attention(q, k, v, causal=False)
+    o = o.reshape(b, s, h * dh)
+    return linear(p["wo"], o)
+
+
+def cross_kv(p, enc_out, cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    kvh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = linear(p["wk"], enc_out).reshape(b, s, kvh, dh)
+    v = linear(p["wv"], enc_out).reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def dec_layer_spec(cfg: ModelConfig, dtype):
+    return {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "attn": transformer.attn_spec(cfg, dtype),
+        "ln_x": rms_norm_spec(cfg.d_model),
+        "xattn": cross_attn_spec(cfg, dtype),
+        "ln2": rms_norm_spec(cfg.d_model),
+        "mlp": transformer.mlp_spec(cfg, dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder_layers > 0
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        return {
+            "audio_proj": linear_spec(cfg.audio_dim, cfg.d_model,
+                                      (None, "fsdp"), dtype=dt),
+            "enc_layers": stack_specs(
+                transformer.layer_spec(cfg, dt, use_moe=False),
+                cfg.encoder_layers),
+            "ln_enc": rms_norm_spec(cfg.d_model),
+            "embed": embedding_spec(cfg.padded_vocab, cfg.d_model, dtype=dt),
+            "dec_layers": stack_specs(dec_layer_spec(cfg, dt),
+                                      cfg.num_layers),
+            "ln_f": rms_norm_spec(cfg.d_model),
+        }
+
+    def encode(self, params, frames, ctx):
+        cfg = self.cfg
+        x = linear(params["audio_proj"], frames.astype(self.dtype))
+        if ctx is not None:
+            x = constraint(x, ctx, P(ctx.data_axes, None, None))
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        # bidirectional: like layer_apply but with non-causal attention
+        def enc_layer(xc, lp):
+            h = rms_norm(lp["ln1"], xc, cfg.norm_eps)
+            a, _ = transformer.attn_apply(lp["attn"], h, cfg, positions,
+                                          None, ctx, causal=False)
+            xc = xc + a
+            h = rms_norm(lp["ln2"], xc, cfg.norm_eps)
+            return xc + transformer.mlp_apply(lp["mlp"], h, ctx), None
+
+        x, _ = jax.lax.scan(remat_wrap(enc_layer, cfg.remat), x,
+                            params["enc_layers"])
+        return rms_norm(params["ln_enc"], x, cfg.norm_eps)
+
+    def _decode_stack(self, params, tokens, enc_out, ctx):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def dec_layer(xc, lp):
+            h = rms_norm(lp["ln1"], xc, cfg.norm_eps)
+            a, kv = transformer.attn_apply(lp["attn"], h, cfg, positions,
+                                           None, ctx)
+            xc = xc + a
+            h = rms_norm(lp["ln_x"], xc, cfg.norm_eps)
+            ckv = cross_kv(lp["xattn"], enc_out, cfg)
+            xc = xc + cross_attn_apply(lp["xattn"], h, ckv, cfg, ctx)
+            h = rms_norm(lp["ln2"], xc, cfg.norm_eps)
+            return xc + transformer.mlp_apply(lp["mlp"], h, ctx), (kv, ckv)
+
+        x, kvs = jax.lax.scan(remat_wrap(dec_layer, cfg.remat), x,
+                              params["dec_layers"])
+        return rms_norm(params["ln_f"], x, cfg.norm_eps), kvs
+
+    def loss(self, params, batch, ctx: Optional[ShardCtx] = None):
+        enc_out = self.encode(params, batch["frames"], ctx)
+        x, _ = self._decode_stack(params, batch["tokens"], enc_out, ctx)
+        loss = chunked_ce(x, batch["tokens"][:, 1:], params["embed"],
+                          None, self.cfg.vocab_size)
+        return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------- serve ----
+    def cache_spec(self, batch: int, max_len: int):
+        cfg = self.cfg
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        L = cfg.num_layers
+        sd = lambda s: jax.ShapeDtypeStruct((L, batch, s, kv, dh), self.dtype)
+        return {"self": {"k": sd(max_len), "v": sd(max_len)},
+                "cross": {"k": sd(max_len), "v": sd(max_len)}}
+
+    def cache_pspec(self, ctx: ShardCtx, batch: int):
+        kv_div = self.cfg.num_kv_heads % ctx.mesh.shape[ctx.model_axis] == 0
+        kv_ax = ctx.model_axis if kv_div else None
+        if batch % ctx.dp_size == 0:
+            return P(None, ctx.data_axes, None, kv_ax, None)
+        return P(None, None, ctx.data_axes, kv_ax, None)
+
+    def prefill(self, params, batch, ctx: Optional[ShardCtx] = None):
+        enc_out = self.encode(params, batch["frames"], ctx)
+        x, kvs = self._decode_stack(params, batch["tokens"], enc_out, ctx)
+        (k, v), (ck, cv) = kvs
+        lg = project_logits(x[:, -1:], params["embed"], None,
+                            self.cfg.vocab_size)
+        cache = {"self": {"k": k.astype(self.dtype),
+                          "v": v.astype(self.dtype)},
+                 "cross": {"k": ck.astype(self.dtype),
+                           "v": cv.astype(self.dtype)}}
+        return lg, cache
+
+    def decode_step(self, params, token, cache, cur_len,
+                    ctx: Optional[ShardCtx] = None):
+        cfg = self.cfg
+        x = embed(params["embed"], token, self.dtype)
+
+        ks, vs = cache["self"]["k"], cache["self"]["v"]
+
+        def body(carry, li):
+            xc, ks, vs = carry
+            take = lambda a: jax.lax.dynamic_index_in_dim(a, li, 0,
+                                                          keepdims=False)
+            lp = jax.tree.map(take, params["dec_layers"])
+            kc, vc = take(ks), take(vs)
+            ck, cv = take(cache["cross"]["k"]), take(cache["cross"]["v"])
+            h = rms_norm(lp["ln1"], xc, cfg.norm_eps)
+            a, kc, vc = transformer.attn_decode(lp["attn"], h, cfg, kc, vc,
+                                                cur_len, None, ctx)
+            xc = xc + a
+            h = rms_norm(lp["ln_x"], xc, cfg.norm_eps)
+            xc = xc + cross_attn_apply(lp["xattn"], h, (ck, cv), cfg, ctx)
+            h = rms_norm(lp["ln2"], xc, cfg.norm_eps)
+            xc = xc + transformer.mlp_apply(lp["mlp"], h, ctx)
+            ks = jax.lax.dynamic_update_index_in_dim(
+                ks, kc.astype(ks.dtype), li, 0)
+            vs = jax.lax.dynamic_update_index_in_dim(
+                vs, vc.astype(vs.dtype), li, 0)
+            return (xc, ks, vs), None
+
+        (x, kn, vn), _ = jax.lax.scan(
+            body, (x, ks, vs), jnp.arange(cfg.num_layers, dtype=jnp.int32))
+        cache = {"self": {"k": kn, "v": vn}, "cross": cache["cross"]}
+        x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+        lg = project_logits(x, params["embed"], None,
+                            self.cfg.vocab_size)
+        return lg, cache

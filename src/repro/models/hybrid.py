@@ -1,0 +1,194 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+`num_layers` Mamba-2 blocks are scanned in groups of `attn_every`; after each
+group the single shared-parameter attention+MLP block runs (Zamba2's
+parameter-sharing design — 9 applications of one block for 54/6).  Decode
+carries per-layer SSM/conv states plus one KV cache per shared-block
+application site.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import ShardCtx, constraint
+from repro.models import mamba2, transformer
+from repro.models.config import ModelConfig
+from repro.models.losses import chunked_ce, project_logits
+from repro.models.layers import (embed, embedding_spec, linear_spec,
+                                 rms_norm, rms_norm_spec)
+from repro.models.params import ParamSpec
+from repro.models.transformer import remat_wrap, stack_specs
+
+__all__ = ["HybridLM"]
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.attn_every > 0 and cfg.num_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.groups = cfg.num_layers // cfg.attn_every
+
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        return {
+            "embed": embedding_spec(cfg.padded_vocab, cfg.d_model, dtype=dt),
+            "mamba": stack_specs(mamba2.mamba_spec(cfg, dt), cfg.num_layers),
+            "shared": transformer.layer_spec(cfg, dt, use_moe=False),
+            "ln_f": rms_norm_spec(cfg.d_model),
+            "head": linear_spec(cfg.d_model, cfg.padded_vocab,
+                                ("fsdp", "vocab"), dtype=dt),
+        }
+
+    def _group_params(self, params):
+        """(L, ...) mamba stack -> (G, per, ...) for the two-level scan."""
+        g, per = self.groups, self.cfg.attn_every
+        return jax.tree.map(lambda a: a.reshape((g, per) + a.shape[1:]),
+                            params["mamba"])
+
+    def _forward(self, params, tokens, ctx):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+        if ctx is not None:
+            x = constraint(x, ctx, P(ctx.data_axes, None, None))
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        grouped = self._group_params(params)
+
+        def inner(xc, lp):
+            return xc + mamba2.mamba_apply(lp, xc, cfg), None
+
+        def outer(xc, glp):
+            xc, _ = jax.lax.scan(remat_wrap(inner, cfg.remat), xc, glp)
+            y, _, _ = transformer.layer_apply(params["shared"], xc, cfg,
+                                              positions, None, ctx)
+            return y, None
+
+        x, _ = jax.lax.scan(outer, x, grouped)
+        return rms_norm(params["ln_f"], x, cfg.norm_eps)
+
+    def loss(self, params, batch, ctx: Optional[ShardCtx] = None):
+        x = self._forward(params, batch["tokens"], ctx)
+        loss = chunked_ce(x, batch["tokens"][:, 1:], params["embed"],
+                          params.get("head"), self.cfg.vocab_size)
+        return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------- serve ----
+    def cache_spec(self, batch: int, max_len: int):
+        cfg = self.cfg
+        m = mamba2.mamba_cache_spec(cfg, batch, self.dtype)
+        stack = lambda sds: jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((cfg.num_layers,) + sd.shape,
+                                            sd.dtype), sds)
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "mamba": stack(m),
+            "attn": {
+                "k": jax.ShapeDtypeStruct(
+                    (self.groups, batch, max_len, kv, dh), self.dtype),
+                "v": jax.ShapeDtypeStruct(
+                    (self.groups, batch, max_len, kv, dh), self.dtype),
+            },
+        }
+
+    def cache_pspec(self, ctx: ShardCtx, batch: int):
+        kv_div = self.cfg.num_kv_heads % ctx.mesh.shape[ctx.model_axis] == 0
+        kv_ax = ctx.model_axis if kv_div else None
+        if batch % ctx.dp_size == 0:
+            return P(None, ctx.data_axes, None, kv_ax, None)
+        return P(None, None, ctx.data_axes, kv_ax, None)
+
+    def prefill(self, params, batch, ctx: Optional[ShardCtx] = None):
+        """Chunk-free functional prefill: run full forward collecting states."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["embed"], tokens, self.dtype)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        grouped = self._group_params(params)
+
+        def inner(xc, lp):
+            y, (h_t, conv_t) = mamba2.mamba_apply(lp, xc, cfg,
+                                                  return_state=True)
+            return xc + y, (h_t, conv_t.astype(self.dtype))
+
+        def outer(xc, glp):
+            xc, states = jax.lax.scan(inner, xc, glp)
+            y, _, kv = transformer.layer_apply(params["shared"], xc, cfg,
+                                               positions, None, ctx,
+                                               collect_kv=True)
+            return y, (states, kv)
+
+        x, (mstates, kvs) = jax.lax.scan(outer, x, grouped)
+        x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+        lg = project_logits(x[:, -1:], params["embed"], params.get("head"),
+                            self.cfg.vocab_size)
+        ssm, conv = mstates
+        L = cfg.num_layers
+        cache = {
+            "mamba": {
+                "ssm": ssm.reshape((L,) + ssm.shape[2:]),
+                "conv": conv.reshape((L,) + conv.shape[2:]),
+            },
+            "attn": {"k": kvs[0].astype(self.dtype),
+                     "v": kvs[1].astype(self.dtype)},
+        }
+        return lg, cache
+
+    def decode_step(self, params, token, cache, cur_len,
+                    ctx: Optional[ShardCtx] = None):
+        """In-place carry updates (no scan-ys re-stacking; see DecoderLM)."""
+        cfg = self.cfg
+        x = embed(params["embed"], token, self.dtype)
+        L = cfg.num_layers
+        ssm_s, conv_s = cache["mamba"]["ssm"], cache["mamba"]["conv"]
+        ks, vs = cache["attn"]["k"], cache["attn"]["v"]
+
+        def idx(tree, i):
+            return jax.tree.map(lambda a: jax.lax.dynamic_index_in_dim(
+                a, i, 0, keepdims=False), tree)
+
+        def upd(stack, val, i):
+            return jax.lax.dynamic_update_index_in_dim(
+                stack, val.astype(stack.dtype), i, 0)
+
+        def body(carry, li):
+            xc, ssm_s, conv_s, ks, vs = carry
+            lp = idx(params["mamba"], li)
+            y, new_c = mamba2.mamba_step(
+                lp, xc, {"ssm": idx(ssm_s, li), "conv": idx(conv_s, li)},
+                cfg)
+            xc = xc + y
+            ssm_s = upd(ssm_s, new_c["ssm"], li)
+            conv_s = upd(conv_s, new_c["conv"], li)
+
+            def shared_block(args):
+                xc, ks, vs = args
+                gi = (li + 1) // cfg.attn_every - 1
+                kc = jax.lax.dynamic_index_in_dim(ks, gi, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(vs, gi, 0, keepdims=False)
+                y, kc, vc = transformer.layer_decode(
+                    params["shared"], xc, cfg, kc, vc, cur_len, None, ctx)
+                return y, upd(ks, kc, gi), upd(vs, vc, gi)
+
+            xc, ks, vs = jax.lax.cond(
+                (li + 1) % cfg.attn_every == 0, shared_block,
+                lambda args: args, (xc, ks, vs))
+            return (xc, ssm_s, conv_s, ks, vs), None
+
+        (x, ssm_s, conv_s, ks, vs), _ = jax.lax.scan(
+            body, (x, ssm_s, conv_s, ks, vs),
+            jnp.arange(L, dtype=jnp.int32))
+        cache = {
+            "mamba": {"ssm": ssm_s, "conv": conv_s},
+            "attn": {"k": ks, "v": vs},
+        }
+        x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+        lg = project_logits(x, params["embed"], params.get("head"),
+                            self.cfg.vocab_size)
+        return lg, cache

@@ -1,0 +1,55 @@
+"""Primitive layers (pure-functional): RMSNorm, linear, embedding, logits."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+__all__ = ["rms_norm", "rms_norm_spec", "linear", "linear_spec",
+           "embedding_spec", "embed", "logits"]
+
+
+def rms_norm_spec(dim: int):
+    return {"scale": ParamSpec((dim,), (None,), init_scale=-1.0)}
+
+
+def rms_norm(p, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def linear_spec(d_in: int, d_out: int, axes=("fsdp", "model"), bias=False,
+                dtype=jnp.float32, scale: float = 1.0):
+    spec = {"w": ParamSpec((d_in, d_out), axes, dtype=dtype, init_scale=scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (axes[-1],), dtype=dtype)
+    return spec
+
+
+def linear(p, x: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_spec(vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": ParamSpec((vocab, dim), ("vocab", "fsdp"), dtype=dtype)}
+
+
+def embed(p, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return p["table"].astype(dtype)[tokens]
+
+
+def logits(p_embed, x: jnp.ndarray, head=None) -> jnp.ndarray:
+    """Output head: tied embedding transpose or a separate projection."""
+    if head is not None:
+        return linear(head, x)
+    return jnp.einsum("...d,vd->...v", x, p_embed["table"].astype(x.dtype))

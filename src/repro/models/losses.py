@@ -1,0 +1,66 @@
+"""Loss utilities: sequence-chunked next-token cross-entropy.
+
+Materializing (B, S, V) fp32 logits is the single largest training buffer for
+big-vocab models (62 GB/device for seamless at 4k before this existed).
+`chunked_ce` scans the sequence in chunks so only (B, chunk, V) ever lives,
+and masks padded vocab entries (vocab is padded to a multiple of 256 so the
+head/embedding shard across TP — DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_ce", "project_logits"]
+
+
+def project_logits(x: jnp.ndarray, embed_params, head_params,
+                   real_vocab: int) -> jnp.ndarray:
+    """Hidden -> masked fp32 logits (tied transpose or separate head)."""
+    if head_params is not None:
+        w = head_params["w"].astype(x.dtype)
+        lg = jnp.einsum("...d,dv->...v", x, w)
+        if "b" in head_params:
+            lg = lg + head_params["b"].astype(x.dtype)
+    else:
+        lg = jnp.einsum("...d,vd->...v", x,
+                        embed_params["table"].astype(x.dtype))
+    lg = lg.astype(jnp.float32)
+    if lg.shape[-1] > real_vocab:     # mask vocab padding
+        pad_mask = jnp.arange(lg.shape[-1]) >= real_vocab
+        lg = jnp.where(pad_mask, -1e30, lg)
+    return lg
+
+
+def chunked_ce(x: jnp.ndarray, targets: jnp.ndarray, embed_params,
+               head_params, real_vocab: int, chunk: int = 512) -> jnp.ndarray:
+    """Mean next-token CE over (B, S, D) hiddens and (B, S-1) targets.
+
+    x[:, :-1] scores targets (the standard shift); computed in `chunk`-sized
+    sequence slices under lax.scan so the full logits never materialize.
+    """
+    xs = x[:, :-1]
+    b, s, d = xs.shape
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nchunk = xs.shape[1] // chunk
+    xc = xs.reshape(b, nchunk, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nchunk, chunk).transpose(1, 0, 2)
+    valid = (jnp.arange(nchunk * chunk).reshape(nchunk, chunk) < s)
+
+    def body(acc, inp):
+        xcb, tcb, vmask = inp
+        lg = project_logits(xcb, embed_params, head_params, real_vocab)
+        ce = -jnp.take_along_axis(jax.nn.log_softmax(lg, axis=-1),
+                                  tcb[..., None], axis=-1)[..., 0]
+        ce = jnp.where(vmask[None, :], ce, 0.0)
+        return acc + ce.sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (xc, tc, valid))
+    return total / (b * s)

@@ -1,0 +1,138 @@
+"""Mamba-2 (SSD) block: chunk-parallel training form + recurrent decode.
+
+The decay factors exp(A * dt) are recomputed from scalars at every position
+(never materialized per-position in HBM) — the SSM-native instance of the
+paper's recompute-over-load principle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssd
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec
+
+__all__ = ["mamba_spec", "mamba_apply", "mamba_step", "mamba_cache_spec"]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba_spec(cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    proj_out = 2 * d_inner + 2 * cfg.ssm_state + n_heads
+    return {
+        "in_proj": {"w": ParamSpec((d, proj_out), ("fsdp", "model"),
+                                   dtype=dtype)},
+        "conv_w": ParamSpec((conv_dim, cfg.ssm_conv), ("model", None),
+                            dtype=dtype),
+        "conv_b": ParamSpec((conv_dim,), ("model",), dtype=dtype),
+        "a_log": ParamSpec((n_heads,), ("model",)),
+        "d_skip": ParamSpec((n_heads,), ("model",), init_scale=-1.0),
+        "dt_bias": ParamSpec((n_heads,), ("model",)),
+        "norm": {"scale": ParamSpec((d_inner,), ("model",), init_scale=-1.0)},
+        "out_proj": {"w": ParamSpec((d_inner, d), ("model", "fsdp"),
+                                    dtype=dtype)},
+    }
+
+
+def _split(p, x, cfg: ModelConfig):
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"]["w"].astype(x.dtype))
+    z, xbc, dt = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over time. xbc: (B, S, C); w: (C, K)."""
+    c, k = w.shape
+    lhs = xbc.transpose(0, 2, 1)                      # (B, C, S)
+    lhs = jnp.pad(lhs, ((0, 0), (0, 0), (k - 1, 0)))
+    out = jax.lax.conv_general_dilated(
+        lhs, w[:, None, :].astype(xbc.dtype), (1,), "VALID",
+        dimension_numbers=("NCH", "OIH", "NCH"), feature_group_count=c)
+    return (out + b.astype(xbc.dtype)[None, :, None]).transpose(0, 2, 1)
+
+
+def _ssm_inputs(p, xbc_conv, dt_raw, cfg: ModelConfig):
+    d_inner, n_heads, _ = _dims(cfg)
+    n = cfg.ssm_state
+    xs, b_in, c_in = jnp.split(xbc_conv, [d_inner, d_inner + n], axis=-1)
+    bsz, s = xs.shape[0], xs.shape[1]
+    v = xs.reshape(bsz, s, n_heads, cfg.ssm_head_dim)
+    k = jnp.broadcast_to(b_in[:, :, None, :], (bsz, s, n_heads, n))
+    q = jnp.broadcast_to(c_in[:, :, None, :], (bsz, s, n_heads, n))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    log_a = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt       # (B,S,H)
+    return q, k, v, log_a, dt
+
+
+def mamba_apply(p, x: jnp.ndarray, cfg: ModelConfig,
+                h0=None, conv0=None, return_state: bool = False):
+    """x: (B, S, D). Optionally resume from (h0, conv0) and return states."""
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    z, xbc, dt_raw = _split(p, x, cfg)
+    if conv0 is not None:
+        xbc_ext = jnp.concatenate([conv0.astype(xbc.dtype), xbc], axis=1)
+        conv_full = _causal_conv(xbc_ext, p["conv_w"], p["conv_b"])
+        xbc_conv = conv_full[:, conv0.shape[1]:]
+    else:
+        xbc_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc_conv = jax.nn.silu(xbc_conv)
+    q, k, v, log_a, dt = _ssm_inputs(p, xbc_conv, dt_raw, cfg)
+    chunk = min(cfg.ssm_chunk, x.shape[1])
+    y, h_t = ssd.chunked_decay_attention(q, k, v, log_a, dt, chunk=chunk,
+                                         h0=h0,
+                                         score_dtype=cfg.ssm_score_dtype)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * v.astype(
+        jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"]["w"].astype(x.dtype))
+    if return_state:
+        conv_tail = xbc[:, -(cfg.ssm_conv - 1):]
+        return out, (h_t, conv_tail)
+    return out
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, n_heads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_dim),
+                                     dtype),
+    }
+
+
+def mamba_step(p, x: jnp.ndarray, cache, cfg: ModelConfig):
+    """Single-token decode. x: (B, 1, D); cache: {'ssm', 'conv'}."""
+    d_inner, n_heads, conv_dim = _dims(cfg)
+    z, xbc, dt_raw = _split(p, x, cfg)
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K, C)
+    w = p["conv_w"].astype(x.dtype)                          # (C, K)
+    xbc_conv = jnp.einsum("bkc,ck->bc", conv_in, w) + p["conv_b"].astype(
+        x.dtype)
+    xbc_conv = jax.nn.silu(xbc_conv)[:, None, :]
+    q, k, v, log_a, dt = _ssm_inputs(p, xbc_conv, dt_raw, cfg)
+    y, h_new = ssd.decay_attention_step(
+        q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], dt[:, 0], cache["ssm"])
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * v[:, 0].astype(
+        jnp.float32)
+    y = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"]["w"].astype(x.dtype))
+    new_cache = {"ssm": h_new, "conv": conv_in[:, 1:]}
+    return out, new_cache

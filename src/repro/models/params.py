@@ -1,0 +1,122 @@
+"""Parameter-spec system: shapes + logical sharding axes before values exist.
+
+Models declare their parameters as a tree of `ParamSpec(shape, dtype,
+logical_axes)`.  From the spec tree we derive, without ever allocating:
+
+  * `jax.ShapeDtypeStruct`s with `NamedSharding`s for the multi-pod dry-run,
+  * materialized parameter values for CPU smoke tests / real training,
+  * optimizer-state trees (same sharding as their parameter).
+
+Logical axes are resolved to mesh axes through rules with a divisibility
+fallback (a logical axis whose size is not divisible by its mesh axes is
+replicated) — the standard trick for, e.g., GQA kv_heads=4 on a TP=16 mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ParamSpec", "DEFAULT_RULES", "resolve_pspec", "specs_to_shardings",
+           "init_from_specs", "abstract_params", "spec_bytes"]
+
+
+class ParamSpec:
+    """shape + dtype + logical axis names (one per dim; None = replicated)."""
+
+    __slots__ = ("shape", "dtype", "axes", "init_scale")
+
+    def __init__(self, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                 dtype=jnp.float32, init_scale: float = 1.0):
+        assert len(shape) == len(axes), (shape, axes)
+        self.shape = tuple(shape)
+        self.dtype = dtype
+        self.axes = tuple(axes)
+        self.init_scale = init_scale
+
+    def __repr__(self):
+        return f"ParamSpec({self.shape}, {self.axes}, {np.dtype(self.dtype).name})"
+
+
+# logical axis -> mesh axes (order matters for sharding tuple entries)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),          # ZeRO-style parameter sharding
+    "model": ("model",),        # tensor parallel
+    "experts": ("model",),      # expert parallel shares the TP axis
+    "vocab": ("model",),
+    "seq": ("data",),           # sequence parallelism (long-context cache)
+    "layers": (),
+    None: (),
+}
+
+
+def _mesh_axes_for(logical: Optional[str], mesh: Mesh,
+                   rules: Dict[str, Tuple[str, ...]]) -> Tuple[str, ...]:
+    axes = rules.get(logical, ())
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def resolve_pspec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                  mesh: Mesh, rules=None) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    rules = rules or DEFAULT_RULES
+    entries = []
+    for dim, logical in zip(shape, axes):
+        mesh_axes = _mesh_axes_for(logical, mesh, rules)
+        total = math.prod(mesh.shape[a] for a in mesh_axes) if mesh_axes else 1
+        if mesh_axes and dim % total == 0:
+            entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def specs_to_shardings(specs, mesh: Mesh, rules=None):
+    """Spec tree -> tree of NamedSharding."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_pspec(s.axes, s.shape, mesh, rules)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_params(specs, mesh: Optional[Mesh] = None, rules=None):
+    """Spec tree -> ShapeDtypeStruct tree (with shardings if mesh given)."""
+    def mk(s: ParamSpec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(s.shape, s.dtype)
+        sh = NamedSharding(mesh, resolve_pspec(s.axes, s.shape, mesh, rules))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+    return jax.tree.map(mk, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_from_specs(key, specs):
+    """Materialize parameters: truncated-normal fan-in init, per-leaf keys."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, s in zip(keys, leaves):
+        if s.init_scale == 0.0:
+            vals.append(jnp.zeros(s.shape, s.dtype))
+        elif len(s.shape) <= 1:
+            vals.append(jnp.ones(s.shape, s.dtype) if s.init_scale == -1.0
+                        else jnp.zeros(s.shape, s.dtype))
+        else:
+            fan_in = math.prod(s.shape[:-1])
+            std = s.init_scale / math.sqrt(max(fan_in, 1))
+            vals.append((jax.random.truncated_normal(k, -2, 2, s.shape,
+                                                     jnp.float32)
+                         * std).astype(s.dtype))
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_bytes(specs) -> int:
+    total = 0
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        total += math.prod(s.shape) * np.dtype(s.dtype).itemsize
+    return total

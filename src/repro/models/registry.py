@@ -1,0 +1,53 @@
+"""Model registry: family -> model class; input specs per shape case.
+
+`input_specs(cfg, case, batch, seq)` returns the exact ShapeDtypeStruct
+stand-ins the dry-run lowers against (shannon/kernels pattern: weak-type
+correct, shardable, no allocation).  Modality frontends deliver precomputed
+embeddings here (stub frontends per the assignment).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeCase
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.transformer import DecoderLM
+from repro.models.xlstm_model import XLSTMLM
+
+__all__ = ["build_model", "train_input_specs", "FAMILIES"]
+
+FAMILIES = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": DecoderLM,
+    "audio": EncDecLM,
+    "hybrid": HybridLM,
+    "ssm": XLSTMLM,
+}
+
+
+def build_model(cfg: ModelConfig):
+    return FAMILIES[cfg.family](cfg)
+
+
+def train_input_specs(cfg: ModelConfig, batch: int, seq: int
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch inputs for loss()/train_step (ints for tokens, bf16 for stubs)."""
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.audio_dim),
+                                               jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    elif cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_patches, cfg.vision_dim), jnp.bfloat16)
+        specs["tokens"] = jax.ShapeDtypeStruct(
+            (batch, seq - cfg.vision_patches), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return specs

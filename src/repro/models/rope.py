@@ -1,0 +1,60 @@
+"""Rotary position embeddings with the paper-analogue recompute policy.
+
+RoPE sin/cos tables are *fixed per position* — the LM-side "geometric
+factors" (DESIGN.md §5).  Two policies:
+
+  * ``on_the_fly``  — recompute sin/cos from position ids inside the layer
+    (paper Algorithm 3 analogue: ~O(S * Dh) extra FLOPs, zero HBM table
+    traffic; the tables never exist in memory).
+  * ``precomputed`` — a (max_seq, Dh/2, 2) table is produced at setup and
+    streamed from HBM in every layer (paper Algorithm 2 analogue).
+
+Both produce identical rotations; tests assert equivalence.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["rope_table", "apply_rope"]
+
+
+def _freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_table(max_seq: int, head_dim: int, theta: float) -> jnp.ndarray:
+    """Precompute the (max_seq, half, 2) sin/cos table (policy=precomputed)."""
+    pos = jnp.arange(max_seq, dtype=jnp.float32)
+    ang = pos[:, None] * _freqs(head_dim, theta)[None, :]
+    return jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def _sincos(positions: jnp.ndarray, head_dim: int, theta: float,
+            table: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if table is not None:
+        sc = table[positions]                     # gather from HBM table
+        return sc[..., 0], sc[..., 1]
+    ang = positions[..., None].astype(jnp.float32) * _freqs(head_dim, theta)
+    return jnp.cos(ang), jnp.sin(ang)             # recomputed in-register
+
+
+def apply_rope(q: jnp.ndarray, k: jnp.ndarray, positions: jnp.ndarray,
+               theta: float, table: Optional[jnp.ndarray] = None):
+    """Rotate q, k: (..., S, H, Dh); positions: (..., S)."""
+    dh = q.shape[-1]
+    cos, sin = _sincos(positions, dh, theta, table)   # (..., S, Dh/2)
+    cos = cos[..., None, :].astype(jnp.float32)
+    sin = sin[..., None, :].astype(jnp.float32)
+
+    def rot(x):
+        x32 = x.astype(jnp.float32)
+        x1, x2 = x32[..., : dh // 2], x32[..., dh // 2:]
+        out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                              axis=-1)
+        return out.astype(x.dtype)
+
+    return rot(q), rot(k)

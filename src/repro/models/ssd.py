@@ -1,0 +1,105 @@
+"""Chunked linear attention with per-step decay — shared SSM engine.
+
+One algebraic core serves both Mamba-2 (SSD: a_t = exp(A * dt_t)) and the
+mLSTM (a_t = sigmoid(f_t)):
+
+    H_t = a_t H_{t-1} + beta_t k_t v_t^T        (state: (N, P) per head)
+    y_t = q_t^T H_t
+
+computed chunk-parallel: an intra-chunk masked (L x L) block plus an
+inter-chunk state carried by a `lax.scan` over chunks.  Per-position data
+(decays, cumulative logs) are *recomputed on the fly* from scalars — the SSM
+formulation natively embodies the paper's recompute-over-load principle
+(DESIGN.md §5).
+
+Shapes: q, k: (B, S, H, N); v: (B, S, H, P); log_a, beta: (B, S, H).
+Returns y: (B, S, H, P) and the final state (B, H, N, P).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_decay_attention", "decay_attention_step"]
+
+
+def chunked_decay_attention(q, k, v, log_a, beta, chunk: int = 256,
+                            h0: Optional[jnp.ndarray] = None,
+                            score_dtype=jnp.float32,
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """score_dtype=bfloat16 halves the dominant (B,C,L,L,H) intra-chunk
+    traffic (a §Perf lever; state passing stays fp32)."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    if s % chunk:  # pad tail with identity steps (log_a=0, beta=0)
+        pad = chunk - s % chunk
+        pw4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        pw3 = ((0, 0), (0, pad), (0, 0))
+        y, hT = chunked_decay_attention(
+            jnp.pad(q, pw4), jnp.pad(k, pw4), jnp.pad(v, pw4),
+            jnp.pad(log_a, pw3), jnp.pad(beta, pw3), chunk, h0,
+            score_dtype)
+        return y[:, :s], hT
+    c = s // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return x.reshape(b, c, chunk, *x.shape[2:]).astype(f32)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    la, bc = to_chunks(log_a), to_chunks(beta)
+
+    cum = jnp.cumsum(la, axis=2)                  # inclusive cumulative logs
+    total = cum[:, :, -1]                         # (B, C, H)
+    # decay from step j (exclusive) to step i (inclusive): cum_i - cum_j
+    decay_mat = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,C,L,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay_mat = jnp.where(mask[None, None, :, :, None], decay_mat, -jnp.inf)
+    # intra-chunk: scores (B,C,H,L,L)
+    sd = jnp.dtype(score_dtype)
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", qc.astype(sd), kc.astype(sd),
+                        preferred_element_type=f32).astype(sd)
+    gated = scores * jnp.exp(decay_mat).transpose(0, 1, 4, 2, 3).astype(sd)
+    gated = gated * bc.transpose(0, 1, 3, 2)[:, :, :, None, :].astype(sd)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", gated, vc.astype(sd),
+                         preferred_element_type=f32)
+
+    # per-chunk state contribution: sum_j exp(total - cum_j) beta_j k_j v_j^T
+    carry_w = jnp.exp(total[:, :, None] - cum) * bc               # (B,C,L,H)
+    chunk_state = jnp.einsum("bclh,bclhn,bclhp->bchnp", carry_w, kc, vc)
+    # query-side decay for inter-chunk term: exp(cum_i)
+    q_decay = jnp.exp(cum)                                        # (B,C,L,H)
+
+    def body(hstate, inputs):
+        qcc, qdec, cstate, tot = inputs
+        # y_inter_i = q_i . H_in * exp(cum_i)
+        y_int = jnp.einsum("blhn,bhnp->blhp", qcc * qdec[..., None], hstate)
+        h_new = hstate * jnp.exp(tot)[..., None, None] + cstate
+        return h_new, y_int
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), f32)
+    else:
+        h0 = h0.astype(f32)
+    hT, y_inter = jax.lax.scan(
+        body, h0,
+        (qc.transpose(1, 0, 2, 3, 4), q_decay.transpose(1, 0, 2, 3),
+         chunk_state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    return y.reshape(b, s, h, p).astype(q.dtype), hT
+
+
+def decay_attention_step(q, k, v, log_a, beta, h_prev
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence (decode). q/k: (B,H,N); v: (B,H,P);
+    log_a/beta: (B,H); h_prev: (B,H,N,P)."""
+    f32 = jnp.float32
+    a = jnp.exp(log_a.astype(f32))[..., None, None]
+    h_new = h_prev.astype(f32) * a + (beta.astype(f32)[..., None, None]
+                                      * k.astype(f32)[..., :, None]
+                                      * v.astype(f32)[..., None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(f32), h_new)
+    return y.astype(q.dtype), h_new

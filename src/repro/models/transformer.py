@@ -1,0 +1,426 @@
+"""Decoder-only LM: GQA blocks, scan-over-layers, prefill/decode with cache.
+
+Covers the dense, MoE, and VLM families.  Layers are stacked along a leading
+'layers' axis and executed with `lax.scan` (+ optional rematerialization), so
+the HLO stays one-layer-sized and the cost walker can fold trip counts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import ShardCtx, constraint
+from repro.models import attention, moe as moe_mod, rope
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed, embedding_spec, linear, linear_spec,
+                                 rms_norm, rms_norm_spec)
+from repro.models.losses import chunked_ce, project_logits
+from repro.models.params import ParamSpec
+
+__all__ = ["DecoderLM", "stack_specs", "remat_wrap"]
+
+
+def stack_specs(spec, n: int):
+    """Add a leading 'layers' dim of size n to every ParamSpec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            dtype=s.dtype, init_scale=s.init_scale),
+        spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def remat_wrap(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)   # "full"
+
+
+def attn_spec(cfg: ModelConfig, dtype):
+    d, h, kv, dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                    cfg.resolved_head_dim)
+    spec = {
+        "wq": linear_spec(d, h * dh, ("fsdp", "model"), bias=cfg.qkv_bias,
+                          dtype=dtype),
+        "wk": linear_spec(d, kv * dh, ("fsdp", "model"), bias=cfg.qkv_bias,
+                          dtype=dtype),
+        "wv": linear_spec(d, kv * dh, ("fsdp", "model"), bias=cfg.qkv_bias,
+                          dtype=dtype),
+        "wo": linear_spec(h * dh, d, ("model", "fsdp"), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        spec["q_norm"] = rms_norm_spec(dh)
+        spec["k_norm"] = rms_norm_spec(dh)
+    return spec
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, rope_tab, ctx):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, s, h, dh)
+    k = linear(p["wk"], x).reshape(b, s, kv, dh)
+    v = linear(p["wv"], x).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q, k = rope.apply_rope(q, k, positions, cfg.rope_theta, rope_tab)
+    if ctx is not None:
+        q = constraint(q, ctx, P(ctx.data_axes, None, "model", None))
+        k = constraint(k, ctx, P(ctx.data_axes, None, None, None))
+    return q, k, v
+
+
+def attn_apply(p, x, cfg: ModelConfig, positions, rope_tab, ctx,
+               causal: bool = True):
+    q, k, v = _qkv(p, x, cfg, positions, rope_tab, ctx)
+    o = attention.causal_attention(q, k, v, chunk=cfg.attn_chunk,
+                                   causal=causal)
+    b, s = x.shape[:2]
+    o = o.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
+    return linear(p["wo"], o), (k, v)
+
+
+def attn_decode(p, x, cfg: ModelConfig, k_cache, v_cache, cur_len, rope_tab,
+                ctx):
+    """x: (B, 1, D); caches: (B, Smax, KV, Dh).
+
+    cur_len is a scalar (lock-step decode) or a (B,) vector (ragged
+    continuous batching): per-slot rope position, per-slot cache write.
+    """
+    b = x.shape[0]
+    # barrier: XLA:CPU would otherwise hoist the (upcasting) attention-dot
+    # convert across the layer scan, materializing an fp32 copy of the whole
+    # layer-stacked cache (see attention.decode_attention note)
+    k_cache, v_cache = jax.lax.optimization_barrier((k_cache, v_cache))
+    cur_len = jnp.asarray(cur_len, jnp.int32)
+    if cur_len.ndim == 0:
+        positions = jnp.full((b, 1), cur_len, jnp.int32)
+    else:
+        positions = cur_len[:, None]
+    q, k, v = _qkv(p, x, cfg, positions, rope_tab, ctx)
+    if cur_len.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cur_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cur_len, axis=1)
+        length = jnp.full((b,), cur_len + 1, jnp.int32)
+    else:
+        idx = jnp.arange(b)
+        k_cache = k_cache.at[idx, cur_len].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[idx, cur_len].set(v[:, 0].astype(v_cache.dtype))
+        length = cur_len + 1
+    o = attention.decode_attention(q, k_cache, v_cache, length)
+    o = o.reshape(b, 1, cfg.num_heads * cfg.resolved_head_dim)
+    return linear(p["wo"], o), k_cache, v_cache
+
+
+def mlp_spec(cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": linear_spec(d, f, ("fsdp", "model"), dtype=dtype),
+        "w_up": linear_spec(d, f, ("fsdp", "model"), dtype=dtype),
+        "w_down": linear_spec(f, d, ("model", "fsdp"), dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, ctx):
+    h = jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x)
+    if ctx is not None:
+        h = constraint(h, ctx, P(ctx.data_axes, None, "model"))
+    return linear(p["w_down"], h)
+
+
+def layer_spec(cfg: ModelConfig, dtype, use_moe: bool):
+    spec = {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "attn": attn_spec(cfg, dtype),
+        "ln2": rms_norm_spec(cfg.d_model),
+    }
+    if use_moe:
+        spec["moe"] = moe_mod.moe_spec(cfg, dtype)
+    else:
+        spec["mlp"] = mlp_spec(cfg, dtype)
+    return spec
+
+
+def layer_apply(p, x, cfg: ModelConfig, positions, rope_tab, ctx,
+                collect_kv: bool = False):
+    a, kv = attn_apply(p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cfg,
+                       positions, rope_tab, ctx)
+    x = x + a
+    h = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        m, aux = moe_mod.moe_apply(p["moe"], h, cfg, ctx)
+    else:
+        m, aux = mlp_apply(p["mlp"], h, ctx), jnp.zeros((), jnp.float32)
+    x = x + m
+    if ctx is not None:
+        x = constraint(x, ctx, P(ctx.data_axes, None, None))
+    return x, aux, (kv if collect_kv else None)
+
+
+def layer_decode(p, x, cfg: ModelConfig, k_cache, v_cache, cur_len, rope_tab,
+                 ctx):
+    a, k_cache, v_cache = attn_decode(
+        p["attn"], rms_norm(p["ln1"], x, cfg.norm_eps), cfg, k_cache, v_cache,
+        cur_len, rope_tab, ctx)
+    x = x + a
+    h = rms_norm(p["ln2"], x, cfg.norm_eps)
+    if "moe" in p:
+        m, _ = moe_mod.moe_apply(p["moe"], h, cfg, ctx)
+    else:
+        m = mlp_apply(p["mlp"], h, ctx)
+    return x + m, k_cache, v_cache
+
+
+class DecoderLM:
+    """Dense / MoE / VLM decoder LM."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ---------------------------------------------------------- specs ----
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+        n_scan = cfg.num_layers - n_dense
+        spec: Dict[str, Any] = {
+            "embed": embedding_spec(cfg.padded_vocab, cfg.d_model, dtype=dt),
+            "layers": stack_specs(layer_spec(cfg, dt, cfg.is_moe), n_scan),
+            "ln_f": rms_norm_spec(cfg.d_model),
+        }
+        if n_dense:
+            spec["dense_layers"] = stack_specs(
+                layer_spec(cfg, dt, use_moe=False), n_dense)
+        if not cfg.tie_embeddings:
+            spec["head"] = linear_spec(cfg.d_model, cfg.padded_vocab,
+                                       ("fsdp", "vocab"), dtype=dt)
+        if cfg.rope_policy == "precomputed":
+            # the HBM-resident table (paper Alg. 2 analogue)
+            spec["rope_table"] = ParamSpec((131_072, cfg.resolved_head_dim
+                                            // 2, 2), (None, None, None))
+        if cfg.vision_patches:
+            spec["vis_proj"] = linear_spec(cfg.vision_dim, cfg.d_model,
+                                           (None, "fsdp"), dtype=dt)
+        return spec
+
+    # -------------------------------------------------------- helpers ----
+    def _rope_tab(self, params):
+        return params.get("rope_table") if self.cfg.rope_policy == \
+            "precomputed" else None
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], self.dtype)
+        if cfg.vision_patches:
+            pe = linear(params["vis_proj"], batch["patches"].astype(
+                self.dtype))
+            x = jnp.concatenate([pe, x], axis=1)
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return x, positions
+
+    def _stack(self, params, x, positions, ctx, collect_kv=False):
+        cfg = self.cfg
+        rope_tab = self._rope_tab(params)
+
+        def one(xc, lp, collect):
+            # barrier: stops XLA from hoisting the per-layer fp32 operand
+            # upcasts out of the scan (a full fp32 copy of the stacked
+            # parameters — ~15 GB/device at kimi scale)
+            lp = jax.lax.optimization_barrier(lp)
+            return layer_apply(lp, xc, cfg, positions, rope_tab, ctx,
+                               collect_kv=collect)
+
+        aux_total = jnp.zeros((), jnp.float32)
+        kvs = []
+        if "dense_layers" in params:
+            def scan_dense(xc, lp):
+                y, aux, kv = one(xc, lp, collect_kv)
+                return y, (aux, kv)
+            x, (aux_d, kv_d) = jax.lax.scan(
+                remat_wrap(scan_dense, cfg.remat), x,
+                params["dense_layers"])
+            aux_total = aux_total + aux_d.sum()
+            if collect_kv:
+                kvs.append(kv_d)
+
+        def scan_main(xc, lp):
+            y, aux, kv = one(xc, lp, collect_kv)
+            return y, (aux, kv)
+
+        n_scan = jax.tree.leaves(params["layers"])[0].shape[0]
+        if (cfg.scan_group > 1 and n_scan % cfg.scan_group == 0
+                and not collect_kv):
+            # two-level remat: outer scan saves only group boundaries
+            # (sqrt-style activation schedule for very deep stacks)
+            g = n_scan // cfg.scan_group
+            grouped = jax.tree.map(
+                lambda a: a.reshape((g, cfg.scan_group) + a.shape[1:]),
+                params["layers"])
+
+            def group_body(xc, glp):
+                y, (aux, _) = jax.lax.scan(remat_wrap(scan_main, cfg.remat),
+                                           xc, glp)
+                return y, aux.sum()
+
+            x, aux_g = jax.lax.scan(remat_wrap(group_body, cfg.remat), x,
+                                    grouped)
+            aux_total = aux_total + aux_g.sum()
+            return x, aux_total, kvs
+
+        x, (aux_m, kv_m) = jax.lax.scan(remat_wrap(scan_main, cfg.remat), x,
+                                        params["layers"])
+        aux_total = aux_total + aux_m.sum()
+        if collect_kv:
+            kvs.append(kv_m)
+        return x, aux_total, kvs
+
+    # ----------------------------------------------------------- train ----
+    def loss(self, params, batch, ctx: Optional[ShardCtx] = None):
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        if ctx is not None:
+            x = constraint(x, ctx, P(ctx.data_axes, None, None))
+        x, aux, _ = self._stack(params, x, positions, ctx)
+        x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+        if cfg.vision_patches:   # score text positions only
+            x = x[:, cfg.vision_patches:]
+        loss = chunked_ce(x, batch["tokens"][:, 1:], params["embed"],
+                          params.get("head"), cfg.vocab_size)
+        return loss + cfg.router_aux_weight * aux, {"ce": loss, "aux": aux}
+
+    # ----------------------------------------------------------- serve ----
+    def cache_spec(self, batch: int, max_len: int):
+        cfg = self.cfg
+        n_dense = cfg.first_dense_layers if cfg.is_moe else 0
+        n_scan = cfg.num_layers - n_dense
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        mk = lambda n: {
+            "k": jax.ShapeDtypeStruct((n, batch, max_len, kv, dh),
+                                      self.dtype),
+            "v": jax.ShapeDtypeStruct((n, batch, max_len, kv, dh),
+                                      self.dtype),
+        }
+        spec = {"main": mk(n_scan)}
+        if n_dense:
+            spec["dense"] = mk(n_dense)
+        return spec
+
+    def cache_pspec(self, ctx: ShardCtx, batch: int) -> P:
+        """PartitionSpec for one (L, B, S, KV, Dh) cache leaf.
+
+        batch over the data axes when divisible (else the sequence takes
+        'data' — long-context B=1); kv-heads over 'model' when divisible,
+        otherwise the *sequence* goes over 'model' (flash-decode style
+        partial-softmax sharding) — GQA kv counts like 4/8 can't split a
+        TP=16 axis but a 32k cache can, and at 1T scale a replicated cache
+        simply does not fit (DESIGN.md §6)."""
+        kv_div = self.cfg.num_kv_heads % ctx.mesh.shape[ctx.model_axis] == 0
+        if batch % ctx.dp_size == 0:
+            if kv_div:
+                return P(None, ctx.data_axes, None, ctx.model_axis, None)
+            return P(None, ctx.data_axes, ctx.model_axis, None, None)
+        if kv_div:
+            return P(None, None, ctx.data_axes, ctx.model_axis, None)
+        return P(None, None, ctx.data_axes + (ctx.model_axis,), None, None)
+
+    def prefill(self, params, batch, ctx: Optional[ShardCtx] = None):
+        """Prefill with in-place cache collection.
+
+        The stacks are allocated in the cache dtype and written per layer
+        with dynamic_update_index (collecting them as scan-ys lets XLA keep
+        an fp32-upcast copy of the whole 32k cache alive — 13 GB/device at
+        kimi scale)."""
+        cfg = self.cfg
+        x, positions = self._embed_inputs(params, batch)
+        b, s = x.shape[:2]
+        kvh, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        rope_tab = self._rope_tab(params)
+
+        def run(x, layer_params):
+            n = jax.tree.leaves(layer_params)[0].shape[0]
+            ks = jnp.zeros((n, b, s, kvh, dh), self.dtype)
+            vs = jnp.zeros((n, b, s, kvh, dh), self.dtype)
+
+            def body(carry, li):
+                xc, ks, vs = carry
+                lp = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, li, 0, keepdims=False), layer_params)
+                lp = jax.lax.optimization_barrier(lp)
+                y, _, (k, v) = layer_apply(lp, xc, cfg, positions, rope_tab,
+                                           ctx, collect_kv=True)
+                ks = jax.lax.dynamic_update_index_in_dim(
+                    ks, k.astype(self.dtype), li, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(
+                    vs, v.astype(self.dtype), li, 0)
+                return (y, ks, vs), None
+
+            (x, ks, vs), _ = jax.lax.scan(
+                body, (x, ks, vs), jnp.arange(n, dtype=jnp.int32))
+            return x, {"k": ks, "v": vs}
+
+        cache = {}
+        if "dense_layers" in params:
+            x, cache["dense"] = run(x, params["dense_layers"])
+        x, cache["main"] = run(x, params["layers"])
+        x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+        lg = project_logits(x[:, -1:], params["embed"], params.get("head"),
+                            cfg.vocab_size)
+        return lg, cache
+
+    def decode_step(self, params, token, cache, cur_len,
+                    ctx: Optional[ShardCtx] = None):
+        """token: (B, 1) int32; cur_len: scalar or (B,) int32.
+
+        The layer scan carries the cache STACKS and updates them in place
+        (dynamic_update_index on the carry) instead of re-stacking them as
+        scan outputs — scan-ys would allocate a second full-cache buffer
+        (double HBM for a 32k cache; worse on backends that upcast).
+        """
+        cfg = self.cfg
+        x = embed(params["embed"], token, self.dtype)
+        rope_tab = self._rope_tab(params)
+
+        def run_stack(x, layer_params, ks, vs):
+            n = ks.shape[0]
+
+            def body(carry, li):
+                xc, ks, vs = carry
+                lp = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, li, 0, keepdims=False), layer_params)
+                kc = jax.lax.dynamic_index_in_dim(ks, li, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(vs, li, 0, keepdims=False)
+                y, kc, vc = layer_decode(lp, xc, cfg, kc, vc, cur_len,
+                                         rope_tab, ctx)
+                ks = jax.lax.dynamic_update_index_in_dim(
+                    ks, kc.astype(ks.dtype), li, 0)
+                vs = jax.lax.dynamic_update_index_in_dim(
+                    vs, vc.astype(vs.dtype), li, 0)
+                return (y, ks, vs), None
+
+            (x, ks, vs), _ = jax.lax.scan(
+                body, (x, ks, vs), jnp.arange(n, dtype=jnp.int32))
+            return x, ks, vs
+
+        cache = dict(cache)
+        if "dense" in cache:
+            x, kd, vd = run_stack(x, params["dense_layers"],
+                                  cache["dense"]["k"], cache["dense"]["v"])
+            cache["dense"] = {"k": kd, "v": vd}
+        x, km, vm = run_stack(x, params["layers"], cache["main"]["k"],
+                              cache["main"]["v"])
+        cache["main"] = {"k": km, "v": vm}
+        x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+        lg = project_logits(x, params["embed"], params.get("head"),
+                            cfg.vocab_size)
+        return lg, cache

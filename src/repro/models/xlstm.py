@@ -1,0 +1,174 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, step recurrence).
+
+The mLSTM reuses the shared decay-attention engine with an augmented value
+channel carrying the normalizer n_t (v' = [v, 1]), so
+
+    C_t = f_t C_{t-1} + i_t k_t v_t'^T,   h_t = o_t * (q C)_v / max(|q C|_n, 1)
+
+Stabilization uses clamped exponential input gates in fp32 state (DESIGN.md
+notes this simplification vs. the paper's running-max rescaling).  The sLSTM
+uses the exact exponential-gating stabilizer (m_t) and a per-head
+block-diagonal recurrent matrix, scanned over time.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssd
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.params import ParamSpec
+
+__all__ = ["mlstm_spec", "mlstm_apply", "mlstm_step", "mlstm_cache_spec",
+           "slstm_spec", "slstm_apply", "slstm_step", "slstm_cache_spec"]
+
+_IGATE_CLAMP = 8.0
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+def mlstm_spec(cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        "qkv": {"w": ParamSpec((d, 3 * d), ("fsdp", "model"), dtype=dtype)},
+        "gates": {"w": ParamSpec((d, 2 * h), ("fsdp", None))},   # i, f (fp32)
+        "ogate": {"w": ParamSpec((d, d), ("fsdp", "model"), dtype=dtype)},
+        "norm": {"scale": ParamSpec((d,), ("model",), init_scale=-1.0)},
+        "out": {"w": ParamSpec((d, d), ("model", "fsdp"), dtype=dtype)},
+    }
+
+
+def _mlstm_inputs(p, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    qkv = jnp.einsum("bsd,de->bse", x, p["qkv"]["w"].astype(x.dtype))
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, dh) / jnp.sqrt(dh).astype(x.dtype)
+    k = k.reshape(b, s, h, dh)
+    v = v.reshape(b, s, h, dh)
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                       p["gates"]["w"].astype(jnp.float32))
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)                  # (B,S,H)
+    log_a = jax.nn.log_sigmoid(f_raw)
+    beta = jnp.exp(jnp.minimum(i_raw, _IGATE_CLAMP))
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32),
+         jnp.ones(v.shape[:-1] + (1,), jnp.float32)], axis=-1)
+    return q, k, v_aug, log_a, beta
+
+
+def _mlstm_out(p, x, y_aug, cfg: ModelConfig):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    y_num, y_den = y_aug[..., :dh], y_aug[..., dh]
+    y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)[..., None]
+    y = y.reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x,
+                                  p["ogate"]["w"].astype(x.dtype)))
+    y = rms_norm(p["norm"], y * o, eps=cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out"]["w"].astype(x.dtype))
+
+
+def mlstm_apply(p, x: jnp.ndarray, cfg: ModelConfig, h0=None,
+                return_state: bool = False):
+    q, k, v_aug, log_a, beta = _mlstm_inputs(p, x, cfg)
+    chunk = min(cfg.attn_chunk, x.shape[1], 256)
+    y_aug, h_t = ssd.chunked_decay_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v_aug, log_a, beta,
+        chunk=chunk, h0=h0)
+    out = _mlstm_out(p, x, y_aug, cfg)
+    if return_state:
+        return out, h_t
+    return out
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    dh = cfg.d_model // cfg.num_heads
+    return jax.ShapeDtypeStruct((batch, cfg.num_heads, dh, dh + 1),
+                                jnp.float32)
+
+
+def mlstm_step(p, x: jnp.ndarray, h_prev, cfg: ModelConfig):
+    q, k, v_aug, log_a, beta = _mlstm_inputs(p, x, cfg)
+    y, h_new = ssd.decay_attention_step(
+        q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v_aug[:, 0], log_a[:, 0], beta[:, 0], h_prev)
+    return _mlstm_out(p, x, y[:, None], cfg), h_new
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+def slstm_spec(cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    return {
+        "w_in": {"w": ParamSpec((d, 4 * d), ("fsdp", "model"), dtype=dtype)},
+        "r": ParamSpec((h, dh, 4 * dh), ("model", None, None)),  # fp32
+        "bias": ParamSpec((4 * d,), ("model",)),
+        "norm": {"scale": ParamSpec((d,), ("model",), init_scale=-1.0)},
+        "out": {"w": ParamSpec((d, d), ("model", "fsdp"), dtype=dtype)},
+    }
+
+
+def _slstm_cell(p, wx_t, state, cfg: ModelConfig):
+    """One sLSTM step. wx_t: (B, 4D) precomputed input part, fp32."""
+    c, n, hprev, m = state
+    b = wx_t.shape[0]
+    h, dh = cfg.num_heads, cfg.d_model // cfg.num_heads
+    rh = jnp.einsum("bhd,hde->bhe", hprev.reshape(b, h, dh),
+                    p["r"].astype(jnp.float32)).reshape(b, 4 * cfg.d_model)
+    pre = wx_t + rh + p["bias"].astype(jnp.float32)
+    z_r, i_r, f_r, o_r = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_r)
+    o = jax.nn.sigmoid(o_r)
+    m_new = jnp.maximum(f_r + m, i_r)                 # stabilizer
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(f_r + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(p, x: jnp.ndarray, cfg: ModelConfig, state0=None,
+                return_state: bool = False):
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                    p["w_in"]["w"].astype(jnp.float32))
+    if state0 is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state0 = (z, z, z, jnp.full((b, d), -1e9, jnp.float32))
+
+    def body(state, wx_t):
+        new = _slstm_cell(p, wx_t, state, cfg)
+        return new, new[2]
+
+    state_t, hs = jax.lax.scan(body, state0, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = rms_norm(p["norm"], y, eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"]["w"].astype(x.dtype))
+    if return_state:
+        return out, state_t
+    return out
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    f = jax.ShapeDtypeStruct((batch, cfg.d_model), jnp.float32)
+    return (f, f, f, f)
+
+
+def slstm_step(p, x: jnp.ndarray, state, cfg: ModelConfig):
+    wx = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                    p["w_in"]["w"].astype(jnp.float32))[:, 0]
+    new = _slstm_cell(p, wx, state, cfg)
+    y = new[2][:, None].astype(x.dtype)
+    y = rms_norm(p["norm"], y, eps=cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"]["w"].astype(x.dtype))
+    return out, new

@@ -1,0 +1,127 @@
+"""xLSTM LM: alternating mLSTM / sLSTM blocks (paper arXiv:2405.04517).
+
+Blocks are scanned in (mLSTM, sLSTM) pairs; recurrent decode carries the
+matrix memory (mLSTM) and scalar cell states (sLSTM) — O(1) in sequence
+length, which is why this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.context import ShardCtx, constraint
+from repro.models import xlstm
+from repro.models.config import ModelConfig
+from repro.models.losses import chunked_ce, project_logits
+from repro.models.layers import (embed, embedding_spec, linear_spec,
+                                 rms_norm, rms_norm_spec)
+from repro.models.transformer import remat_wrap, stack_specs
+
+__all__ = ["XLSTMLM"]
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.num_layers % 2 == 0
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.pairs = cfg.num_layers // 2
+
+    def param_specs(self):
+        cfg, dt = self.cfg, self.dtype
+        return {
+            "embed": embedding_spec(cfg.padded_vocab, cfg.d_model, dtype=dt),
+            "ln_m": stack_specs(rms_norm_spec(cfg.d_model), self.pairs),
+            "mlstm": stack_specs(xlstm.mlstm_spec(cfg, dt), self.pairs),
+            "ln_s": stack_specs(rms_norm_spec(cfg.d_model), self.pairs),
+            "slstm": stack_specs(xlstm.slstm_spec(cfg, dt), self.pairs),
+            "ln_f": rms_norm_spec(cfg.d_model),
+            "head": linear_spec(cfg.d_model, cfg.padded_vocab,
+                                ("fsdp", "vocab"), dtype=dt),
+        }
+
+    def _pair(self, params_pair, x, collect=False):
+        cfg = self.cfg
+        ln_m, mp, ln_s, sp = params_pair
+        ym = xlstm.mlstm_apply(mp, rms_norm(ln_m, x, cfg.norm_eps), cfg,
+                               return_state=collect)
+        if collect:
+            ym, m_state = ym
+        x = x + ym
+        ys = xlstm.slstm_apply(sp, rms_norm(ln_s, x, cfg.norm_eps), cfg,
+                               return_state=collect)
+        if collect:
+            ys, s_state = ys
+        x = x + ys
+        if collect:
+            return x, (m_state, s_state)
+        return x, None
+
+    def _forward(self, params, tokens, ctx, collect=False):
+        cfg = self.cfg
+        x = embed(params["embed"], tokens, self.dtype)
+        if ctx is not None:
+            x = constraint(x, ctx, P(ctx.data_axes, None, None))
+
+        def body(xc, lp):
+            return self._pair(lp, xc, collect=collect)
+
+        x, states = jax.lax.scan(
+            remat_wrap(body, cfg.remat if not collect else "none"), x,
+            (params["ln_m"], params["mlstm"], params["ln_s"],
+             params["slstm"]))
+        return rms_norm(params["ln_f"], x, cfg.norm_eps), states
+
+    def loss(self, params, batch, ctx: Optional[ShardCtx] = None):
+        x, _ = self._forward(params, batch["tokens"], ctx)
+        loss = chunked_ce(x, batch["tokens"][:, 1:], params["embed"],
+                          params.get("head"), self.cfg.vocab_size)
+        return loss, {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------- serve ----
+    def cache_spec(self, batch: int, max_len: int):
+        del max_len  # recurrent state: O(1) in sequence length
+        m = xlstm.mlstm_cache_spec(self.cfg, batch)
+        s = xlstm.slstm_cache_spec(self.cfg, batch)
+        stk = lambda sd: jax.ShapeDtypeStruct((self.pairs,) + sd.shape,
+                                              sd.dtype)
+        return {"mlstm": stk(m), "slstm": tuple(stk(x) for x in s)}
+
+    def cache_pspec(self, ctx: ShardCtx, batch: int):
+        if batch % ctx.dp_size == 0:
+            return P(None, ctx.data_axes)
+        return P(None, None)
+
+    def prefill(self, params, batch, ctx: Optional[ShardCtx] = None):
+        x, states = self._forward(params, batch["tokens"], ctx, collect=True)
+        lg = project_logits(x[:, -1:], params["embed"], params.get("head"),
+                            self.cfg.vocab_size)
+        m_state, s_state = states
+        return lg, {"mlstm": m_state, "slstm": s_state}
+
+    def decode_step(self, params, token, cache, cur_len,
+                    ctx: Optional[ShardCtx] = None):
+        del cur_len
+        cfg = self.cfg
+        x = embed(params["embed"], token, self.dtype)
+
+        def body(xc, lp_state):
+            ln_m, mp, ln_s, sp, m_st, s_st = lp_state
+            ym, m_new = xlstm.mlstm_step(mp, rms_norm(ln_m, xc, cfg.norm_eps),
+                                         m_st, cfg)
+            xc = xc + ym
+            ys, s_new = xlstm.slstm_step(sp, rms_norm(ln_s, xc, cfg.norm_eps),
+                                         s_st, cfg)
+            return xc + ys, (m_new, s_new)
+
+        x, (m_states, s_states) = jax.lax.scan(
+            body, x, (params["ln_m"], params["mlstm"], params["ln_s"],
+                      params["slstm"], cache["mlstm"], cache["slstm"]))
+        x = rms_norm(params["ln_f"], x, cfg.norm_eps)
+        lg = project_logits(x, params["embed"], params.get("head"),
+                            self.cfg.vocab_size)
+        return lg, {"mlstm": m_states, "slstm": s_states}

@@ -1,0 +1,1 @@
+"""Serving: continuous-batching decode engine over fixed slots."""

@@ -1,0 +1,170 @@
+"""Optimizers: AdamW (fp32 state) and 8-bit AdamW (blockwise-quantized state).
+
+The 8-bit variant keeps the first/second moments as int8 with per-block fp32
+scales *in the parameter's own shape* so they inherit the parameter's
+sharding — at 1T parameters this is the difference between fitting and not
+fitting 16 GB chips (DESIGN.md: kimi-k2 trains with adamw8bit).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "Schedule", "cosine_schedule",
+           "clip_by_global_norm", "QState"]
+
+_BLOCK = 256
+
+
+class QState(NamedTuple):
+    """Blockwise-quantized tensor in the parameter's own shape.
+
+    Linear mode (signed, for m):  deq = q * scale          (lo unused)
+    Log mode (non-negative, for v): deq = exp(lo + (q+127) * scale) - EPS0
+    Log-space quantization avoids the zero-collapse that makes linear int8
+    second moments diverge (Adam's 1/sqrt(v) amplifies flushed-to-zero v).
+    """
+
+    q: jnp.ndarray
+    scale: jnp.ndarray
+    lo: jnp.ndarray
+
+
+_EPS0 = 1e-20
+
+
+def _blocks(xf: jnp.ndarray, shape):
+    last = shape[-1] if shape else 1
+    bs = min(_BLOCK, last) if last else 1
+    pad = (-last) % bs if bs else 0
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (len(shape) - 1) + [(0, pad)])
+    return xf.reshape(shape[:-1] + (-1, bs)), bs, pad
+
+
+def _unblocks(blocks: jnp.ndarray, shape, pad: int):
+    last = shape[-1] if shape else 1
+    out = blocks.reshape(shape[:-1] + (last + pad,))
+    return out[..., :last] if pad else out
+
+
+def _quantize(x: jnp.ndarray, log: bool = False) -> QState:
+    shape = x.shape
+    xf = x.astype(jnp.float32)
+    if log:
+        xf = jnp.log(jnp.maximum(xf, 0.0) + _EPS0)
+    blocks, bs, pad = _blocks(xf, shape)
+    if log:
+        lo = jnp.min(blocks, axis=-1)
+        span = jnp.max(blocks, axis=-1) - lo
+        scale = jnp.maximum(span, 1e-6) / 254.0
+        q = jnp.round((blocks - lo[..., None]) / scale[..., None]) - 127.0
+    else:
+        amax = jnp.max(jnp.abs(blocks), axis=-1)
+        scale = amax / 127.0
+        lo = jnp.zeros_like(scale)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        q = jnp.round(blocks / safe[..., None])
+    q = _unblocks(q, shape, pad).astype(jnp.int8)
+    return QState(q, scale, lo)
+
+
+def _dequantize(qs: QState, shape, log: bool = False) -> jnp.ndarray:
+    blocks, bs, pad = _blocks(qs.q.astype(jnp.float32), shape)
+    if log:
+        out = jnp.exp(qs.lo[..., None]
+                      + (blocks + 127.0) * qs.scale[..., None]) - _EPS0
+        out = jnp.maximum(out, 0.0)
+    else:
+        out = blocks * qs.scale[..., None]
+    return _unblocks(out, shape, pad)
+
+
+def adamw_init(params, *, eight_bit: bool = False):
+    def init_leaf(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if eight_bit:
+            return {"m": _quantize(z), "v": _quantize(z, log=True)}
+        return {"m": z, "v": z}
+    return {
+        "mu": jax.tree.map(init_leaf, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+# leaves above this size with a stacked leading (layers) axis are updated
+# one slice at a time: the dequant->update->requant chain otherwise
+# materializes the whole leaf's moments in fp32 (20 GB per expert matrix
+# at kimi scale)
+_SCAN_THRESHOLD = 1 << 26
+
+
+def adamw_update(params, grads, opt_state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, eight_bit: bool = False):
+    count = opt_state["count"] + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd_one(p, g, s):
+        # barrier: stops XLA from hoisting the fp32 upcast of g out of the
+        # per-layer lax.map (which would materialize the whole leaf in fp32
+        # — exactly what the scanned update exists to avoid)
+        p, g = jax.lax.optimization_barrier((p, g))
+        g32 = g.astype(jnp.float32)
+        m_prev = _dequantize(s["m"], p.shape) if eight_bit else s["m"]
+        v_prev = (_dequantize(s["v"], p.shape, log=True) if eight_bit
+                  else s["v"])
+        m = b1 * m_prev + (1 - b1) * g32
+        v = b2 * v_prev + (1 - b2) * g32 * g32
+        step = (m / c1) / (jnp.sqrt(jnp.maximum(v / c2, 0.0)) + eps)
+        step = step + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        new_s = ({"m": _quantize(m), "v": _quantize(v, log=True)}
+                 if eight_bit else {"m": m, "v": v})
+        return jax.lax.optimization_barrier((new_p, new_s))
+
+    def upd(p, g, s):
+        if (p.ndim >= 3 and p.size > _SCAN_THRESHOLD
+                and p.shape[0] <= 256):
+            return jax.lax.map(lambda args: upd_one(*args), (p, g, s))
+        return upd_one(p, g, s)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_s = tdef.flatten_up_to(opt_state["mu"])
+    out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}
+
+
+class Schedule(NamedTuple):
+    base_lr: float
+    warmup: int
+    total: int
+    min_ratio: float = 0.1
+
+    def __call__(self, step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(self.warmup, 1), 1.0)
+        prog = jnp.clip((s - self.warmup) / jnp.maximum(
+            self.total - self.warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return self.base_lr * warm * (self.min_ratio
+                                      + (1 - self.min_ratio) * cos)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Schedule:
+    return Schedule(base_lr, warmup, total)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    factor = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor).astype(
+        g.dtype), grads), gn

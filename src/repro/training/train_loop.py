@@ -1,0 +1,116 @@
+"""Train step builder: microbatch accumulation, clipping, schedule, optimizer.
+
+`make_train_step(model, tcfg, ctx)` returns a pure function
+`(state, batch) -> (state, metrics)` suitable for jit/pjit on the production
+mesh.  Features:
+
+  * gradient accumulation over `grad_accum` microbatches via `lax.scan`
+    (bounds activation memory; XLA overlaps each microbatch's collectives
+    with the next microbatch's compute — the standard TPU overlap story),
+  * optional int8-compressed cross-pod gradient reduction (multi-pod mesh),
+  * global-norm clipping, cosine schedule, AdamW / 8-bit AdamW.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression
+from repro.distributed.context import ShardCtx
+from repro.training import optimizer as opt_mod
+
+__all__ = ["TrainConfig", "init_state", "make_train_step"]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    grad_accum: int = 1
+    clip_norm: float = 1.0
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eight_bit_optimizer: bool = False
+    compress_crosspod: bool = False
+    accum_dtype: str = "float32"   # "bfloat16" halves the accumulation
+    #                                buffer (required at 1T params/16 GB)
+
+
+def init_state(params, tcfg: TrainConfig):
+    return {
+        "params": params,
+        "opt": opt_mod.adamw_init(params, eight_bit=tcfg.eight_bit_optimizer),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _split_microbatches(batch: Dict[str, Any], n: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, tcfg: TrainConfig, ctx: Optional[ShardCtx] = None):
+    schedule = opt_mod.cosine_schedule(tcfg.lr, tcfg.warmup, tcfg.total_steps)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(params, mb, ctx)
+        return loss, metrics
+
+    def accumulate(params, batch):
+        if tcfg.grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+        mbs = _split_microbatches(batch, tcfg.grad_accum)
+        acc_dt = jnp.dtype(tcfg.accum_dtype)
+
+        def body(carry, mb):
+            acc_loss, acc_grads = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc_grads = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dt), acc_grads, grads)
+            return (acc_loss + loss, acc_grads), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params)
+        (loss_sum, gsum), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mbs)
+        inv = 1.0 / tcfg.grad_accum
+        grads = jax.tree.map(lambda g: g * inv, gsum)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum * inv, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if (tcfg.compress_crosspod and ctx is not None
+                and "pod" in ctx.mesh.shape and ctx.mesh.shape["pod"] > 1):
+            loss, metrics, grads = compression.compressed_crosspod_grads(
+                lambda p, b: loss_fn(p, b), params, batch, ctx.mesh)
+        else:
+            loss, metrics, grads = accumulate(params, batch)
+        grads, gnorm = opt_mod.clip_by_global_norm(grads, tcfg.clip_norm)
+        # barrier: force the clipped grads to materialize in their own dtype
+        # — XLA otherwise elides the bf16 round-trip into the optimizer and
+        # keeps a full fp32 copy of every gradient leaf alive
+        grads = jax.lax.optimization_barrier(grads)
+        lr = schedule(state["step"])
+        new_params, new_opt = opt_mod.adamw_update(
+            params, grads, state["opt"], lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay,
+            eight_bit=tcfg.eight_bit_optimizer)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        return new_state, out_metrics
+
+    return train_step

@@ -1,0 +1,81 @@
+"""Attention: chunked == full (causal/bidirectional/padded), decode, GQA."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention, rope
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("s,chunk", [(64, 16), (48, 16), (33, 8), (128, 128)])
+def test_chunked_equals_full(rng, causal, s, chunk):
+    b, h, kv, dh = 2, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, dh)), jnp.float32)
+    out_c = attention.causal_attention(q, k, v, chunk=chunk, causal=causal)
+    out_f = attention.full_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out_c, out_f, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_full_last_position(rng):
+    b, s, h, kv, dh = 2, 24, 6, 3, 8
+    q_all = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, dh)), jnp.float32)
+    full = attention.full_attention(q_all, k, v, causal=True)
+    # decode for the last position: cache padded beyond the valid length
+    pad = 8
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out = attention.decode_attention(q_all[:, -1:], kc, vc,
+                                     jnp.full((b,), s, jnp.int32))
+    np.testing.assert_allclose(out[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       groups=st.sampled_from([1, 2, 4]))
+def test_gqa_grouping_property(seed, groups):
+    """GQA with repeated KV == MHA on the explicitly repeated tensors."""
+    rng = np.random.default_rng(seed)
+    b, s, kv, dh = 1, 16, 2, 8
+    h = kv * groups
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, dh)), jnp.float32)
+    out = attention.full_attention(q, k, v)
+    k_rep = attention._repeat_kv(k, groups)
+    v_rep = attention._repeat_kv(v, groups)
+    out_rep = attention.full_attention(q, k_rep, v_rep)
+    np.testing.assert_allclose(out, out_rep, rtol=1e-6)
+
+
+def test_rope_policies_identical(rng):
+    """The paper-analogue knob: on-the-fly recompute == precomputed table."""
+    b, s, h, dh = 2, 32, 4, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q1, k1 = rope.apply_rope(q, k, pos, theta=1e4, table=None)
+    tab = rope.rope_table(64, dh, theta=1e4)
+    q2, k2 = rope.apply_rope(q, k, pos, theta=1e4, table=tab)
+    np.testing.assert_allclose(q1, q2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(k1, k2, rtol=1e-6, atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relativity(rng):
+    """Rotations preserve norms; scores depend only on relative offsets."""
+    b, s, h, dh = 1, 16, 1, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, dh)), jnp.float32)
+    k = q
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    qr, kr = rope.apply_rope(q, k, pos, theta=1e4)
+    np.testing.assert_allclose(jnp.linalg.norm(qr, axis=-1),
+                               jnp.linalg.norm(q, axis=-1), rtol=1e-5)
+    qr2, kr2 = rope.apply_rope(q, k, pos + 7, theta=1e4)
+    s1 = jnp.einsum("bqhd,bkhd->bqk", qr, kr)
+    s2 = jnp.einsum("bqhd,bkhd->bqk", qr2, kr2)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,117 @@
+"""axhelm operator: variant equivalence (paper §4.1), operator properties."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import axhelm, geometry, mesh_gen
+from repro.core.spectral import basis
+
+
+@pytest.fixture(scope="module")
+def setup():
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    b = basis(4)
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 1, 4), seed=3)
+    verts = jnp.asarray(mesh.verts)
+    rng = np.random.default_rng(1)
+    e = verts.shape[0]
+    lam0 = jnp.asarray(1 + 0.3 * rng.random((e, b.n1, b.n1, b.n1)))
+    lam1 = jnp.asarray(0.5 + 0.2 * rng.random((e, b.n1, b.n1, b.n1)))
+    return b, verts, lam0, lam1, rng
+
+
+@pytest.mark.parametrize("d", [1, 3])
+def test_poisson_variants_agree(setup, d):
+    b, verts, _, _, rng = setup
+    e = verts.shape[0]
+    shape = (e, b.n1, b.n1, b.n1) if d == 1 else (e, d, b.n1, b.n1, b.n1)
+    x = jnp.asarray(rng.standard_normal(shape))
+    y_ref = axhelm.make_axhelm("precomputed", b, verts).apply(x)
+    for variant in ("trilinear", "partial"):
+        y = axhelm.make_axhelm(variant, b, verts).apply(x)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-8, atol=1e-10)
+
+
+@pytest.mark.parametrize("d", [1, 3])
+def test_helmholtz_variants_agree(setup, d):
+    b, verts, lam0, lam1, rng = setup
+    e = verts.shape[0]
+    shape = (e, b.n1, b.n1, b.n1) if d == 1 else (e, d, b.n1, b.n1, b.n1)
+    x = jnp.asarray(rng.standard_normal(shape))
+    kw = dict(lam0=lam0, lam1=lam1, helmholtz=True)
+    y_ref = axhelm.make_axhelm("precomputed", b, verts, **kw).apply(x)
+    for variant in ("trilinear", "merged"):
+        y = axhelm.make_axhelm(variant, b, verts, **kw).apply(x)
+        np.testing.assert_allclose(y, y_ref, rtol=1e-8, atol=1e-10)
+
+
+def test_variant_equation_constraints(setup):
+    b, verts, lam0, lam1, _ = setup
+    with pytest.raises(ValueError):
+        axhelm.make_axhelm("merged", b, verts, helmholtz=False)
+    with pytest.raises(ValueError):
+        axhelm.make_axhelm("partial", b, verts, helmholtz=True)
+    with pytest.raises(ValueError):
+        axhelm.make_axhelm("nope", b, verts)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_operator_linearity(seed):
+    """Property: A(a x + b y) = a A x + b A y for the fused-recalc variant."""
+    rng = np.random.default_rng(seed)
+    b = basis(3)
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(1, 1, 1, 3),
+                                     seed=seed % 100)
+    verts = jnp.asarray(mesh.verts)
+    op = axhelm.make_axhelm("trilinear", b, verts).apply
+    x = jnp.asarray(rng.standard_normal((1, b.n1, b.n1, b.n1)))
+    y = jnp.asarray(rng.standard_normal((1, b.n1, b.n1, b.n1)))
+    a, c = rng.standard_normal(2)
+    np.testing.assert_allclose(op(a * x + c * y), a * op(x) + c * op(y),
+                               rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_operator_symmetry_and_psd(seed):
+    """Property: x^T A y = y^T A x and x^T A x >= 0 (stiffness is SPSD)."""
+    rng = np.random.default_rng(seed)
+    b = basis(3)
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(1, 1, 1, 3),
+                                     seed=seed % 100)
+    op = axhelm.make_axhelm("trilinear", b, jnp.asarray(mesh.verts)).apply
+    u = jnp.asarray(rng.standard_normal((1, b.n1, b.n1, b.n1)))
+    v = jnp.asarray(rng.standard_normal((1, b.n1, b.n1, b.n1)))
+    np.testing.assert_allclose(float(jnp.vdot(u, op(v))),
+                               float(jnp.vdot(v, op(u))), rtol=1e-6)
+    assert float(jnp.vdot(u, op(u))) >= -1e-10
+
+
+def test_constant_field_in_nullspace(setup):
+    """The stiffness operator annihilates constants (pure Neumann)."""
+    b, verts, _, _, _ = setup
+    op = axhelm.make_axhelm("trilinear", b, verts).apply
+    ones = jnp.ones((verts.shape[0], b.n1, b.n1, b.n1))
+    np.testing.assert_allclose(op(ones), 0.0, atol=1e-10)
+
+
+def test_element_diagonal_closed_form(setup):
+    b, verts, lam0, lam1, _ = setup
+    f = geometry.factors_trilinear(verts[:1], b)
+    dhat = jnp.asarray(b.dhat)
+    diag = axhelm.element_diagonal(f, dhat, lam0=lam0[:1], lam1=lam1[:1],
+                                   helmholtz=True)
+    n1 = b.n1
+    eye = jnp.eye(n1**3).reshape(n1**3, 1, n1, n1, n1)
+    idxs = list(range(0, n1**3, 11))
+    brute = []
+    for i in idxs:
+        y = axhelm.axhelm_precomputed(eye[i], f, dhat, lam0=lam0[:1],
+                                      lam1=lam1[:1], helmholtz=True)
+        brute.append(float(y.reshape(-1)[i]))
+    np.testing.assert_allclose(np.asarray(diag).reshape(-1)[idxs], brute,
+                               rtol=1e-9)

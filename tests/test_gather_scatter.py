@@ -1,0 +1,80 @@
+"""Gather-scatter (Q/Q^T actions): adjointness, dssum, multiplicity."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gather_scatter as gs, mesh_gen
+
+
+def _dense_q(mesh):
+    """Explicit Q (E*N1^3, Nglobal) for small meshes — test oracle only."""
+    ids = np.asarray(mesh.global_ids).reshape(-1)
+    q = np.zeros((ids.size, mesh.n_global))
+    q[np.arange(ids.size), ids] = 1.0
+    return q
+
+
+def test_matches_dense_q(rng):
+    mesh = mesh_gen.box_mesh(2, 2, 1, 2)
+    q = _dense_q(mesh)
+    xg = rng.standard_normal(mesh.n_global)
+    yl = rng.standard_normal(q.shape[0])
+    ids = jnp.asarray(mesh.global_ids)
+    n1 = mesh.order + 1
+    shape = (len(mesh.verts), n1, n1, n1)
+    np.testing.assert_allclose(
+        np.asarray(gs.scatter(jnp.asarray(xg), ids)).reshape(-1), q @ xg,
+        atol=1e-12)
+    np.testing.assert_allclose(
+        gs.gather(jnp.asarray(yl).reshape(shape), ids, mesh.n_global),
+        q.T @ yl, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_adjointness(seed):
+    """Property: <Q x, y>_local == <x, Q^T y>_global (scatter/gather are
+    adjoint) — the identity gslib relies on."""
+    rng = np.random.default_rng(seed)
+    mesh = mesh_gen.box_mesh(2, 1, 2, 3)
+    ids = jnp.asarray(mesh.global_ids)
+    n1 = mesh.order + 1
+    shape = (len(mesh.verts), n1, n1, n1)
+    x = jnp.asarray(rng.standard_normal(mesh.n_global))
+    y = jnp.asarray(rng.standard_normal(shape))
+    lhs = float(jnp.vdot(gs.scatter(x, ids), y))
+    rhs = float(jnp.vdot(x, gs.gather(y, ids, mesh.n_global)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-10)
+
+
+def test_multiplicity_counts_sharing():
+    mesh = mesh_gen.box_mesh(2, 2, 2, 2)
+    mult = np.asarray(gs.multiplicity(jnp.asarray(mesh.global_ids),
+                                      mesh.n_global))
+    # the center node of a 2x2x2 element box is shared by all 8 elements
+    assert mult.max() == 8.0
+    assert mult.min() == 1.0
+    assert mult.sum() == mesh.global_ids.size
+
+
+def test_dssum_is_scatter_of_gather(rng):
+    mesh = mesh_gen.box_mesh(2, 2, 1, 2)
+    ids = jnp.asarray(mesh.global_ids)
+    n1 = mesh.order + 1
+    y = jnp.asarray(rng.standard_normal((len(mesh.verts), n1, n1, n1)))
+    out = gs.dssum(y, ids, mesh.n_global)
+    ref = gs.scatter(gs.gather(y, ids, mesh.n_global), ids)
+    np.testing.assert_allclose(out, ref)
+
+
+def test_vector_field_gather(rng):
+    mesh = mesh_gen.box_mesh(2, 1, 1, 2)
+    ids = jnp.asarray(mesh.global_ids)
+    n1 = mesh.order + 1
+    y3 = jnp.asarray(rng.standard_normal((len(mesh.verts), n1, n1, n1, 3)))
+    out = gs.gather(y3, ids, mesh.n_global)
+    assert out.shape == (mesh.n_global, 3)
+    for d in range(3):
+        np.testing.assert_allclose(
+            out[:, d], gs.gather(y3[..., d], ids, mesh.n_global), atol=1e-12)

@@ -1,0 +1,94 @@
+"""Geometry: analytic trilinear Jacobians (paper Alg. 3) vs autodiff and the
+discrete general path (Eq. 12); parallelepiped specialization (Alg. 4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry, mesh_gen
+from repro.core.spectral import basis
+
+
+def _random_trilinear_verts(rng, n_elems=2, amp=0.15):
+    base = mesh_gen.box_mesh(1, 1, 1, 2).verts[0]
+    return jnp.asarray(base[None] + amp * rng.standard_normal((n_elems, 8, 3)))
+
+
+def test_jacobian_matches_autodiff(x64, rng):
+    b = basis(4)
+    verts = _random_trilinear_verts(rng)
+    j_analytic = geometry.jacobian_trilinear(verts, b)
+    r, s, t = geometry.reference_nodes(b)
+    for e in range(verts.shape[0]):
+        for (k, j, i) in [(0, 0, 0), (2, 1, 3), (4, 4, 4), (1, 3, 2)]:
+            jac = jax.jacfwd(lambda rst: geometry.trilinear_map(
+                verts[e], rst[0], rst[1], rst[2]))(
+                jnp.array([r[k, j, i], s[k, j, i], t[k, j, i]]))
+            np.testing.assert_allclose(j_analytic[e, k, j, i], jac,
+                                       atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [2, 3, 7])
+def test_discrete_path_equals_analytic(x64, rng, n):
+    """The paper's general path (Eq. 12, 18 N1^4 FLOPs) agrees with the
+    12-FLOP analytic reconstruction on trilinear elements."""
+    b = basis(n)
+    verts = _random_trilinear_verts(rng, 3)
+    coords = geometry.node_coords(verts, b)
+    np.testing.assert_allclose(geometry.jacobian_discrete(coords, b),
+                               geometry.jacobian_trilinear(verts, b),
+                               atol=1e-9)
+
+
+def test_factor_paths_agree(x64, rng):
+    b = basis(5)
+    verts = _random_trilinear_verts(rng, 4)
+    f_tri = geometry.factors_trilinear(verts, b)
+    f_disc = geometry.factors_discrete(geometry.node_coords(verts, b), b)
+    np.testing.assert_allclose(f_tri.g, f_disc.g, rtol=1e-8, atol=1e-11)
+    np.testing.assert_allclose(f_tri.gwj, f_disc.gwj, rtol=1e-8, atol=1e-11)
+
+
+def test_parallelepiped_zero_cost_path(x64):
+    b = basis(4)
+    mesh = mesh_gen.deform_affine(mesh_gen.box_mesh(2, 2, 2, 4), seed=1)
+    verts = jnp.asarray(mesh.verts)
+    assert bool(jnp.all(geometry.is_parallelepiped(verts)))
+    f_par = geometry.factors_parallelepiped(verts, b)
+    f_ref = geometry.factors_discrete(geometry.node_coords(verts, b), b)
+    np.testing.assert_allclose(f_par.g, f_ref.g, rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(f_par.gwj, f_ref.gwj, rtol=1e-9, atol=1e-12)
+
+
+def test_trilinear_mesh_is_not_parallelepiped(x64):
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 2, 3), seed=2)
+    assert not bool(jnp.all(geometry.is_parallelepiped(jnp.asarray(
+        mesh.verts))))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), amp=st.floats(0.0, 0.2))
+def test_factors_property_random_elements(seed, amp):
+    """Property: for any valid (non-inverted) trilinear element, Alg. 3
+    factors equal the discrete-path factors."""
+    from hypothesis import assume
+    rng = np.random.default_rng(seed)
+    b = basis(3)
+    verts = _random_trilinear_verts(rng, 1, amp=amp)
+    jt = geometry.jacobian_trilinear(verts, b)
+    det = np.asarray(jnp.linalg.det(jt))
+    assume(np.all(det > 0))  # discard randomly-inverted elements
+    f_tri = geometry.factors_trilinear(verts, b)
+    f_disc = geometry.factors_discrete(geometry.node_coords(verts, b), b)
+    np.testing.assert_allclose(f_tri.g, f_disc.g, rtol=2e-4, atol=1e-6)
+
+
+def test_gwj_integrates_volume(x64):
+    """sum(gwj) over an element = its volume (quadrature of |J|)."""
+    b = basis(6)
+    mesh = mesh_gen.box_mesh(1, 1, 1, 6, lengths=(2.0, 3.0, 0.5))
+    f = geometry.factors_discrete(
+        geometry.node_coords(jnp.asarray(mesh.verts), b), b)
+    np.testing.assert_allclose(float(f.gwj.sum()), 3.0, rtol=1e-10)

@@ -1,0 +1,74 @@
+"""HLO cost walker: exact FLOPs on known programs, loop trip counts,
+collective byte accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import _type_bytes, analyze_hlo
+
+
+def test_type_bytes():
+    assert _type_bytes("f32[4,64]{1,0}") == 4 * 64 * 4
+    assert _type_bytes("bf16[2,3]") == 12
+    assert _type_bytes("(s32[], f32[4,64], pred[2])") == 4 + 1024 + 2
+    assert _type_bytes("u8[128]") == 128
+
+
+def test_matmul_flops_exact():
+    a = jnp.zeros((32, 64), jnp.float32)
+    b = jnp.zeros((64, 16), jnp.float32)
+    compiled = jax.jit(lambda x, y: x @ y).lower(a, b).compile()
+    cost = analyze_hlo(compiled.as_text())
+    np.testing.assert_allclose(cost.flops, 2 * 32 * 64 * 16, rtol=1e-12)
+
+
+def test_scan_trip_count_folded():
+    """A scan of L matmuls must count L x the body flops."""
+    L, D = 5, 32
+    params = jnp.zeros((L, D, D), jnp.float32)
+    x = jnp.zeros((4, D), jnp.float32)
+
+    def f(p, x0):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x0, p)
+        return y
+
+    compiled = jax.jit(f).lower(params, x).compile()
+    cost = analyze_hlo(compiled.as_text())
+    np.testing.assert_allclose(cost.flops, L * 2 * 4 * D * D, rtol=1e-6)
+
+
+def test_grad_scan_counts_forward_and_backward():
+    L, D = 3, 16
+    params = jnp.zeros((L, D, D), jnp.float32)
+    x = jnp.zeros((2, D), jnp.float32)
+
+    def loss(p, x0):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x0, p)
+        return jnp.sum(y)
+
+    compiled = jax.jit(jax.grad(loss)).lower(params, x).compile()
+    cost = analyze_hlo(compiled.as_text())
+    fwd = L * 2 * 2 * D * D
+    # backward: dx (B,D)x(D,D) + dw (D,B)x(B,D) per layer
+    bwd = L * (2 * 2 * D * D + 2 * D * 2 * D)
+    np.testing.assert_allclose(cost.flops, fwd + bwd, rtol=0.05)
+
+
+def test_traffic_positive_and_bounded():
+    a = jnp.zeros((256, 256), jnp.float32)
+    compiled = jax.jit(lambda x: jnp.tanh(x) + 1.0).lower(a).compile()
+    cost = analyze_hlo(compiled.as_text())
+    nbytes = 256 * 256 * 4
+    assert nbytes <= cost.traffic_bytes <= 6 * nbytes
+
+
+def test_collectives_empty_on_single_device():
+    a = jnp.zeros((8, 8), jnp.float32)
+    compiled = jax.jit(lambda x: x @ x).lower(a).compile()
+    cost = analyze_hlo(compiled.as_text())
+    assert cost.collective_total == 0.0

@@ -1,0 +1,108 @@
+"""Pallas axhelm kernels vs the pure-jnp oracle: shape/dtype/variant sweeps
+(interpret mode on CPU, per the assignment)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import geometry, mesh_gen
+from repro.core.spectral import basis
+from repro.kernels.axhelm import ops as kops
+from repro.kernels.axhelm import ref as kref
+
+
+def _mesh_verts(n, nx=2, ny=2, nz=1, seed=1, dtype=jnp.float32):
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(nx, ny, nz, n),
+                                     seed=seed)
+    return jnp.asarray(mesh.verts, dtype)
+
+
+def _geom_precomputed(verts, b):
+    coords = geometry.node_coords(verts, b)
+    f = geometry.factors_discrete(coords, b)
+    return jnp.concatenate([f.g, f.gwj[..., None]], axis=-1)
+
+
+@pytest.mark.parametrize("n", [2, 3, 7])
+@pytest.mark.parametrize("d", [1, 3])
+@pytest.mark.parametrize("variant", ["precomputed", "trilinear"])
+@pytest.mark.parametrize("helm", [False, True])
+def test_kernel_matches_oracle(rng, n, d, variant, helm):
+    b = basis(n)
+    verts = _mesh_verts(n)
+    e = verts.shape[0]
+    geom = verts if variant == "trilinear" else _geom_precomputed(verts, b)
+    shape = (e, b.n1, b.n1, b.n1) if d == 1 else (e, d, b.n1, b.n1, b.n1)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    kw = {}
+    if helm:
+        kw = dict(
+            lam0=jnp.asarray(1 + 0.3 * rng.random((e, b.n1, b.n1, b.n1)),
+                             jnp.float32),
+            lam1=jnp.asarray(0.5 + 0.2 * rng.random((e, b.n1, b.n1, b.n1)),
+                             jnp.float32),
+            helmholtz=True)
+    y = kops.axhelm(x, b, variant, geom, **kw)
+    y_ref = kops.reference(x, b, variant, geom, **kw)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=1e-4)
+
+
+def test_parallelepiped_kernel(rng):
+    b = basis(5)
+    mesh = mesh_gen.deform_affine(mesh_gen.box_mesh(3, 1, 1, 5), seed=2)
+    verts = jnp.asarray(mesh.verts, jnp.float32)
+    gelem = kref.gelem_from_verts(verts)
+    x = jnp.asarray(rng.standard_normal((3, b.n1, b.n1, b.n1)), jnp.float32)
+    y = kops.axhelm(x, b, "parallelepiped", gelem)
+    np.testing.assert_allclose(
+        y, kops.reference(x, b, "parallelepiped", gelem), rtol=2e-5,
+        atol=1e-4)
+
+
+@pytest.mark.parametrize("e_total", [1, 3, 5, 16])
+def test_element_padding(rng, e_total):
+    """E not divisible by the block size exercises the pad/slice path."""
+    b = basis(3)
+    verts = _mesh_verts(3, nx=4, ny=2, nz=2)[:e_total]
+    x = jnp.asarray(rng.standard_normal((e_total, b.n1, b.n1, b.n1)),
+                    jnp.float32)
+    y = kops.axhelm(x, b, "trilinear", verts, block_elems=4)
+    y_ref = kops.reference(x, b, "trilinear", verts)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=1e-4)
+    assert not np.any(np.isnan(np.asarray(y)))
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 0.05)])
+def test_dtype_sweep(rng, dtype, rtol):
+    b = basis(3)
+    verts = _mesh_verts(3, dtype=dtype)
+    x = jnp.asarray(rng.standard_normal((4, b.n1, b.n1, b.n1)), dtype)
+    y = kops.axhelm(x, b, "trilinear", verts)
+    y_ref = kops.reference(
+        x.astype(jnp.float32), b, "trilinear", verts.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(y, np.float32), y_ref, rtol=rtol,
+                               atol=rtol)
+
+
+@pytest.mark.parametrize("block_elems", [1, 2, 8])
+def test_block_size_invariance(rng, block_elems):
+    """Results must not depend on the VMEM block size (pure tiling knob)."""
+    b = basis(3)
+    verts = _mesh_verts(3)
+    x = jnp.asarray(rng.standard_normal((4, b.n1, b.n1, b.n1)), jnp.float32)
+    y = kops.axhelm(x, b, "trilinear", verts, block_elems=block_elems)
+    y_ref = kops.axhelm(x, b, "trilinear", verts, block_elems=4)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-6, atol=1e-6)
+
+
+def test_kernel_agrees_with_core_solver_path(rng):
+    """Kernel path == the fp64-validated core operator (fp32 tolerance)."""
+    from repro.core import axhelm as core_ax
+    b = basis(4)
+    verts = _mesh_verts(4)
+    x = jnp.asarray(rng.standard_normal((4, b.n1, b.n1, b.n1)), jnp.float32)
+    y_core = core_ax.make_axhelm("trilinear", b, verts,
+                                 dtype=jnp.float32).apply(x)
+    y_kern = kops.axhelm(x, b, "trilinear", verts)
+    np.testing.assert_allclose(y_kern, y_core, rtol=2e-4, atol=2e-4)

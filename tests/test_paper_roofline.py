@@ -1,0 +1,84 @@
+"""The paper's analytic roofline model (Tables 3-4, Eq. 6-8/18-20)."""
+
+import pytest
+
+from repro.core.paper_roofline import PLATFORMS, axhelm_cost, roofline
+
+
+def test_table3_flops_and_bytes():
+    """Table 3 exact expressions, N1 = 8 (the paper's N = 7)."""
+    n1 = 8.0
+    c = axhelm_cost(7, d=1, helmholtz=False, variant="precomputed")
+    assert c.f_ax == 12 * n1**4 + 15 * n1**3
+    assert c.m_bytes == (8 * n1**3 + n1**2) * 8
+    c = axhelm_cost(7, d=1, helmholtz=True, variant="precomputed")
+    assert c.f_ax == 12 * n1**4 + 20 * n1**3
+    assert c.m_bytes == (11 * n1**3 + n1**2) * 8
+    c = axhelm_cost(7, d=3, helmholtz=False, variant="precomputed")
+    assert c.f_ax == 36 * n1**4 + 45 * n1**3
+    assert c.m_bytes == (12 * n1**3 + n1**2) * 8
+    c = axhelm_cost(7, d=3, helmholtz=True, variant="precomputed")
+    assert c.f_ax == 36 * n1**4 + 60 * n1**3
+    assert c.m_bytes == (15 * n1**3 + n1**2) * 8
+
+
+def test_table4_geometry_costs():
+    """Table 4: recalculation FLOPs / traffic per variant."""
+    n1 = 8.0
+    c = axhelm_cost(7, 1, False, "trilinear")
+    assert c.f_regeo == 72 * n1 + 51 * n1**2 + 82 * n1**3
+    assert c.m_bytes == (24 + 2 * n1**3 + n1**2) * 8
+    c = axhelm_cost(7, 1, True, "trilinear")
+    assert c.f_regeo == 72 * n1 + 51 * n1**2 + 85 * n1**3
+    c = axhelm_cost(7, 1, False, "parallelepiped")
+    assert c.f_regeo == 7 * n1**3
+    c = axhelm_cost(7, 1, True, "merged")
+    assert c.f_regeo == 72 * n1 + 51 * n1**2 + 66 * n1**3
+    c = axhelm_cost(7, 1, False, "partial")
+    assert c.m_bytes == (24 + n1**3 + 2 * n1**3 + n1**2) * 8
+
+
+def test_variant_equation_mismatch_raises():
+    with pytest.raises(ValueError):
+        axhelm_cost(7, 1, False, "merged")
+    with pytest.raises(ValueError):
+        axhelm_cost(7, 1, True, "partial")
+
+
+def test_recalc_raises_roofline():
+    """The paper's headline: recalculation lifts R_eff on every platform."""
+    for platform in PLATFORMS.values():
+        for helm in (False, True):
+            base = roofline(platform, 7, 1, helm, "precomputed")
+            tri = roofline(platform, 7, 1, helm,
+                           "merged" if helm else "trilinear")
+            par = roofline(platform, 7, 1, helm, "parallelepiped")
+            assert tri["r_eff"] > base["r_eff"], platform.name
+            assert par["r_eff"] >= tri["r_eff"], platform.name
+
+
+def test_memory_bound_everywhere_original():
+    """Fig. 7/8: the original kernels are memory-bound on A100 and K100."""
+    for name in ("a100", "k100"):
+        for d in (1, 3):
+            for helm in (False, True):
+                r = roofline(PLATFORMS[name], 7, d, helm, "precomputed")
+                assert r["bound"] == "mem", (name, d, helm)
+
+
+def test_intensity_grows_linearly_with_n():
+    """Fig. 3: operational intensity ~ linear in N."""
+    i9 = roofline(PLATFORMS["a100"], 9, 3, False, "precomputed")["intensity"]
+    i17 = roofline(PLATFORMS["a100"], 17, 3, False,
+                   "precomputed")["intensity"]
+    ratio = i17 / i9
+    # N1 18/10 = 1.8x; allow the sub-leading terms some slack
+    assert 1.5 < ratio < 2.0
+
+
+def test_pbr_crossover_near_n1_18():
+    """Fig. 3: (Poisson, d=3) intensity crosses the A100 PBR around N1=18."""
+    a100 = PLATFORMS["a100"]
+    below = roofline(a100, 13, 3, False, "precomputed")["intensity"]
+    above = roofline(a100, 17, 3, False, "precomputed")["intensity"]
+    assert below < a100.pbr < above

@@ -1,0 +1,65 @@
+"""Sharding rules: logical-axis resolution with divisibility fallback."""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import (DEFAULT_RULES, ParamSpec, abstract_params,
+                                 resolve_pspec, spec_bytes)
+
+
+class _FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by resolve_pspec."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+MESH_POD = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_divisible_axes_shard():
+    spec = resolve_pspec(("fsdp", "model"), (4096, 14336), MESH)
+    assert spec == P("data", "model")
+
+
+def test_indivisible_axis_falls_back_to_replicated():
+    # 15 heads on a 16-way model axis: must replicate (smollm case)
+    spec = resolve_pspec((None, "model", None), (1, 15, 64), MESH)
+    assert spec == P(None, None, None)
+    # kv=8 divides 16? no — 8 % 16 != 0 -> replicated
+    spec = resolve_pspec(("model",), (8,), MESH)
+    assert spec == P(None)
+
+
+def test_multi_axis_logical_group():
+    spec = resolve_pspec(("batch", None), (256, 128), MESH_POD)
+    assert spec == P(("pod", "data"), None)
+    # batch 16 divides pod*data=32? no -> replicated
+    spec = resolve_pspec(("batch", None), (16, 128), MESH_POD)
+    assert spec == P(None, None)
+
+
+def test_missing_mesh_axis_dropped():
+    # single-pod mesh has no 'pod' axis: batch maps to ('data',) only
+    spec = resolve_pspec(("batch",), (256,), MESH)
+    assert spec == P("data")
+
+
+def test_layers_axis_never_sharded():
+    spec = resolve_pspec(("layers", "fsdp", "model"), (32, 1024, 4096), MESH)
+    assert spec == P(None, "data", "model")
+
+
+def test_spec_bytes():
+    tree = {"a": ParamSpec((4, 8), (None, None)),
+            "b": ParamSpec((2,), (None,), dtype=jnp.bfloat16)}
+    assert spec_bytes(tree) == 4 * 8 * 4 + 2 * 2
+
+
+def test_abstract_params_no_mesh():
+    tree = {"w": ParamSpec((8, 4), ("fsdp", "model"))}
+    abs_tree = abstract_params(tree)
+    assert abs_tree["w"].shape == (8, 4)
+    assert abs_tree["w"].dtype == jnp.float32

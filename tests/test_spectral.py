@@ -1,0 +1,56 @@
+"""Spectral basis: the paper's Table 1 constants and exactness properties."""
+
+import numpy as np
+import pytest
+
+from repro.core.spectral import (basis, diff_matrix, gll_points, gll_weights,
+                                 legendre, legendre_deriv)
+
+
+def test_paper_n2_constants():
+    """Paper Table 1 example: N=2 points, weights, differentiation matrix."""
+    np.testing.assert_allclose(gll_points(2), [-1.0, 0.0, 1.0], atol=1e-14)
+    np.testing.assert_allclose(gll_weights(2), [1 / 3, 4 / 3, 1 / 3],
+                               atol=1e-14)
+    np.testing.assert_allclose(
+        diff_matrix(2),
+        [[-1.5, 2.0, -0.5], [-0.5, 0.0, 0.5], [0.5, -2.0, 1.5]], atol=1e-14)
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 7, 9, 15])
+def test_gll_structure(n):
+    pts = gll_points(n)
+    assert pts.shape == (n + 1,)
+    assert pts[0] == -1.0 and pts[-1] == 1.0
+    assert np.all(np.diff(pts) > 0), "points must be ascending"
+    # interior points are the zeros of L'_N
+    np.testing.assert_allclose(legendre_deriv(n, pts[1:-1]), 0.0, atol=1e-10)
+
+
+@pytest.mark.parametrize("n", [2, 4, 7, 11])
+def test_weights_integrate_polynomials(n):
+    """GLL quadrature is exact for polynomials of degree <= 2N-1."""
+    pts, w = gll_points(n), gll_weights(n)
+    np.testing.assert_allclose(w.sum(), 2.0, rtol=1e-13)
+    for deg in range(2 * n):
+        exact = 0.0 if deg % 2 else 2.0 / (deg + 1)
+        np.testing.assert_allclose((w * pts**deg).sum(), exact, atol=1e-11)
+
+
+@pytest.mark.parametrize("n", [3, 7, 10])
+def test_diff_matrix_exact_on_polynomials(n):
+    """Dhat differentiates polynomials of degree <= N exactly at the nodes."""
+    pts = gll_points(n)
+    d = diff_matrix(n)
+    np.testing.assert_allclose(d @ np.ones_like(pts), 0.0, atol=1e-11)
+    for deg in range(1, n + 1):
+        np.testing.assert_allclose(d @ pts**deg, deg * pts**(deg - 1),
+                                   atol=1e-9)
+
+
+def test_basis_cache_and_w3():
+    b = basis(4)
+    assert b is basis(4)
+    w = b.weights
+    np.testing.assert_allclose(
+        b.w3, w[:, None, None] * w[None, :, None] * w[None, None, :])

@@ -1,0 +1,143 @@
+"""SSM engine: chunked decay-attention vs naive recurrence; Mamba2/xLSTM
+train-vs-decode consistency; chunk-size invariance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import mamba2, ssd, xlstm
+from repro.models.config import ModelConfig
+
+
+def _naive(q, k, v, log_a, beta, h0=None):
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    hst = np.zeros((b, h, n, p)) if h0 is None else np.asarray(h0)
+    ys = []
+    for t in range(s):
+        a = np.exp(np.asarray(log_a[:, t]))[..., None, None]
+        kv = (np.asarray(beta[:, t])[..., None, None]
+              * np.asarray(k[:, t])[..., :, None]
+              * np.asarray(v[:, t])[..., None, :])
+        hst = hst * a + kv
+        ys.append(np.einsum("bhn,bhnp->bhp", np.asarray(q[:, t]), hst))
+    return np.stack(ys, axis=1), hst
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       s=st.sampled_from([8, 16, 24]),
+       chunk=st.sampled_from([4, 8]))
+def test_chunked_equals_recurrence(seed, s, chunk):
+    rng = np.random.default_rng(seed)
+    b, h, n, p = 1, 2, 4, 4
+    q = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    log_a = jnp.asarray(-np.abs(rng.standard_normal((b, s, h))),
+                        jnp.float32)
+    beta = jnp.asarray(rng.random((b, s, h)), jnp.float32)
+    y, hT = ssd.chunked_decay_attention(q, k, v, log_a, beta, chunk=chunk)
+    y_ref, h_ref = _naive(q, k, v, log_a, beta)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(hT, h_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_chunk_size_invariance(rng):
+    b, s, h, n, p = 2, 32, 2, 4, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    log_a = jnp.asarray(-rng.random((b, s, h)), jnp.float32)
+    beta = jnp.asarray(rng.random((b, s, h)), jnp.float32)
+    y8, h8 = ssd.chunked_decay_attention(q, k, v, log_a, beta, chunk=8)
+    y16, h16 = ssd.chunked_decay_attention(q, k, v, log_a, beta, chunk=16)
+    np.testing.assert_allclose(y8, y16, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h8, h16, rtol=1e-4, atol=1e-4)
+
+
+def test_step_continues_chunked(rng):
+    """decode step after a chunked prefill == full chunked run."""
+    b, s, h, n, p = 1, 17, 2, 4, 4
+    mk = lambda *sh: jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    q, k = mk(b, s, h, n), mk(b, s, h, n)
+    v = mk(b, s, h, p)
+    log_a = -jnp.abs(mk(b, s, h))
+    beta = jnp.abs(mk(b, s, h))
+    y_full, h_full = ssd.chunked_decay_attention(q, k, v, log_a, beta,
+                                                 chunk=8)
+    y_pre, h_pre = ssd.chunked_decay_attention(
+        q[:, :-1], k[:, :-1], v[:, :-1], log_a[:, :-1], beta[:, :-1],
+        chunk=8)
+    y_t, h_t = ssd.decay_attention_step(q[:, -1], k[:, -1], v[:, -1],
+                                        log_a[:, -1], beta[:, -1], h_pre)
+    np.testing.assert_allclose(y_t, y_full[:, -1], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h_t, h_full, rtol=1e-4, atol=1e-4)
+
+
+_CFG = ModelConfig(name="t", family="hybrid", num_layers=2, d_model=32,
+                   num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                   ssm_state=8, ssm_head_dim=8, ssm_chunk=8, attn_every=2)
+
+
+def test_mamba_train_equals_decode(rng):
+    from repro.models.params import init_from_specs
+    p = init_from_specs(jax.random.PRNGKey(0),
+                        mamba2.mamba_spec(_CFG, jnp.float32))
+    b, s = 2, 12
+    x = jnp.asarray(rng.standard_normal((b, s, _CFG.d_model)), jnp.float32)
+    y_full, (h_t, conv_t) = mamba2.mamba_apply(p, x, _CFG,
+                                               return_state=True)
+    # step-by-step
+    cache = {
+        "ssm": jnp.zeros_like(h_t),
+        "conv": jnp.zeros((b, _CFG.ssm_conv - 1,
+                           conv_t.shape[-1]), jnp.float32),
+    }
+    ys = []
+    for t in range(s):
+        y_t, cache = mamba2.mamba_step(p, x[:, t:t + 1], cache, _CFG)
+        ys.append(y_t)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_steps, y_full, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(cache["ssm"], h_t, rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_train_equals_decode(rng):
+    from repro.models.params import init_from_specs
+    cfg = _CFG.replace(num_heads=2, attn_chunk=8)
+    p = init_from_specs(jax.random.PRNGKey(1), xlstm.mlstm_spec(
+        cfg, jnp.float32))
+    b, s = 1, 10
+    x = jnp.asarray(0.3 * rng.standard_normal((b, s, cfg.d_model)),
+                    jnp.float32)
+    y_full, h_t = xlstm.mlstm_apply(p, x, cfg, return_state=True)
+    h = jnp.zeros_like(h_t)
+    ys = []
+    for t in range(s):
+        y_t, h = xlstm.mlstm_step(p, x[:, t:t + 1], h, cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(jnp.concatenate(ys, axis=1), y_full,
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(h, h_t, rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_train_equals_decode(rng):
+    from repro.models.params import init_from_specs
+    cfg = _CFG.replace(num_heads=4)
+    p = init_from_specs(jax.random.PRNGKey(2), xlstm.slstm_spec(
+        cfg, jnp.float32))
+    b, s = 2, 9
+    x = jnp.asarray(0.5 * rng.standard_normal((b, s, cfg.d_model)),
+                    jnp.float32)
+    y_full, st_t = xlstm.slstm_apply(p, x, cfg, return_state=True)
+    st = tuple(jnp.zeros_like(z) if i < 3 else jnp.full_like(z, -1e9)
+               for i, z in enumerate(st_t))
+    ys = []
+    for t in range(s):
+        y_t, st = xlstm.slstm_step(p, x[:, t:t + 1], st, cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(jnp.concatenate(ys, axis=1), y_full,
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,207 @@
+"""Training substrate: optimizer (incl. 8-bit), schedule, clipping, loop,
+checkpoint roundtrip, fault tolerance, data determinism."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as configs
+from repro.data.pipeline import SyntheticLM, host_prefetch
+from repro.models.config import reduced_config
+from repro.models.params import init_from_specs
+from repro.models.registry import build_model
+from repro.training import checkpoint, optimizer as opt
+from repro.training.fault_tolerance import (FailureInjector, SimulatedFailure,
+                                            run_resilient)
+from repro.training.train_loop import TrainConfig, init_state, make_train_step
+
+
+# ----------------------------------------------------------- optimizer ----
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), log=st.booleans())
+def test_quantize_roundtrip_error_bound(seed, log):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((3, 300)).astype(np.float32)
+    if log:
+        x = np.abs(x)
+    qs = opt._quantize(jnp.asarray(x), log=log)
+    back = np.asarray(opt._dequantize(qs, x.shape, log=log))
+    if log:
+        # log-quant: bounded RELATIVE error (no zero collapse)
+        rel = np.abs(back - x) / np.maximum(np.abs(x), 1e-12)
+        assert np.median(rel) < 0.2
+    else:
+        amax = np.abs(x).max(axis=-1, keepdims=True)
+        assert np.abs(back - x).max() <= (amax / 127.0).max() * 0.51 + 1e-7
+
+
+def test_log_quant_preserves_tiny_values():
+    """The zero-collapse regression test: tiny v must survive quantization
+    well enough that 1/sqrt(v) stays sane."""
+    v = jnp.asarray([[1e-12, 1e-8, 1e-4, 1.0] * 64], jnp.float32)
+    qs = opt._quantize(v, log=True)
+    back = np.asarray(opt._dequantize(qs, v.shape, log=True))
+    rel = np.abs(back - np.asarray(v)) / np.asarray(v)
+    assert rel.max() < 0.25, rel.max()
+
+
+def test_adamw_8bit_matches_fp32_on_quadratic():
+    def loss(p):
+        return jnp.sum((p - 3.0) ** 2)
+
+    traj = {}
+    for eight in (False, True):
+        p = jnp.zeros((4, 300))
+        state = opt.adamw_init({"w": p}, eight_bit=eight)
+        params = {"w": p}
+        for _ in range(60):
+            g = jax.grad(lambda q: loss(q["w"]))(params)
+            params, state = opt.adamw_update(params, g, state, lr=0.1,
+                                             weight_decay=0.0,
+                                             eight_bit=eight)
+        traj[eight] = float(loss(params["w"]))
+    assert traj[True] < 0.1 * float(jnp.sum(jnp.asarray(9.0 * 4 * 300)))
+    assert abs(traj[True] - traj[False]) < max(0.2 * abs(traj[False]), 2.0)
+
+
+def test_schedule_shape():
+    s = opt.cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(s(jnp.asarray(10))), 1e-3, rtol=1e-5)
+    assert float(s(jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-3)
+    assert float(s(jnp.asarray(55))) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, gn = opt.clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(gn), np.sqrt(1000.0), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+# ----------------------------------------------------------- train loop ---
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = reduced_config(configs.get("smollm_360m")).replace(vocab_size=64)
+    model = build_model(cfg)
+    params = init_from_specs(jax.random.PRNGKey(0), model.param_specs())
+    return cfg, model, params
+
+
+def test_loss_decreases(tiny_setup):
+    cfg, model, params = tiny_setup
+    tcfg = TrainConfig(lr=1e-2, warmup=5, total_steps=60, grad_accum=2)
+    state = init_state(params, tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    data = SyntheticLM(cfg, batch=8, seq=32, seed=0)
+    losses = []
+    for i in range(25):
+        state, m = step(state, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_grad_accum_equivalence(tiny_setup):
+    """grad_accum=2 over a batch == grad_accum=1 (same total batch)."""
+    cfg, model, params = tiny_setup
+    data = SyntheticLM(cfg, batch=8, seq=32, seed=1)
+    batch = data.batch_at(0)
+    outs = {}
+    for ga in (1, 2):
+        tcfg = TrainConfig(lr=1e-3, warmup=0, total_steps=10, grad_accum=ga)
+        state = init_state(params, tcfg)
+        step = jax.jit(make_train_step(model, tcfg))
+        new_state, m = step(state, batch)
+        outs[ga] = (float(m["loss"]),
+                    np.asarray(jax.tree.leaves(new_state["params"])[0],
+                               np.float32))
+    assert abs(outs[1][0] - outs[2][0]) < 1e-3
+    np.testing.assert_allclose(outs[1][1], outs[2][1], rtol=2e-2, atol=2e-4)
+
+
+# ----------------------------------------------------------- checkpoint ---
+
+def test_checkpoint_roundtrip_dtypes(tmp_path):
+    state = {
+        "a": jnp.asarray([1.5, 2.5], jnp.bfloat16),
+        "b": {"c": jnp.asarray([[1, 2]], jnp.int8),
+              "d": jnp.asarray(3, jnp.int32)},
+    }
+    checkpoint.save(str(tmp_path), 7, state)
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    restored = checkpoint.restore(str(tmp_path), 7, state)
+    assert restored["a"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(restored["a"], np.float32),
+                                  [1.5, 2.5])
+    np.testing.assert_array_equal(restored["b"]["c"], [[1, 2]])
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A second save over the same step replaces cleanly; tmp dirs gone."""
+    state = {"x": jnp.arange(4)}
+    checkpoint.save(str(tmp_path), 1, state)
+    checkpoint.save(str(tmp_path), 1, {"x": jnp.arange(4) + 1})
+    restored = checkpoint.restore(str(tmp_path), 1, state)
+    np.testing.assert_array_equal(restored["x"], [1, 2, 3, 4])
+    assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp_")]
+
+
+def test_fault_tolerant_run_resumes(tiny_setup, tmp_path):
+    cfg, model, params = tiny_setup
+    tcfg = TrainConfig(lr=1e-2, warmup=2, total_steps=40)
+    state = init_state(params, tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    data = SyntheticLM(cfg, batch=4, seq=32, seed=0)
+    inj = FailureInjector(fail_at=(6, 11))
+    final, hist = run_resilient(step, state, data.batch_at, num_steps=15,
+                                ckpt_dir=str(tmp_path), ckpt_every=5,
+                                injector=inj)
+    assert int(final["step"]) == 15
+    assert hist["restarts"] == 2
+    assert hist["completed_steps"] >= 15  # replays after restore
+
+
+def test_straggler_timeout_aborts(tiny_setup, tmp_path):
+    cfg, model, params = tiny_setup
+    tcfg = TrainConfig(lr=1e-2, warmup=2, total_steps=40)
+    state = init_state(params, tcfg)
+    step = jax.jit(make_train_step(model, tcfg))
+    data = SyntheticLM(cfg, batch=4, seq=32, seed=0)
+    inj = FailureInjector(straggle_at=(4,), straggle_seconds=1.5)
+    final, hist = run_resilient(step, state, data.batch_at, num_steps=6,
+                                ckpt_dir=str(tmp_path), ckpt_every=2,
+                                injector=inj, step_timeout=1.0)
+    assert int(final["step"]) == 6
+    assert hist["straggler_aborts"] >= 1
+
+
+# ------------------------------------------------------------------ data --
+
+def test_data_determinism():
+    cfg = reduced_config(configs.get("qwen3_0_6b"))
+    d1 = SyntheticLM(cfg, batch=4, seq=16, seed=3)
+    d2 = SyntheticLM(cfg, batch=4, seq=16, seed=3)
+    np.testing.assert_array_equal(d1.batch_at(5)["tokens"],
+                                  d2.batch_at(5)["tokens"])
+    assert not np.array_equal(d1.batch_at(5)["tokens"],
+                              d1.batch_at(6)["tokens"])
+
+
+def test_prefetch_resumes_at_step():
+    cfg = reduced_config(configs.get("qwen3_0_6b"))
+    data = SyntheticLM(cfg, batch=2, seq=16, seed=0)
+    it = host_prefetch(data.batch_at, start_step=7, depth=2)
+    step, batch = next(it)
+    assert step == 7
+    np.testing.assert_array_equal(batch["tokens"],
+                                  data.batch_at(7)["tokens"])
+    step2, _ = next(it)
+    assert step2 == 8
