@@ -1,22 +1,46 @@
 """Paper Figures 9-10 analogue: measured axhelm variant performance.
 
-Times the jitted variants on this host (CPU — wall numbers are for RELATIVE
-comparison between variants; the absolute roofline story is the v5e model
-from bench_paper_roofline / the dry-run).  Reports us/element and effective
-GFLOPS = F_ax / t (the paper's P_eff, which charges recalculation time but
-not recalculation FLOPs)."""
+Times every paper variant through BOTH backends — the pure-jnp reference and
+the Pallas kernels (interpret mode off-TPU) — and reports, per row:
+
+  us/element, effective GFLOPS (P_eff = F_ax / t: charges recalculation time
+  but not recalculation FLOPs), total GFLOPS, the paper's modeled
+  bytes/element (Table 4 geometry traffic + X/Y/lambda), operational
+  intensity, and the modeled v5e roofline ceiling R_eff with the fraction of
+  it actually achieved.
+
+On CPU the wall numbers are for RELATIVE comparison between variants and
+backends; the bytes/intensity/R_eff columns are the machine-independent
+paper model.  Results land in BENCH_axhelm.json so the perf trajectory is
+tracked across PRs.
+
+Run:  PYTHONPATH=src python benchmarks/bench_axhelm.py
+          [--quick] [--n 7] [--e 512] [--d 1] [--autotune]
+          [--backends reference pallas] [--out BENCH_axhelm.json]
+"""
 
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import axhelm as ax, geometry, mesh_gen
-from repro.core.paper_roofline import axhelm_cost
+from repro.core import axhelm as ax, mesh_gen
+from repro.core.paper_roofline import PLATFORMS, axhelm_cost, roofline
 from repro.core.spectral import basis
+
+POISSON_VARIANTS = ("precomputed", "trilinear", "parallelepiped", "partial")
+HELMHOLTZ_VARIANTS = ("precomputed", "trilinear", "parallelepiped", "merged")
+
+COLUMNS = ("equation", "variant", "backend", "us_per_elem", "p_eff_gflops",
+           "p_tot_gflops", "model_bytes_per_elem", "model_intensity",
+           "model_r_eff_gflops_v5e", "roofline_frac_v5e")
 
 
 def _time(fn, *args, iters: int = 5) -> float:
@@ -28,45 +52,97 @@ def _time(fn, *args, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def rows(n: int = 7, e: int = 512, d: int = 1):
+def rows(n: int = 7, e: int = 512, d: int = 1,
+         backends=("reference", "pallas"), iters: int = 5,
+         block_elems=None):
+    """Returns (rows, info) — info carries the ACTUAL element count (the
+    requested e is rounded to the 8x8xnz box mesh)."""
     b = basis(n)
-    mesh = mesh_gen.deform_trilinear(
-        mesh_gen.box_mesh(8, 8, e // 64, n), seed=1)
-    verts = jnp.asarray(mesh.verts, jnp.float32)
+    nz = max(1, e // 64)
+    box = mesh_gen.box_mesh(8, 8, nz, n)
+    tri_mesh = mesh_gen.deform_trilinear(box, seed=1)
+    par_mesh = mesh_gen.deform_affine(box, seed=2)
+    e = len(tri_mesh.verts)
     rng = np.random.default_rng(0)
     shape = (e, b.n1, b.n1, b.n1) if d == 1 else (e, d, b.n1, b.n1, b.n1)
     x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
     lam0 = jnp.ones((e, b.n1, b.n1, b.n1), jnp.float32)
     lam1 = jnp.full((e, b.n1, b.n1, b.n1), 0.1, jnp.float32)
+    # fp_size=4 throughout: these runs are fp32, so the modeled traffic and
+    # the R_eff ceiling must use the same word size or the roofline
+    # fraction compares fp32 measurements against a bf16-traffic ceiling.
+    v5e = dataclasses.replace(PLATFORMS["v5e"], fp_size=4)
 
     out = []
     for helm in (False, True):
-        variants = (("precomputed", {}), ("trilinear", {}),
-                    (("merged" if helm else "partial"), {}))
-        for vname, _ in variants:
+        for vname in (HELMHOLTZ_VARIANTS if helm else POISSON_VARIANTS):
+            mesh = par_mesh if vname == "parallelepiped" else tri_mesh
+            verts = jnp.asarray(mesh.verts, jnp.float32)
             kw = dict(lam0=lam0, lam1=lam1) if helm else {}
-            op = ax.make_axhelm(vname, b, verts, helmholtz=helm,
-                                dtype=jnp.float32, **kw)
-            fn = jax.jit(op.apply)
-            t = _time(fn, x)
             cost = axhelm_cost(n, d, helm, vname, fp_size=4)
-            out.append({
-                "equation": "helmholtz" if helm else "poisson",
-                "variant": vname,
-                "us_per_elem": t / e * 1e6,
-                "p_eff_gflops": cost.f_ax * e / t / 1e9,
-                "p_tot_gflops": cost.f_tot * e / t / 1e9,
-            })
-    return out
+            model = roofline(v5e, n, d, helm, vname)
+            for backend in backends:
+                op = ax.make_axhelm(vname, b, verts, helmholtz=helm,
+                                    dtype=jnp.float32, backend=backend,
+                                    block_elems=block_elems, **kw)
+                t = _time(jax.jit(op.apply), x, iters=iters)
+                p_eff = cost.f_ax * e / t / 1e9
+                out.append({
+                    "equation": "helmholtz" if helm else "poisson",
+                    "variant": vname,
+                    "backend": op.backend,
+                    "us_per_elem": t / e * 1e6,
+                    "p_eff_gflops": p_eff,
+                    "p_tot_gflops": cost.f_tot * e / t / 1e9,
+                    "model_bytes_per_elem": cost.m_bytes,
+                    "model_intensity": cost.f_tot / cost.m_bytes,
+                    "model_r_eff_gflops_v5e": model["r_eff"] / 1e9,
+                    "roofline_frac_v5e": p_eff / (model["r_eff"] / 1e9),
+                })
+    return out, {"e": e, "n": n, "d": d}
 
 
 def main():
-    print("# bench_axhelm (CPU wall, relative): eq,variant,us_per_elem,"
-          "p_eff_gflops,p_tot_gflops")
-    for r in rows():
-        print(f"bench_axhelm,{r['equation']},{r['variant']},"
-              f"{r['us_per_elem']:.2f},{r['p_eff_gflops']:.2f},"
-              f"{r['p_tot_gflops']:.2f}")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=7)
+    ap.add_argument("--e", type=int, default=512)
+    ap.add_argument("--d", type=int, default=1, choices=[1, 3])
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--backends", nargs="+",
+                    default=["reference", "pallas"],
+                    choices=["reference", "pallas", "auto"])
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the kernels/axhelm/tune.py block sweep per "
+                         "configuration before timing the pallas backend")
+    ap.add_argument("--quick", action="store_true",
+                    help="small problem for CI smoke (n=3, e=64, 2 iters)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_axhelm.json"))
+    args = ap.parse_args()
+    if args.quick:
+        args.n, args.e, args.iters = min(args.n, 3), min(args.e, 64), 2
+
+    r, info = rows(n=args.n, e=args.e, d=args.d,
+                   backends=tuple(args.backends), iters=args.iters,
+                   block_elems="auto" if args.autotune else None)
+
+    print("# bench_axhelm: " + ",".join(COLUMNS))
+    for row in r:
+        print("bench_axhelm," + ",".join(
+            f"{row[c]:.3f}" if isinstance(row[c], float) else str(row[c])
+            for c in COLUMNS))
+
+    payload = {
+        "bench": "axhelm",
+        "jax_backend": jax.default_backend(),
+        # info, not args: the mesh rounds the requested e to the 8x8xnz box
+        "config": {**info, "iters": args.iters, "autotune": args.autotune},
+        "rows": r,
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {out}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,8 @@ LINK_BW = 50e9             # bytes/s per ICI link
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
                        "dryrun.jsonl")
+BENCH_AXHELM = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_axhelm.json")
 
 
 def load_rows(path: Optional[str] = None) -> List[dict]:
@@ -114,7 +116,45 @@ def markdown_table(mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
+def load_axhelm(path: Optional[str] = None) -> List[dict]:
+    """Rows of BENCH_axhelm.json (written by benchmarks/bench_axhelm.py)."""
+    path = path or BENCH_AXHELM
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f).get("rows", [])
+
+
+def axhelm_markdown_table(rows: Optional[List[dict]] = None) -> str:
+    """Per-(variant, backend) bytes-moved and roofline-efficiency table.
+
+    `bytes/elem` and `R_eff` are the paper's Table 3-4 model on the v5e
+    platform (at the benchmark's word size); `eff` is measured P_eff over
+    that modeled ceiling — the recomputation variants must show smaller
+    bytes/elem than `precomputed` (the whole point of the paper) and, on
+    TPU, a higher achievable R_eff.
+    """
+    rows = load_axhelm() if rows is None else rows
+    lines = [
+        "| eq | variant | backend | us/elem | P_eff GF | bytes/elem | "
+        "intensity | R_eff(v5e) GF | eff |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['equation']} | {r['variant']} | {r['backend']} | "
+            f"{r['us_per_elem']:.2f} | {r['p_eff_gflops']:.2f} | "
+            f"{r['model_bytes_per_elem']:.0f} | {r['model_intensity']:.2f} | "
+            f"{r['model_r_eff_gflops_v5e']:.0f} | "
+            f"{r['roofline_frac_v5e']:.4f} |")
+    return "\n".join(lines)
+
+
 def main():
+    ax_rows = load_axhelm()
+    if ax_rows:
+        print("# axhelm variant/backend roofline (model: v5e)")
+        print(axhelm_markdown_table(ax_rows))
     for mesh in ("16x16", "2x16x16"):
         rows = table(mesh=mesh)
         if not rows:

@@ -5,7 +5,12 @@ chosen axhelm variant; prints GFLOPS / GDOFS / iterations / error.
 
 Run:  PYTHONPATH=src python examples/nekbone_solve.py \
           [--elements 4 4 4] [--order 7] [--variant trilinear] \
-          [--equation poisson] [--d 1] [--precision float32]
+          [--equation poisson] [--d 1] [--precision float32] \
+          [--backend auto] [--block-elems N|auto]
+
+--backend auto drives the Pallas axhelm kernel inside the PCG while_loop
+(interpret mode off-TPU) for fp32/bf16 and the jnp reference for fp64;
+--block-elems auto runs the per-configuration block autotuner first.
 """
 
 import argparse
@@ -31,9 +36,19 @@ def main():
     ap.add_argument("--d", type=int, default=1, choices=[1, 3])
     ap.add_argument("--precision", default="float32",
                     choices=["float32", "float64"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "pallas"],
+                    help="element kernel: pallas (TPU kernels; interpret "
+                         "mode off-TPU), reference (pure jnp), or auto")
+    ap.add_argument("--block-elems", default=None,
+                    help="Pallas VMEM block size (int), or 'auto' to "
+                         "autotune per (variant, N, d, dtype)")
     ap.add_argument("--tol", type=float, default=1e-8)
     ap.add_argument("--max-iter", type=int, default=400)
     args = ap.parse_args()
+    block_elems = args.block_elems
+    if block_elems is not None and block_elems != "auto":
+        block_elems = int(block_elems)
 
     if args.precision == "float64":
         jax.config.update("jax_enable_x64", True)
@@ -53,7 +68,10 @@ def main():
           f"variant={args.variant} eq={args.equation} d={args.d}")
 
     prob = nekbone.setup_problem(mesh, variant=args.variant, d=args.d,
-                                 helmholtz=helm, dtype=dtype)
+                                 helmholtz=helm, dtype=dtype,
+                                 backend=args.backend,
+                                 block_elems=block_elems)
+    print(f"backend={prob.backend}")
     rng = np.random.default_rng(0)
     shape = (mesh.n_global,) if args.d == 1 else (mesh.n_global, args.d)
     x_true = jnp.asarray(rng.standard_normal(shape), dtype)

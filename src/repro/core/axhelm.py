@@ -31,6 +31,7 @@ from repro.core.spectral import SpectralBasis
 
 __all__ = [
     "VARIANTS",
+    "BACKENDS",
     "axhelm_precomputed",
     "axhelm_trilinear",
     "axhelm_parallelepiped",
@@ -49,7 +50,7 @@ def _expand(a: Optional[jnp.ndarray], x: jnp.ndarray) -> Optional[jnp.ndarray]:
     """Broadcast a per-node factor (E, N1, N1, N1[, 6]) against x's d axis."""
     if a is None or x.ndim == 4:
         return a
-    return a[:, None] if a is not None else None
+    return a[:, None]
 
 
 def _core(x: jnp.ndarray, g: jnp.ndarray, dhat: jnp.ndarray,
@@ -132,24 +133,10 @@ def _adjugate_factors(verts: jnp.ndarray, basis: SpectralBasis) -> jnp.ndarray:
     """adj(K~) of the unscaled Jacobian, packed (..., N1,N1,N1, 6).
 
     This is the division-free part of Algorithm 3 shared by the merged and
-    partial variants.
+    partial variants (single implementation: geometry.adjugate6).
     """
-    jt = geometry.jacobian_trilinear(verts, basis, unscaled=True)
-    j = jt
-    k00 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 0])
-    k01 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 1])
-    k02 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 2])
-    k11 = jnp.einsum("...a,...a->...", j[..., :, 1], j[..., :, 1])
-    k12 = jnp.einsum("...a,...a->...", j[..., :, 1], j[..., :, 2])
-    k22 = jnp.einsum("...a,...a->...", j[..., :, 2], j[..., :, 2])
-    return jnp.stack([
-        k11 * k22 - k12 * k12,
-        k02 * k12 - k01 * k22,
-        k01 * k12 - k02 * k11,
-        k00 * k22 - k02 * k02,
-        k01 * k02 - k00 * k12,
-        k00 * k11 - k01 * k01,
-    ], axis=-1)
+    return geometry.adjugate6(
+        geometry.jacobian_trilinear(verts, basis, unscaled=True))
 
 
 def axhelm_merged(x: jnp.ndarray, verts: jnp.ndarray, basis: SpectralBasis,
@@ -211,6 +198,78 @@ class AxhelmOp(NamedTuple):
     factors: Optional[GeomFactors]  # precomputed factors when available
     variant: str
     helmholtz: bool
+    backend: str = "reference"
+
+
+BACKENDS = ("reference", "pallas", "auto")
+BACKEND_ENV = "REPRO_AXHELM_BACKEND"
+
+
+def _resolve_backend(backend: Optional[str], dtype) -> str:
+    """Map backend choice (or the REPRO_AXHELM_BACKEND env default) to a
+    concrete implementation.
+
+    "auto" picks the Pallas kernels whenever the dtype fits the MXU (fp32 /
+    bf16 — the kernels accumulate in fp32; off-TPU they run in interpret
+    mode so CPU CI exercises the same code path) and falls back to the
+    pure-jnp reference for fp64, which the TPU MXU cannot compute anyway.
+    """
+    import os
+
+    if backend is None:
+        backend = os.environ.get(BACKEND_ENV, "reference")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown axhelm backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if backend == "auto":
+        backend = "reference" if jnp.dtype(dtype).itemsize > 4 else "pallas"
+    return backend
+
+
+def _node_field(a, dtype, node_shape) -> Optional[jnp.ndarray]:
+    """Broadcast an optional scalar/field lambda to a per-node (E, N1^3)
+    array (the Pallas kernels take per-node operands only)."""
+    if a is None:
+        return None
+    return jnp.broadcast_to(jnp.asarray(a, dtype=dtype), node_shape)
+
+
+def _make_pallas_apply(variant: str, basis: SpectralBasis, verts, factors,
+                       lam0, lam1, helmholtz: bool, dtype, block_elems,
+                       interpret):
+    """Assemble the per-variant geometry operand once and close over the
+    Pallas entry point (repro.kernels.axhelm.ops.axhelm)."""
+    from repro.kernels.axhelm import ops as kops
+
+    node_shape = verts.shape[:-2] + (basis.n1,) * 3
+    l0 = _node_field(lam0, dtype, node_shape)
+    l1 = _node_field(lam1, dtype, node_shape)
+
+    if variant == "precomputed":
+        geom = jnp.concatenate([factors.g, factors.gwj[..., None]], axis=-1)
+    elif variant == "parallelepiped":
+        from repro.kernels.axhelm.ref import gelem_from_verts
+        geom = gelem_from_verts(verts)
+    elif variant == "merged":
+        geom = verts
+        l0, l1 = setup_merged_lambdas(
+            verts, basis,
+            jnp.ones(node_shape, dtype) if l0 is None else l0,
+            jnp.ones(node_shape, dtype) if l1 is None else l1)
+    elif variant == "partial":
+        geom = verts
+        l0, l1 = setup_partial_gscale(verts, basis), None
+    else:  # trilinear
+        geom = verts
+
+    kw = {}
+    if variant not in ("merged", "partial"):
+        kw["helmholtz"] = helmholtz
+
+    def apply(x):
+        return kops.axhelm(x, basis, variant, geom, lam0=l0, lam1=l1,
+                           block_elems=block_elems, interpret=interpret, **kw)
+    return apply
 
 
 def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
@@ -218,16 +277,30 @@ def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
                 lam0: Optional[jnp.ndarray] = None,
                 lam1: Optional[jnp.ndarray] = None,
                 helmholtz: bool = False,
-                dtype=jnp.float64) -> AxhelmOp:
+                dtype=jnp.float64,
+                backend: Optional[str] = None,
+                block_elems=None,
+                interpret: Optional[bool] = None) -> AxhelmOp:
     """Build an axhelm closure for a mesh (one-time setup outside the solve).
 
     `coords` (physical node coordinates) is required for the `precomputed`
     variant on general meshes; for trilinear meshes it is derived from verts.
+
+    `backend` selects the element-kernel implementation: "reference" (pure
+    jnp, any dtype), "pallas" (the TPU kernels in repro.kernels.axhelm;
+    interpret mode off-TPU), or "auto" (pallas for fp32/bf16, reference for
+    fp64).  Default: the REPRO_AXHELM_BACKEND env var, else "reference".
+    `block_elems`/`interpret` are forwarded to the Pallas path (see
+    kernels/axhelm/ops.axhelm; block_elems="auto" invokes the autotuner).
     """
     if variant not in VARIANTS:
         raise ValueError(f"unknown axhelm variant {variant!r}")
+    backend = _resolve_backend(backend, dtype)
     dhat = jnp.asarray(basis.dhat, dtype=dtype)
     verts = jnp.asarray(verts, dtype=dtype)
+    if backend == "pallas":
+        return _make_axhelm_pallas(variant, basis, verts, coords, lam0, lam1,
+                                   helmholtz, dtype, block_elems, interpret)
 
     if variant == "precomputed":
         if coords is None:
@@ -275,3 +348,35 @@ def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
         return axhelm_partial(x, verts, basis, dhat, gscale)
     return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
                     variant, helmholtz)
+
+
+def _make_axhelm_pallas(variant: str, basis: SpectralBasis, verts, coords,
+                        lam0, lam1, helmholtz: bool, dtype, block_elems,
+                        interpret) -> AxhelmOp:
+    """Pallas-backed AxhelmOp: same setup products (factors for the Jacobi
+    diagonal), apply() drives the TPU kernel."""
+    if jnp.dtype(dtype).itemsize > 4:
+        import warnings
+
+        warnings.warn(
+            "axhelm backend='pallas' computes in fp32 (no fp64 MXU); "
+            f"requested dtype {jnp.dtype(dtype).name} will not gain "
+            "precision — use backend='reference' for fp64 solves, or "
+            "loosen the PCG tolerance to fp32 levels (>= ~1e-6)",
+            stacklevel=3)
+    if variant == "merged" and not helmholtz:
+        raise ValueError("merged scalar factors apply to Helmholtz only")
+    if variant == "partial" and helmholtz:
+        raise ValueError("partial recalculation applies to Poisson only")
+    if variant == "precomputed":
+        if coords is None:
+            coords = geometry.node_coords(verts, basis)
+        factors = geometry.factors_discrete(jnp.asarray(coords, dtype=dtype),
+                                            basis)
+    elif variant == "parallelepiped":
+        factors = geometry.factors_parallelepiped(verts, basis)
+    else:
+        factors = geometry.factors_trilinear(verts, basis)
+    apply = _make_pallas_apply(variant, basis, verts, factors, lam0, lam1,
+                               helmholtz, dtype, block_elems, interpret)
+    return AxhelmOp(apply, factors, variant, helmholtz, "pallas")

@@ -38,13 +38,16 @@ from repro.core.spectral import SpectralBasis
 __all__ = [
     "GeomFactors",
     "TrilinearTerms",
+    "reference_cube",
     "trilinear_map",
     "reference_nodes",
     "node_coords",
     "trilinear_terms",
     "jacobian_trilinear",
+    "jacobian_trilinear_at",
     "jacobian_parallelepiped",
     "jacobian_discrete",
+    "adjugate6",
     "factors_from_jacobian",
     "factors_trilinear",
     "factors_parallelepiped",
@@ -54,6 +57,18 @@ __all__ = [
 
 # True J = JT_SCALE * Jt for the trilinear analytic path.
 JT_SCALE = 0.125
+
+
+def reference_cube(dtype=None) -> jnp.ndarray:
+    """The [-1, 1]^3 reference element's 8 vertices, (8, 3), in the
+    Definition 2 bit order (vertex i = br + 2*bs + 4*bt).
+
+    The canonical non-degenerate element: used to pad dead elements in the
+    Pallas kernels (det(J~) != 0) and as the autotuner's synthetic mesh.
+    """
+    v = np.array([[(i & 1) * 2 - 1, ((i >> 1) & 1) * 2 - 1,
+                   ((i >> 2) & 1) * 2 - 1] for i in range(8)], np.float64)
+    return jnp.asarray(v, dtype=dtype)
 
 
 class GeomFactors(NamedTuple):
@@ -157,17 +172,18 @@ def trilinear_terms(verts: jnp.ndarray, xi: jnp.ndarray) -> TrilinearTerms:
     return TrilinearTerms(e0, e1, f0, f1, jcol2)
 
 
-def jacobian_trilinear(verts: jnp.ndarray, basis: SpectralBasis,
-                       unscaled: bool = False) -> jnp.ndarray:
-    """Analytic Jacobian at every GLL node: (..., N1, N1, N1, 3, 3).
+def jacobian_trilinear_at(verts: jnp.ndarray, xi: jnp.ndarray) -> jnp.ndarray:
+    """Unscaled analytic Jacobian J~ at every GLL node (Alg. 3 assembly).
 
     Assembled from the Algorithm 3 terms: at node (k, j, i),
         Jt[:, 0] = e0[j] + xi_k e1[j]
         Jt[:, 1] = f0[i] + xi_k f1[i]
         Jt[:, 2] = jcol2[j, i]
     (12 FLOPs per node for columns 0-1, column 2 broadcast over k).
+    The single implementation shared by the reference operator, the Pallas
+    kernel body, and the kernel oracle.  verts: (..., 8, 3); xi: (N1,)
+    array already in verts' dtype.  Returns (..., N1, N1, N1, 3, 3).
     """
-    xi = jnp.asarray(basis.points, dtype=verts.dtype)
     terms = trilinear_terms(verts, xi)
     t = xi[:, None, None, None]                       # (N1_k, 1, 1, 1)
     e0 = terms.e0[..., None, :, None, :]              # (..., 1, N1_j, 1, 3)
@@ -177,11 +193,45 @@ def jacobian_trilinear(verts: jnp.ndarray, basis: SpectralBasis,
     col0 = e0 + t * e1                                # (..., N1_k, N1_j, 1, 3)
     col1 = f0 + t * f1                                # (..., N1_k, 1, N1_i, 3)
     col2 = terms.jcol2[..., None, :, :, :]            # (..., 1, N1_j, N1_i, 3)
-    full = verts.shape[:-2] + (basis.n1,) * 3 + (3,)
-    jt = jnp.stack([jnp.broadcast_to(col0, full),
-                    jnp.broadcast_to(col1, full),
-                    jnp.broadcast_to(col2, full)], axis=-1)
+    n1 = xi.shape[0]
+    full = verts.shape[:-2] + (n1,) * 3 + (3,)
+    return jnp.stack([jnp.broadcast_to(col0, full),
+                      jnp.broadcast_to(col1, full),
+                      jnp.broadcast_to(col2, full)], axis=-1)
+
+
+def jacobian_trilinear(verts: jnp.ndarray, basis: SpectralBasis,
+                       unscaled: bool = False) -> jnp.ndarray:
+    """Analytic Jacobian at every GLL node: (..., N1, N1, N1, 3, 3)."""
+    xi = jnp.asarray(basis.points, dtype=verts.dtype)
+    jt = jacobian_trilinear_at(verts, xi)
     return jt if unscaled else JT_SCALE * jt
+
+
+def adjugate6(j: jnp.ndarray) -> jnp.ndarray:
+    """adj(K) of K = j^T j, packed (..., 6): [a00,a01,a02,a11,a12,a22].
+
+    Division- and determinant-free (paper Eq. 17's numerator) — the §4.1
+    merged/partial hot loops stop here.  Written with explicit component
+    sums (no einsum) so the same code lowers cleanly inside Pallas kernel
+    bodies.
+    """
+    c0, c1, c2 = j[..., :, 0], j[..., :, 1], j[..., :, 2]
+
+    def dot3(a, b):
+        return (a[..., 0] * b[..., 0] + a[..., 1] * b[..., 1]
+                + a[..., 2] * b[..., 2])
+
+    k00, k01, k02 = dot3(c0, c0), dot3(c0, c1), dot3(c0, c2)
+    k11, k12, k22 = dot3(c1, c1), dot3(c1, c2), dot3(c2, c2)
+    return jnp.stack([
+        k11 * k22 - k12 * k12,
+        k02 * k12 - k01 * k22,
+        k01 * k12 - k02 * k11,
+        k00 * k22 - k02 * k02,
+        k01 * k02 - k00 * k12,
+        k00 * k11 - k01 * k01,
+    ], axis=-1)
 
 
 def jacobian_parallelepiped(verts: jnp.ndarray) -> jnp.ndarray:
@@ -222,23 +272,11 @@ def factors_from_jacobian(j: jnp.ndarray, w3: jnp.ndarray,
     Uses K = j^T j and  w |J| J^-1 J^-T = w * scale * adj(K) / det(j)
     (adjugate trick, Eq. 17, with the deferred-scale algebra of Alg. 3).
     """
-    k00 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 0])
-    k01 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 1])
-    k02 = jnp.einsum("...a,...a->...", j[..., :, 0], j[..., :, 2])
-    k11 = jnp.einsum("...a,...a->...", j[..., :, 1], j[..., :, 1])
-    k12 = jnp.einsum("...a,...a->...", j[..., :, 1], j[..., :, 2])
-    k22 = jnp.einsum("...a,...a->...", j[..., :, 2], j[..., :, 2])
     det = (j[..., 0, 0] * (j[..., 1, 1] * j[..., 2, 2] - j[..., 2, 1] * j[..., 1, 2])
            - j[..., 1, 0] * (j[..., 0, 1] * j[..., 2, 2] - j[..., 2, 1] * j[..., 0, 2])
            + j[..., 2, 0] * (j[..., 0, 1] * j[..., 1, 2] - j[..., 1, 1] * j[..., 0, 2]))
     gscale = scale * w3 / det
-    g00 = (k11 * k22 - k12 * k12) * gscale
-    g01 = (k02 * k12 - k01 * k22) * gscale
-    g02 = (k01 * k12 - k02 * k11) * gscale
-    g11 = (k00 * k22 - k02 * k02) * gscale
-    g12 = (k01 * k02 - k00 * k12) * gscale
-    g22 = (k00 * k11 - k01 * k01) * gscale
-    g = jnp.stack([g00, g01, g02, g11, g12, g22], axis=-1)
+    g = adjugate6(j) * gscale[..., None]
     gwj = w3 * (scale ** 3) * det
     return GeomFactors(g, gwj)
 

@@ -33,6 +33,7 @@ class NekboneProblem(NamedTuple):
     d: int
     helmholtz: bool
     variant: str
+    backend: str = "reference"
 
 
 def _global_op(element_op, mesh: BoxMesh, mask, d: int):
@@ -66,8 +67,17 @@ def _global_op(element_op, mesh: BoxMesh, mask, d: int):
 def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
                   helmholtz: bool = False, lam0=None, lam1=None,
                   dirichlet: bool | None = None,
-                  dtype=jnp.float32) -> NekboneProblem:
-    """Build the global operator + Jacobi diagonal for a mesh/variant."""
+                  dtype=jnp.float32,
+                  backend: str | None = None,
+                  block_elems=None,
+                  interpret: bool | None = None) -> NekboneProblem:
+    """Build the global operator + Jacobi diagonal for a mesh/variant.
+
+    `backend` selects the element-kernel implementation ("reference",
+    "pallas", or "auto"; see core.axhelm.make_axhelm) — with "pallas" the
+    PCG while_loop drives the Pallas kernel every iteration.  `block_elems`
+    and `interpret` are forwarded to the Pallas path ("auto" autotunes).
+    """
     b = make_basis(mesh.order)
     verts = jnp.asarray(mesh.verts, dtype=dtype)
     if helmholtz and lam1 is None:
@@ -75,7 +85,9 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     if helmholtz and lam0 is None:
         lam0 = jnp.asarray(1.0, dtype=dtype)
     op = axhelm_mod.make_axhelm(variant, b, verts, lam0=lam0, lam1=lam1,
-                                helmholtz=helmholtz, dtype=dtype)
+                                helmholtz=helmholtz, dtype=dtype,
+                                backend=backend, block_elems=block_elems,
+                                interpret=interpret)
     if dirichlet is None:
         dirichlet = not helmholtz  # Poisson needs the mask to be SPD
     mask = jnp.asarray(mesh.boundary) if dirichlet else None
@@ -98,7 +110,8 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     if mask is not None:
         m = mask if d == 1 else mask[:, None]
         diag = jnp.where(m, 1.0, diag)
-    return NekboneProblem(apply, diag, mask, mesh, b, d, helmholtz, variant)
+    return NekboneProblem(apply, diag, mask, mesh, b, d, helmholtz, variant,
+                          op.backend)
 
 
 def rhs_from_solution(problem: NekboneProblem, x_true: jnp.ndarray) -> jnp.ndarray:

@@ -48,25 +48,31 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     z = precond(r)
     p = z
     rz = dot(r, z)
-    r0 = jnp.sqrt(dot(r, r))
+    rr = dot(r, r)
+    r0 = jnp.sqrt(rr)
     tol2 = (tol * tol)
 
+    # rr = dot(r, r) is carried in the state: the reduction happens in the
+    # body where r is produced, and cond reads the carried scalar — cond is
+    # free of cross-element communication (and the trailing evaluation at
+    # loop exit costs nothing), instead of re-reducing r on every check.
     def cond(state):
-        _, r, _, _, rz, it = state
-        return jnp.logical_and(it < max_iter, dot(r, r) > tol2)
+        _, _, _, _, _, rr, it = state
+        return jnp.logical_and(it < max_iter, rr > tol2)
 
     def body(state):
-        x, r, z, p, rz, it = state
+        x, r, z, p, rz, _, it = state
         ap = a_op(p)
         alpha = rz / dot(p, ap)
         x = x + alpha * p
         r = r - alpha * ap
         z = precond(r)
         rz_new = dot(r, z)
+        rr_new = dot(r, r)
         beta = rz_new / rz
         p = z + beta * p
-        return (x, r, z, p, rz_new, it + 1)
+        return (x, r, z, p, rz_new, rr_new, it + 1)
 
-    state = (x, r, z, p, rz, jnp.array(0, dtype=jnp.int32))
-    x, r, _, _, _, it = jax.lax.while_loop(cond, body, state)
-    return PCGResult(x, it, jnp.sqrt(dot(r, r)), r0)
+    state = (x, r, z, p, rz, rr, jnp.array(0, dtype=jnp.int32))
+    x, r, _, _, _, rr, it = jax.lax.while_loop(cond, body, state)
+    return PCGResult(x, it, jnp.sqrt(rr), r0)

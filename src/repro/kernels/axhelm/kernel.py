@@ -13,7 +13,11 @@ TPU adaptation of the paper's GPU kernels (see DESIGN.md §3):
   * the on-the-fly trilinear recalculation (paper Algorithm 3) runs *inside*
     the kernel on the (EB, 8, 3) vertex block — geometry traffic drops from
     (6+isHelm)*N1^3 words/element to 24 words/element, exactly the paper's
-    trade.
+    trade,
+  * the merged (§4.1.1) and partial (§4.1.2) variants reuse the same
+    in-kernel Jacobian block but stop at adj(K~) — no division and no
+    determinant in the hot loop; the 1/det lives in the precomputed
+    Lam2/gScale operand carried in the lam0/lam1 slots (DESIGN.md §4).
 
 Compute is fp32 (TPU has no fp64 MXU; DESIGN.md §7); accumulation is forced
 fp32 via `preferred_element_type` even for bf16 inputs.
@@ -89,19 +93,12 @@ def _apply_factors(xr, xs, xt, g6, lam0):
 
 
 def _trilinear_factors_block(verts, xi, w3):
-    """Vectorized paper Algorithm 3 on an (EB, 8, 3) vertex block -> (g, gwj)."""
-    terms = geometry.trilinear_terms(verts, xi)
-    t = xi[:, None, None, None]
-    e0 = terms.e0[..., None, :, None, :]
-    e1 = terms.e1[..., None, :, None, :]
-    f0 = terms.f0[..., None, None, :, :]
-    f1 = terms.f1[..., None, None, :, :]
-    n1 = xi.shape[0]
-    full = verts.shape[:-2] + (n1,) * 3 + (3,)
-    jt = jnp.stack([jnp.broadcast_to(e0 + t * e1, full),
-                    jnp.broadcast_to(f0 + t * f1, full),
-                    jnp.broadcast_to(terms.jcol2[..., None, :, :, :], full)],
-                   axis=-1)
+    """Vectorized paper Algorithm 3 on an (EB, 8, 3) vertex block -> (g, gwj).
+
+    The in-kernel recalculation (geometry.jacobian_trilinear_at) replaces
+    6(+1)*N1^3 words of geometry traffic with 24 words of vertices.
+    """
+    jt = geometry.jacobian_trilinear_at(verts, xi)
     return geometry.factors_from_jacobian(jt, w3, scale=geometry.JT_SCALE)
 
 
@@ -112,7 +109,7 @@ def _kernel(*refs, variant: str, helmholtz: bool, has_lam0: bool,
     out_ref = refs[-1]
     dhat = next(it)[...].astype(_F32)
 
-    g6 = gwj = None
+    g6 = gwj = adj = None
     if variant == "precomputed":
         g6 = next(it)[...].astype(_F32)
         if helmholtz:
@@ -128,12 +125,27 @@ def _kernel(*refs, variant: str, helmholtz: bool, has_lam0: bool,
         gelem = next(it)[...].astype(_F32)             # (EB, 7)
         g6 = gelem[:, None, None, None, :6] * w3[None, ..., None]
         gwj = gelem[:, None, None, None, 6] * w3[None]
+    elif variant in ("merged", "partial"):
+        xi = next(it)[...].astype(_F32)[:, 0]
+        verts = next(it)[...].astype(_F32)
+        # the division/determinant-free half of Alg. 3 (DESIGN.md §3)
+        adj = geometry.adjugate6(geometry.jacobian_trilinear_at(verts, xi))
     else:
         raise ValueError(variant)
 
     x = next(it)[...].astype(_F32)                     # (EB, d, N1, N1, N1)
     lam0 = next(it)[...].astype(_F32) if has_lam0 else None
     lam1 = next(it)[...].astype(_F32) if has_lam1 else None
+
+    if variant == "merged":
+        # §4.1.1: lam0 slot carries Lam2 = gScale*lambda0, lam1 slot carries
+        # Lam3 = GwJ*lambda1 — both precomputed, so no det/div in this loop.
+        g6 = adj * lam0[..., None]
+        gwj, lam0, lam1 = lam1, None, None             # mass = Lam3 directly
+    elif variant == "partial":
+        # §4.1.2: lam0 slot carries gScale = w3/(8 det), re-read from memory.
+        g6 = adj * lam0[..., None]
+        lam0 = None
 
     eb, n1 = x.shape[0], x.shape[-1]
     xb = x.reshape(eb * d, n1, n1, n1)
@@ -160,6 +172,12 @@ def build_axhelm_call(variant: str, *, e_total: int, d: int, n1: int,
     """
     if e_total % block_elems != 0:
         raise ValueError("e_total must be padded to a multiple of block_elems")
+    if variant == "merged" and not (helmholtz and has_lam0 and has_lam1):
+        raise ValueError("merged requires helmholtz=True with Lam2 (lam0 "
+                         "slot) and Lam3 (lam1 slot) operands")
+    if variant == "partial" and (helmholtz or not has_lam0 or has_lam1):
+        raise ValueError("partial is Poisson-only with a gScale operand in "
+                         "the lam0 slot")
     eb = block_elems
     grid = (e_total // eb,)
 
@@ -182,6 +200,9 @@ def build_axhelm_call(variant: str, *, e_total: int, d: int, n1: int,
     elif variant == "parallelepiped":
         in_specs += [bcast((n1, n1, n1)), per_elem(7)]
         names += ["w3", "gelem"]
+    elif variant in ("merged", "partial"):
+        in_specs += [bcast((n1, 1)), per_elem(8, 3)]
+        names += ["xi", "verts"]
     else:
         raise ValueError(variant)
 

@@ -17,23 +17,15 @@ import numpy as np
 from repro.core import geometry
 from repro.core.spectral import SpectralBasis
 from repro.kernels.axhelm import ref as ref_mod
+from repro.kernels.axhelm import tune
 from repro.kernels.axhelm.kernel import build_axhelm_call
+from repro.kernels.axhelm.tune import default_block_elems  # noqa: F401
 
-__all__ = ["axhelm", "default_block_elems"]
+__all__ = ["axhelm", "reference", "default_block_elems"]
 
-
-def default_block_elems(n1: int, d: int) -> int:
-    """Pick EB so a block's X tile is ~MXU/VPU sized but VMEM-light.
-
-    Target ~64-128 rows of (EB*d*N1^2, N1) in the contraction matmuls and a
-    VMEM footprint of a few hundred KiB per operand.
-    """
-    rows_per_elem = d * n1 * n1
-    eb = max(1, int(np.ceil(128 / rows_per_elem)))
-    # keep X block under ~1 MiB fp32
-    while eb > 1 and eb * d * n1**3 * 4 > 1 << 20:
-        eb //= 2
-    return eb
+# Variants whose geometry operand is the (E, 8, 3) vertex block and whose
+# factors are recalculated in-kernel from the trilinear Jacobian.
+_VERTS_VARIANTS = ("trilinear", "merged", "partial")
 
 
 def _should_interpret(interpret: Optional[bool]) -> bool:
@@ -60,12 +52,10 @@ def _axhelm_impl(x, dhat, xi2, w3, geom_operand, lam0, lam1, *, variant,
 
     xp = pad_e(x)
     geom_p = geom_operand
-    if variant == "trilinear":
+    if variant in _VERTS_VARIANTS:
         # pad with the reference cube so det(J) != 0 in dead elements
         if pad:
-            ref_verts = jnp.asarray(
-                [[(i & 1) * 2 - 1, ((i >> 1) & 1) * 2 - 1, ((i >> 2) & 1) * 2 - 1]
-                 for i in range(8)], dtype=geom_operand.dtype)
+            ref_verts = geometry.reference_cube(geom_operand.dtype)
             geom_p = jnp.concatenate(
                 [geom_operand, jnp.broadcast_to(ref_verts, (pad, 8, 3))], axis=0)
     elif variant == "parallelepiped":
@@ -91,6 +81,8 @@ def _axhelm_impl(x, dhat, xi2, w3, geom_operand, lam0, lam1, *, variant,
             operands.append(geom_p[..., 6])
     elif variant == "trilinear":
         operands += [xi2, w3, geom_p]
+    elif variant in ("merged", "partial"):
+        operands += [xi2, geom_p]
     else:  # parallelepiped
         operands += [w3, geom_p]
     operands.append(xp)
@@ -108,7 +100,7 @@ def axhelm(x: jnp.ndarray, basis: SpectralBasis, variant: str,
            lam0: Optional[jnp.ndarray] = None,
            lam1: Optional[jnp.ndarray] = None,
            helmholtz: bool = False,
-           block_elems: Optional[int] = None,
+           block_elems=None,
            interpret: Optional[bool] = None) -> jnp.ndarray:
     """Apply axhelm via the Pallas kernel.
 
@@ -117,13 +109,41 @@ def axhelm(x: jnp.ndarray, basis: SpectralBasis, variant: str,
           precomputed:    (E, N1,N1,N1, 7)   [g00..g22, gwj] packed
           trilinear:      (E, 8, 3)          vertices
           parallelepiped: (E, 7)             per-element scalars
+          merged:         (E, 8, 3)          vertices; lam0=Lam2, lam1=Lam3
+                          (setup_merged_lambdas products, paper §4.1.1)
+          partial:        (E, 8, 3)          vertices; lam0=gScale
+                          (setup_partial_gscale product, paper §4.1.2)
+    block_elems: int for a fixed VMEM block, None for the cached/heuristic
+          choice, or "auto" to run the tune.py sweep once per configuration.
     """
+    if variant == "merged":
+        if lam0 is None or lam1 is None:
+            raise ValueError("merged requires lam0=Lam2 and lam1=Lam3 "
+                             "(see core.axhelm.setup_merged_lambdas)")
+        helmholtz = True
+    elif variant == "partial":
+        if lam0 is None or lam1 is not None:
+            raise ValueError("partial requires lam0=gScale and lam1=None "
+                             "(see core.axhelm.setup_partial_gscale)")
+        helmholtz = False
     squeeze = x.ndim == 4
     if squeeze:
         x = x[:, None]
     n1 = basis.n1
     d = x.shape[1]
-    eb = block_elems or default_block_elems(n1, d)
+    if isinstance(block_elems, str):
+        if block_elems != "auto":
+            raise ValueError(f"block_elems must be an int, None or 'auto', "
+                             f"got {block_elems!r}")
+        eb = tune.get_block_elems(variant, n1, d, x.dtype,
+                                  helmholtz=helmholtz, e_total=x.shape[0],
+                                  autotune_now=True, interpret=interpret)
+    elif block_elems is None:
+        eb = tune.get_block_elems(variant, n1, d, x.dtype,
+                                  helmholtz=helmholtz, e_total=x.shape[0],
+                                  interpret=interpret)
+    else:
+        eb = int(block_elems)
     dt = x.dtype
     dhat = jnp.asarray(basis.dhat, dtype=dt)
     xi2 = jnp.asarray(basis.points, dtype=dt)[:, None]
@@ -153,6 +173,10 @@ def reference(x, basis: SpectralBasis, variant: str, geom, lam0=None,
     elif variant == "parallelepiped":
         y = ref_mod.axhelm_parallelepiped(x, geom, w3, dhat, lam0, lam1,
                                           helmholtz)
+    elif variant == "merged":
+        y = ref_mod.axhelm_merged(x, geom, xi, dhat, lam0, lam1)
+    elif variant == "partial":
+        y = ref_mod.axhelm_partial(x, geom, xi, dhat, lam0)
     else:
         raise ValueError(variant)
     return y[:, 0] if squeeze else y

@@ -50,21 +50,29 @@ def axhelm_trilinear(x: jnp.ndarray, verts: jnp.ndarray, xi: jnp.ndarray,
                      lam1: Optional[jnp.ndarray] = None,
                      helmholtz: bool = False) -> jnp.ndarray:
     """Paper Alg. 3 (on-the-fly recalc) oracle. verts: (E, 8, 3)."""
-    terms = geometry.trilinear_terms(verts, xi)
-    t = xi[:, None, None, None]
-    e0 = terms.e0[..., None, :, None, :]
-    e1 = terms.e1[..., None, :, None, :]
-    f0 = terms.f0[..., None, None, :, :]
-    f1 = terms.f1[..., None, None, :, :]
-    n1 = xi.shape[0]
-    full = verts.shape[:-2] + (n1,) * 3 + (3,)
-    jt = jnp.stack([jnp.broadcast_to(e0 + t * e1, full),
-                    jnp.broadcast_to(f0 + t * f1, full),
-                    jnp.broadcast_to(terms.jcol2[..., None, :, :, :], full)],
-                   axis=-1)
+    jt = geometry.jacobian_trilinear_at(verts, xi)
     factors = geometry.factors_from_jacobian(jt, w3, scale=geometry.JT_SCALE)
     return axhelm_precomputed(x, factors.g, factors.gwj, dhat, lam0, lam1,
                               helmholtz)
+
+
+def axhelm_merged(x: jnp.ndarray, verts: jnp.ndarray, xi: jnp.ndarray,
+                  dhat: jnp.ndarray, lam2: jnp.ndarray,
+                  lam3: jnp.ndarray) -> jnp.ndarray:
+    """Paper §4.1.1 (Helmholtz) oracle: G = adj(K~)*Lam2, mass = Lam3.
+
+    lam2 = gScale*lambda0 and lam3 = GwJ*lambda1 are precomputed once
+    outside the solve (core.axhelm.setup_merged_lambdas).
+    """
+    adj = geometry.adjugate6(geometry.jacobian_trilinear_at(verts, xi))
+    return _core(x, adj * lam2[..., None], dhat, mass=lam3)
+
+
+def axhelm_partial(x: jnp.ndarray, verts: jnp.ndarray, xi: jnp.ndarray,
+                   dhat: jnp.ndarray, gscale: jnp.ndarray) -> jnp.ndarray:
+    """Paper §4.1.2 (Poisson) oracle: recompute adj(K~), re-read gScale."""
+    adj = geometry.adjugate6(geometry.jacobian_trilinear_at(verts, xi))
+    return _core(x, adj * gscale[..., None], dhat)
 
 
 def axhelm_parallelepiped(x: jnp.ndarray, gelem: jnp.ndarray, w3: jnp.ndarray,

@@ -1,0 +1,276 @@
+"""Per-configuration block-size autotuner for the Pallas axhelm kernels.
+
+The paper tunes its CUDA kernels per polynomial order N (thread layout,
+k-layer unrolling); the TPU translation has a single knob — ``block_elems``,
+the number of elements resident in VMEM per grid step.  This module replaces
+the static heuristic with measurement:
+
+  1. enumerate VMEM-feasible ``block_elems`` candidates for a
+     ``(variant, n1, d, dtype, helmholtz)`` configuration,
+  2. time each candidate once on synthetic data,
+  3. cache the winner in-process *and* in a JSON file keyed by backend
+     (``tpu`` / ``cpu`` / ``...-interpret``), so later processes skip the
+     sweep — see DESIGN.md for the cache format.
+
+Autotuning is opt-in (``block_elems="auto"`` on the ops/axhelm entry points
+or an explicit :func:`autotune` call); the default resolution order is
+in-process cache -> JSON cache -> :func:`default_block_elems` heuristic, so
+untuned call sites never pay a timing sweep.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "default_block_elems",
+    "block_vmem_bytes",
+    "feasible_block_elems",
+    "get_block_elems",
+    "autotune",
+    "cache_path",
+]
+
+# Half of a v5e core's ~16 MiB VMEM: leave headroom for Pallas' pipelining
+# (double-buffered operand windows) and compiler temporaries.
+VMEM_BUDGET_BYTES = 8 << 20
+_CANDIDATES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+CACHE_ENV = "REPRO_AXHELM_TUNE_CACHE"
+_DEFAULT_CACHE = os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                              "axhelm_tune.json")
+
+_MEM_CACHE: Dict[Tuple[str, str], int] = {}
+_LOCK = threading.Lock()
+
+
+def default_block_elems(n1: int, d: int) -> int:
+    """Static fallback: EB so the contraction matmuls see ~128 rows but the
+    X block stays under ~1 MiB fp32 (the pre-autotuner heuristic)."""
+    rows_per_elem = d * n1 * n1
+    eb = max(1, int(np.ceil(128 / rows_per_elem)))
+    while eb > 1 and eb * d * n1**3 * 4 > 1 << 20:
+        eb //= 2
+    return eb
+
+
+def block_vmem_bytes(variant: str, n1: int, d: int, dtype, eb: int,
+                     helmholtz: bool = False) -> int:
+    """Estimated VMEM bytes for one grid step.
+
+    Counts the HBM-backed operand windows at their storage dtype plus the
+    fp32 intermediates the kernel materializes (xr/xs/xt, gxr/gxs/gxt, and
+    the recalculated factor fields for the on-the-fly variants).
+    """
+    ws = jnp.dtype(dtype).itemsize
+    fp32 = 4
+    nodes = n1 ** 3
+    total = 2 * eb * d * nodes * ws          # x in + y out
+    total += 6 * eb * d * nodes * fp32       # xr/xs/xt + gxr/gxs/gxt
+    if variant == "precomputed":
+        total += eb * nodes * (6 + (1 if helmholtz else 0)) * ws
+        if helmholtz:
+            total += 2 * eb * nodes * ws     # lam0, lam1
+    elif variant == "parallelepiped":
+        total += eb * 7 * ws
+        total += 7 * eb * nodes * fp32       # broadcast g6 + gwj
+        if helmholtz:
+            total += 2 * eb * nodes * ws
+    elif variant == "trilinear":
+        total += eb * 24 * ws
+        total += (9 + 7) * eb * nodes * fp32  # J~ block + g6/gwj
+        if helmholtz:
+            total += 2 * eb * nodes * ws
+    elif variant == "merged":
+        total += eb * 24 * ws
+        total += 2 * eb * nodes * ws         # Lam2, Lam3
+        total += (9 + 12) * eb * nodes * fp32  # J~ + adj(K~) + g6
+    elif variant == "partial":
+        total += eb * 24 * ws
+        total += eb * nodes * ws             # gScale
+        total += (9 + 12) * eb * nodes * fp32
+    else:
+        raise ValueError(f"unknown axhelm variant {variant!r}")
+    return total
+
+
+def feasible_block_elems(variant: str, n1: int, d: int, dtype,
+                         helmholtz: bool = False,
+                         e_total: Optional[int] = None,
+                         budget: int = VMEM_BUDGET_BYTES) -> List[int]:
+    """VMEM-feasible candidate block sizes (always contains at least 1)."""
+    out = [eb for eb in _CANDIDATES
+           if (e_total is None or eb <= max(int(e_total), 1))
+           and block_vmem_bytes(variant, n1, d, dtype, eb, helmholtz) <= budget]
+    return out or [1]
+
+
+def _backend_tag(interpret: Optional[bool]) -> str:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return jax.default_backend() + ("-interpret" if interpret else "")
+
+
+def _config_key(variant: str, n1: int, d: int, dtype,
+                helmholtz: bool) -> str:
+    return f"{variant}/n1={n1}/d={d}/{jnp.dtype(dtype).name}/helm={int(helmholtz)}"
+
+
+def cache_path() -> str:
+    return os.environ.get(CACHE_ENV, _DEFAULT_CACHE)
+
+
+def _load_json() -> dict:
+    try:
+        with open(cache_path()) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _save_json(backend: str, key: str, entry: dict) -> None:
+    path = cache_path()
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        data = _load_json()
+        data.setdefault(backend, {})[key] = entry
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # a read-only cache dir must never break the solve
+
+
+def get_block_elems(variant: str, n1: int, d: int, dtype,
+                    helmholtz: bool = False,
+                    e_total: Optional[int] = None,
+                    autotune_now: bool = False,
+                    interpret: Optional[bool] = None) -> int:
+    """Resolve the block size: mem cache -> JSON cache -> sweep/heuristic."""
+    backend = _backend_tag(interpret)
+    key = _config_key(variant, n1, d, dtype, helmholtz)
+    with _LOCK:
+        hit = _MEM_CACHE.get((backend, key))
+    if hit is not None:
+        return hit
+    entry = _load_json().get(backend, {}).get(key)
+    if entry is not None:
+        eb = int(entry["block_elems"])
+        with _LOCK:
+            _MEM_CACHE[(backend, key)] = eb
+        return eb
+    if autotune_now:
+        eb, _ = autotune(variant, n1 - 1, d=d, dtype=dtype,
+                         helmholtz=helmholtz, interpret=interpret)
+        return eb
+    cand = feasible_block_elems(variant, n1, d, dtype, helmholtz, e_total)
+    heuristic = default_block_elems(n1, d)
+    under = [c for c in cand if c <= heuristic]
+    return max(under) if under else min(cand)
+
+
+def _synthetic_inputs(variant, n, d, dtype, helmholtz, e):
+    """Build (x, geom, lam0, lam1) for a timing run (lazy heavy imports)."""
+    from repro.core import axhelm as core_ax
+    from repro.core import geometry
+    from repro.core.spectral import basis as make_basis
+    from repro.kernels.axhelm import ref as kref
+
+    b = make_basis(n)
+    rng = np.random.default_rng(0)
+    ref_cube = np.asarray(geometry.reference_cube())
+    verts = jnp.asarray(
+        ref_cube[None] + 0.15 * rng.standard_normal((e, 8, 3)), dtype)
+    node = (e,) + (b.n1,) * 3
+    x_shape = node if d == 1 else (e, d) + (b.n1,) * 3
+    x = jnp.asarray(rng.standard_normal(x_shape), dtype)
+    lam0 = lam1 = None
+    if variant == "precomputed":
+        from repro.core import geometry
+        f = geometry.factors_trilinear(verts, b)
+        geom = jnp.concatenate([f.g, f.gwj[..., None]], axis=-1)
+        if helmholtz:
+            lam0 = jnp.ones(node, dtype)
+            lam1 = jnp.full(node, 0.1, dtype)
+    elif variant == "parallelepiped":
+        geom = kref.gelem_from_verts(verts)
+        if helmholtz:
+            lam0 = jnp.ones(node, dtype)
+            lam1 = jnp.full(node, 0.1, dtype)
+    elif variant == "trilinear":
+        geom = verts
+        if helmholtz:
+            lam0 = jnp.ones(node, dtype)
+            lam1 = jnp.full(node, 0.1, dtype)
+    elif variant == "merged":
+        geom = verts
+        lam0, lam1 = core_ax.setup_merged_lambdas(
+            verts, b, jnp.ones(node, dtype), jnp.full(node, 0.1, dtype))
+    elif variant == "partial":
+        geom = verts
+        lam0 = core_ax.setup_partial_gscale(verts, b)
+    else:
+        raise ValueError(variant)
+    return b, x, geom, lam0, lam1
+
+
+def autotune(variant: str, n: int, d: int = 1, dtype=jnp.float32,
+             helmholtz: Optional[bool] = None, e: int = 64, iters: int = 3,
+             candidates: Optional[Sequence[int]] = None,
+             interpret: Optional[bool] = None,
+             save: bool = True) -> Tuple[int, Dict[int, float]]:
+    """Time every feasible block size once; cache and return the winner.
+
+    Returns ``(best_block_elems, {block_elems: seconds})``.  The sweep runs
+    on synthetic elements of order ``n`` — what wins there wins on any mesh
+    of the same (variant, n1, d, dtype) shape, which is the whole point of
+    the paper's per-N tuning.  Candidates are clamped to ``e`` so every
+    timed run does the same amount of real work (a block larger than the
+    synthetic mesh would be charged for its padding); raise ``e`` to
+    explore bigger blocks.
+    """
+    from repro.kernels.axhelm import ops  # lazy: ops imports this module
+
+    if helmholtz is None:
+        helmholtz = variant == "merged"
+    n1 = n + 1
+    cand = list(candidates) if candidates else feasible_block_elems(
+        variant, n1, d, dtype, helmholtz, e_total=e)
+    b, x, geom, lam0, lam1 = _synthetic_inputs(variant, n, d, dtype,
+                                               helmholtz, e)
+    kw = {}
+    if variant not in ("merged", "partial") and helmholtz:
+        kw["helmholtz"] = True
+    timings: Dict[int, float] = {}
+    for eb in cand:
+        def run():
+            return ops.axhelm(x, b, variant, geom, lam0=lam0, lam1=lam1,
+                              block_elems=eb, interpret=interpret, **kw)
+        jax.block_until_ready(run())           # compile + warm
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run())
+            best = min(best, time.perf_counter() - t0)
+        timings[eb] = best
+    winner = min(timings, key=timings.get)
+    backend = _backend_tag(interpret)
+    key = _config_key(variant, n1, d, dtype, helmholtz)
+    with _LOCK:
+        _MEM_CACHE[(backend, key)] = winner
+    if save:
+        _save_json(backend, key, {
+            "block_elems": winner,
+            "timings_s": {str(k): v for k, v in timings.items()},
+            "e": e, "iters": iters,
+        })
+    return winner, timings

@@ -1,0 +1,138 @@
+"""Minimal deterministic stand-in for `hypothesis`.
+
+Installed into ``sys.modules`` by ``conftest.py`` when the real package is
+missing, so the property tests still collect and run (as seeded example
+sweeps rather than shrinking searches).  Covers exactly the subset this
+repo's tests use:
+
+  * ``@given(**kwarg_strategies)`` — every parameter is strategy-drawn
+    (the tests never mix ``@given`` with pytest fixtures),
+  * ``@settings(max_examples=..., deadline=...)``,
+  * ``assume(cond)`` — discards the current example,
+  * strategies: ``integers``, ``floats``, ``booleans``, ``sampled_from``.
+
+Examples are drawn from a fixed-seed RNG, so failures reproduce exactly.
+Install the real ``hypothesis`` (see requirements-dev.txt) to get true
+property-based shrinking; nothing here changes in that case.
+"""
+
+from __future__ import annotations
+
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by assume() to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class SearchStrategy:
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self._label = label
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"shim.{self._label}"
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value, endpoint=True)),
+        f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                          f"floats({min_value}, {max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)),
+                          "booleans()")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                          f"sampled_from({elements!r})")
+
+
+def given(**strategies):
+    """Run the test once per drawn example (deterministic sweep)."""
+
+    def decorate(fn):
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(wrapper, "_shim_max_examples",
+                                   DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(0)
+            ran = attempts = 0
+            while ran < max_examples:
+                attempts += 1
+                if attempts > max_examples * 50:
+                    raise RuntimeError(
+                        "hypothesis shim: assume() discarded too many "
+                        f"examples in {fn.__name__}")
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                ran += 1
+
+        # NOTE: no functools.wraps — pytest must see wrapper's own
+        # (*args, **kwargs) signature, not fn's strategy parameters,
+        # or it would try to resolve them as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._shim_given = True
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Record max_examples on an already-@given-wrapped test (no-op otherwise)."""
+
+    def decorate(fn):
+        if getattr(fn, "_shim_given", False):
+            fn._shim_max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as `hypothesis` (+ `hypothesis.strategies`)."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.UnsatisfiedAssumption = UnsatisfiedAssumption
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    st.floats = floats
+    st.booleans = booleans
+    st.sampled_from = sampled_from
+    st.SearchStrategy = SearchStrategy
+
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

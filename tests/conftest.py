@@ -9,6 +9,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+try:  # property tests prefer real hypothesis; fall back to the vendored shim
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()
+
 
 @pytest.fixture(scope="session")
 def x64():

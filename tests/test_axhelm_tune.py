@@ -1,0 +1,82 @@
+"""kernels/axhelm/tune.py: VMEM feasibility model, sweep, and caches."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import axhelm as core_ax
+from repro.core.spectral import basis
+from repro.kernels.axhelm import ops as kops
+from repro.kernels.axhelm import tune
+
+
+@pytest.fixture()
+def isolated_cache(tmp_path, monkeypatch):
+    """Point the JSON cache at a tmp file and clear the in-process cache."""
+    path = tmp_path / "axhelm_tune.json"
+    monkeypatch.setenv(tune.CACHE_ENV, str(path))
+    saved = dict(tune._MEM_CACHE)
+    tune._MEM_CACHE.clear()
+    yield path
+    tune._MEM_CACHE.clear()
+    tune._MEM_CACHE.update(saved)
+
+
+@pytest.mark.parametrize("variant", core_ax.VARIANTS)
+def test_feasible_candidates_respect_budget(variant):
+    helm = variant == "merged"
+    cand = tune.feasible_block_elems(variant, 8, 1, jnp.float32, helm)
+    assert cand and cand == sorted(cand)
+    for eb in cand:
+        assert tune.block_vmem_bytes(variant, 8, 1, jnp.float32, eb,
+                                     helm) <= tune.VMEM_BUDGET_BYTES
+    # a huge block must be infeasible for a per-node-factor variant
+    assert tune.block_vmem_bytes("precomputed", 8, 3, jnp.float32, 4096,
+                                 True) > tune.VMEM_BUDGET_BYTES
+
+
+def test_get_block_elems_heuristic_fallback(isolated_cache):
+    """With empty caches and no sweep, the static heuristic (clamped to a
+    feasible candidate) is returned."""
+    eb = tune.get_block_elems("trilinear", 4, 1, jnp.float32)
+    assert eb in tune.feasible_block_elems("trilinear", 4, 1, jnp.float32)
+
+
+def test_autotune_sweeps_caches_and_reuses(isolated_cache):
+    winner, timings = tune.autotune("trilinear", 2, d=1, dtype=jnp.float32,
+                                    e=8, iters=1, candidates=[1, 2, 4])
+    assert winner in (1, 2, 4)
+    assert set(timings) == {1, 2, 4}
+    assert all(t > 0 for t in timings.values())
+
+    # JSON cache written, keyed by backend tag
+    data = json.loads(isolated_cache.read_text())
+    backend = tune._backend_tag(None)
+    key = tune._config_key("trilinear", 3, 1, jnp.float32, False)
+    assert data[backend][key]["block_elems"] == winner
+
+    # in-process cache hit
+    assert tune.get_block_elems("trilinear", 3, 1, jnp.float32) == winner
+    # cold process (mem cache cleared) falls back to the JSON entry
+    tune._MEM_CACHE.clear()
+    assert tune.get_block_elems("trilinear", 3, 1, jnp.float32) == winner
+
+
+def test_block_elems_auto_entry_point(isolated_cache, rng):
+    """block_elems='auto' on the public op autotunes then computes."""
+    from repro.core import geometry
+    b = basis(2)
+    verts = jnp.broadcast_to(geometry.reference_cube(jnp.float32), (4, 8, 3))
+    verts = verts + 0.1 * jnp.asarray(
+        rng.standard_normal(verts.shape), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((4, b.n1, b.n1, b.n1)), jnp.float32)
+    y = kops.axhelm(x, b, "trilinear", verts, block_elems="auto")
+    y_ref = kops.reference(x, b, "trilinear", verts)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=1e-4)
+    backend = tune._backend_tag(None)
+    key = tune._config_key("trilinear", 3, 1, jnp.float32, False)
+    assert (backend, key) in tune._MEM_CACHE
+    with pytest.raises(ValueError):
+        kops.axhelm(x, b, "trilinear", verts, block_elems="fastest")

@@ -96,6 +96,114 @@ def test_block_size_invariance(rng, block_elems):
     np.testing.assert_allclose(y, y_ref, rtol=1e-6, atol=1e-6)
 
 
+def _merged_operands(verts, b, rng):
+    """(Lam2, Lam3) from random lambda fields (paper §4.1.1 setup)."""
+    from repro.core import axhelm as core_ax
+    e = verts.shape[0]
+    node = (e, b.n1, b.n1, b.n1)
+    lam0 = jnp.asarray(1 + 0.3 * rng.random(node), jnp.float32)
+    lam1 = jnp.asarray(0.5 + 0.2 * rng.random(node), jnp.float32)
+    return core_ax.setup_merged_lambdas(verts, b, lam0, lam1), (lam0, lam1)
+
+
+def _partial_operand(verts, b):
+    from repro.core import axhelm as core_ax
+    return core_ax.setup_partial_gscale(verts, b)
+
+
+@pytest.mark.parametrize("n", [2, 3, 7])
+@pytest.mark.parametrize("d", [1, 3])
+@pytest.mark.parametrize("variant", ["merged", "partial"])
+def test_merged_partial_kernel_matches_oracle(rng, n, d, variant):
+    b = basis(n)
+    verts = _mesh_verts(n)
+    e = verts.shape[0]
+    shape = (e, b.n1, b.n1, b.n1) if d == 1 else (e, d, b.n1, b.n1, b.n1)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    if variant == "merged":
+        (lam2, lam3), _ = _merged_operands(verts, b, rng)
+        kw = dict(lam0=lam2, lam1=lam3)
+    else:
+        kw = dict(lam0=_partial_operand(verts, b))
+    y = kops.axhelm(x, b, variant, verts, **kw)
+    y_ref = kops.reference(x, b, variant, verts, **kw)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("e_total", [1, 3, 5])
+@pytest.mark.parametrize("variant", ["merged", "partial"])
+def test_merged_partial_padding(rng, e_total, variant):
+    """Non-divisible E exercises the ref-cube vertex padding for the new
+    variants (dead elements must not produce NaNs)."""
+    b = basis(3)
+    verts = _mesh_verts(3, nx=4, ny=2, nz=2)[:e_total]
+    x = jnp.asarray(rng.standard_normal((e_total, b.n1, b.n1, b.n1)),
+                    jnp.float32)
+    if variant == "merged":
+        (lam2, lam3), _ = _merged_operands(verts, b, rng)
+        kw = dict(lam0=lam2, lam1=lam3)
+    else:
+        kw = dict(lam0=_partial_operand(verts, b))
+    y = kops.axhelm(x, b, variant, verts, block_elems=4, **kw)
+    y_ref = kops.reference(x, b, variant, verts, **kw)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-5, atol=1e-4)
+    assert not np.any(np.isnan(np.asarray(y)))
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 0.05)])
+@pytest.mark.parametrize("variant", ["merged", "partial"])
+def test_merged_partial_dtype_sweep(rng, dtype, rtol, variant):
+    b = basis(3)
+    verts32 = _mesh_verts(3)
+    if variant == "merged":
+        (l0, l1), _ = _merged_operands(verts32, b, rng)
+        kw32 = dict(lam0=l0, lam1=l1)
+    else:
+        kw32 = dict(lam0=_partial_operand(verts32, b))
+    x = jnp.asarray(rng.standard_normal((4, b.n1, b.n1, b.n1)), dtype)
+    kw = {k: v.astype(dtype) for k, v in kw32.items()}
+    y = kops.axhelm(x, b, variant, verts32.astype(dtype), **kw)
+    y_ref = kops.reference(x.astype(jnp.float32), b, variant, verts32, **kw32)
+    np.testing.assert_allclose(np.asarray(y, np.float32), y_ref, rtol=rtol,
+                               atol=rtol)
+
+
+def test_merged_partial_match_core_operator(rng):
+    """merged == the fp64-validated Helmholtz operator; partial == the
+    Poisson one (the §4.1 algebra is exact, only fp32 roundoff differs)."""
+    from repro.core import axhelm as core_ax
+    b = basis(4)
+    verts = _mesh_verts(4)
+    e = verts.shape[0]
+    x = jnp.asarray(rng.standard_normal((e, b.n1, b.n1, b.n1)), jnp.float32)
+
+    (lam2, lam3), (lam0, lam1) = _merged_operands(verts, b, rng)
+    y_m = kops.axhelm(x, b, "merged", verts, lam0=lam2, lam1=lam3)
+    y_core = core_ax.make_axhelm("precomputed", b, verts, lam0=lam0,
+                                 lam1=lam1, helmholtz=True,
+                                 dtype=jnp.float32).apply(x)
+    np.testing.assert_allclose(y_m, y_core, rtol=2e-4, atol=2e-4)
+
+    y_p = kops.axhelm(x, b, "partial", verts,
+                      lam0=_partial_operand(verts, b))
+    y_core_p = core_ax.make_axhelm("partial", b, verts,
+                                   dtype=jnp.float32).apply(x)
+    np.testing.assert_allclose(y_p, y_core_p, rtol=2e-4, atol=2e-4)
+
+
+def test_merged_partial_operand_validation(rng):
+    b = basis(2)
+    verts = _mesh_verts(2)
+    x = jnp.asarray(rng.standard_normal((verts.shape[0],) + (b.n1,) * 3),
+                    jnp.float32)
+    with pytest.raises(ValueError):
+        kops.axhelm(x, b, "merged", verts)           # missing Lam2/Lam3
+    gs = _partial_operand(verts, b)
+    with pytest.raises(ValueError):
+        kops.axhelm(x, b, "partial", verts, lam0=gs, lam1=gs)  # stray lam1
+
+
 def test_kernel_agrees_with_core_solver_path(rng):
     """Kernel path == the fp64-validated core operator (fp32 tolerance)."""
     from repro.core import axhelm as core_ax
