@@ -3,10 +3,26 @@
 Reports GFLOPS (Nekbone useful-FLOP counting), GDOFS (dofs * iters / s),
 iteration count, and final error — and checks the iteration-invariance that
 the paper uses as its correctness evidence.  CPU wall numbers: relative.
+
+Also emits weak/strong-scaling rows for the element-sharded solve
+(`setup_problem(shard_ctx=...)`): strong scaling holds the mesh fixed while
+the device count grows; weak scaling grows the element count with the
+devices.  Results land in BENCH_nekbone.json:
+
+    {"table6": [...], "scaling": [...]}
+
+Device counts beyond the visible devices are simulated by re-running this
+script in a subprocess with --xla_force_host_platform_device_count (the
+parent process must keep its 1-device backend).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -14,6 +30,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mesh_gen, nekbone
+
+OUT_JSON = "BENCH_nekbone.json"
+
+
+def _timed_solve(prob, b, tol, max_iter=400):
+    solve = jax.jit(lambda bb: nekbone.solve(prob, bb, tol=tol,
+                                             max_iter=max_iter))
+    res = solve(b)
+    jax.block_until_ready(res.x)
+    t0 = time.perf_counter()
+    res = solve(b)
+    jax.block_until_ready(res.x)
+    return res, time.perf_counter() - t0
 
 
 def rows(nx: int = 4, order: int = 7, tol: float = 1e-8):
@@ -33,14 +62,7 @@ def rows(nx: int = 4, order: int = 7, tol: float = 1e-8):
             prob = nekbone.setup_problem(use_mesh, variant=variant,
                                          helmholtz=helm, dtype=jnp.float32)
             b = nekbone.rhs_from_solution(prob, x_true)
-            solve = jax.jit(lambda bb: nekbone.solve(prob, bb, tol=tol,
-                                                     max_iter=400))
-            res = solve(b)
-            jax.block_until_ready(res.x)
-            t0 = time.perf_counter()
-            res = solve(b)
-            jax.block_until_ready(res.x)
-            dt = time.perf_counter() - t0
+            res, dt = _timed_solve(prob, b, tol)
             iters = int(res.iterations)
             ref = x_true if helm else jnp.where(
                 jnp.asarray(use_mesh.boundary), 0.0, x_true)
@@ -59,7 +81,88 @@ def rows(nx: int = 4, order: int = 7, tol: float = 1e-8):
     return out
 
 
+def scaling_rows(device_counts=(1, 2, 4), nx: int = 3, order: int = 4,
+                 tol: float = 1e-6, variant: str = "trilinear"):
+    """Weak + strong scaling of the sharded solve (run with enough devices).
+
+    Strong: the (nx, nx, nx) mesh is fixed; devices split its elements.
+    Weak:   the mesh grows to (nx * devices, nx, nx) — constant elements
+            per device.
+    """
+    from repro.distributed.context import make_solver_ctx
+
+    rng = np.random.default_rng(0)
+    out = []
+    for mode in ("strong", "weak"):
+        for s in device_counts:
+            shape = (nx, nx, nx) if mode == "strong" else (nx * s, nx, nx)
+            mesh = mesh_gen.deform_trilinear(
+                mesh_gen.box_mesh(*shape, order), seed=1)
+            ctx = make_solver_ctx(devices=s) if s > 1 else None
+            prob = nekbone.setup_problem(mesh, variant=variant,
+                                         dtype=jnp.float32, shard_ctx=ctx)
+            x_true = jnp.asarray(rng.standard_normal(mesh.n_global),
+                                 jnp.float32)
+            b = nekbone.rhs_from_solution(prob, x_true)
+            res, dt = _timed_solve(prob, b, tol)
+            iters = int(res.iterations)
+            flops = nekbone.flop_count(mesh, 1, False, iters)
+            row = {
+                "mode": mode,
+                "devices": s,
+                "variant": variant,
+                "elements": len(mesh.verts),
+                "dofs": mesh.n_global,
+                "iters": iters,
+                "wall_s": dt,
+                "gflops": flops / dt / 1e9,
+                "gdofs": mesh.n_global * iters / dt / 1e9,
+            }
+            if ctx is not None:
+                part = prob.partition
+                row["shared_dofs"] = int(part.n_shared)
+                row["shared_frac"] = part.n_shared / mesh.n_global
+            out.append(row)
+    return out
+
+
+def _scaling_via_subprocess(device_counts, nx, order, tol):
+    """Re-run this file with forced host devices; collect its JSON rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count="
+                          f"{max(device_counts)}")
+    env.setdefault("PYTHONPATH", os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    cmd = [sys.executable, os.path.abspath(__file__), "--scaling-child",
+           "--devices", ",".join(map(str, device_counts)),
+           "--nx", str(nx), "--order", str(order), "--tol", str(tol)]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(f"scaling child failed:\n{out.stderr[-4000:]}")
+    return [json.loads(line) for line in out.stdout.splitlines()
+            if line.startswith("{")]
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", default="1,2,4",
+                    help="comma-separated device counts for the scaling rows")
+    ap.add_argument("--nx", type=int, default=3)
+    ap.add_argument("--order", type=int, default=4)
+    ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--no-scaling", action="store_true")
+    ap.add_argument("--scaling-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    device_counts = tuple(int(s) for s in args.devices.split(","))
+
+    if args.scaling_child:
+        for r in scaling_rows(device_counts, args.nx, args.order, args.tol):
+            print(json.dumps(r))
+        return
+
     print("# bench_nekbone (Table 6 analogue): eq,variant,gflops,gdofs,"
           "iters,error")
     rs = rows()
@@ -73,6 +176,31 @@ def main():
                  and r["variant"] != "parallelepiped"}
         assert max(iters) - min(iters) <= 1, (eq, iters)
     print("# iteration-invariance across variants: OK")
+
+    payload = {"table6": rs}
+    if not args.no_scaling:
+        if jax.device_count() >= max(device_counts):
+            sc = scaling_rows(device_counts, args.nx, args.order, args.tol)
+        else:
+            sc = _scaling_via_subprocess(device_counts, args.nx, args.order,
+                                         args.tol)
+        payload["scaling"] = sc
+        print("# scaling: mode,devices,elements,dofs,iters,wall_s,gflops")
+        for r in sc:
+            print(f"bench_nekbone_scaling,{r['mode']},{r['devices']},"
+                  f"{r['elements']},{r['dofs']},{r['iters']},"
+                  f"{r['wall_s']:.4f},{r['gflops']:.2f}")
+        # sharding must not change the iteration count (parity evidence):
+        # every strong-scaling run within +-1 of the fewest-devices run
+        strong = sorted((r for r in sc if r["mode"] == "strong"),
+                        key=lambda r: r["devices"])
+        base = strong[0]["iters"]
+        for r in strong:
+            assert abs(r["iters"] - base) <= 1, (base, r)
+        print("# strong-scaling iteration parity: OK")
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"# wrote {OUT_JSON}")
 
 
 if __name__ == "__main__":

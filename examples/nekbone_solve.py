@@ -6,25 +6,25 @@ chosen axhelm variant; prints GFLOPS / GDOFS / iterations / error.
 Run:  PYTHONPATH=src python examples/nekbone_solve.py \
           [--elements 4 4 4] [--order 7] [--variant trilinear] \
           [--equation poisson] [--d 1] [--precision float32] \
-          [--backend auto] [--block-elems N|auto]
+          [--backend auto] [--block-elems N|auto] [--devices N]
 
 --backend auto drives the Pallas axhelm kernel inside the PCG while_loop
 (interpret mode off-TPU) for fp32/bf16 and the jnp reference for fp64;
 --block-elems auto runs the per-configuration block autotuner first.
+--devices N shards the elements over N devices (shard_map element
+partition + interface-dof exchange; on a CPU-only host missing devices are
+simulated via --xla_force_host_platform_device_count).
 """
 
 import argparse
+import os
 import sys
 import time
 
 sys.path.insert(0, "src")
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-
-def main():
+def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--elements", type=int, nargs=3, default=[4, 4, 4])
     ap.add_argument("--order", type=int, default=7)
@@ -43,9 +43,27 @@ def main():
     ap.add_argument("--block-elems", default=None,
                     help="Pallas VMEM block size (int), or 'auto' to "
                          "autotune per (variant, N, d, dtype)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the solve over N devices (1 = the exact "
+                         "single-device path)")
     ap.add_argument("--tol", type=float, default=1e-8)
     ap.add_argument("--max-iter", type=int, default=400)
-    args = ap.parse_args()
+    return ap.parse_args()
+
+
+def main():
+    # parse (and set XLA_FLAGS for --devices) before jax initializes devices
+    args = _parse_args()
+    if args.devices > 1 and "xla_force_host_platform_device_count" \
+            not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
     block_elems = args.block_elems
     if block_elems is not None and block_elems != "auto":
         block_elems = int(block_elems)
@@ -56,6 +74,7 @@ def main():
     helm = args.equation == "helmholtz"
 
     from repro.core import mesh_gen, nekbone
+    from repro.distributed.context import make_solver_ctx
 
     nx, ny, nz = args.elements
     mesh = mesh_gen.box_mesh(nx, ny, nz, args.order)
@@ -64,14 +83,25 @@ def main():
     else:
         mesh = mesh_gen.deform_trilinear(mesh, seed=3)
     e = len(mesh.verts)
+    shard_ctx = make_solver_ctx(devices=args.devices) \
+        if args.devices > 1 else None
+    n_shards = shard_ctx.n_shards if shard_ctx is not None else 1
     print(f"mesh: E={e} N={args.order} dofs={mesh.n_global} "
-          f"variant={args.variant} eq={args.equation} d={args.d}")
+          f"variant={args.variant} eq={args.equation} d={args.d} "
+          f"devices={n_shards}")
 
     prob = nekbone.setup_problem(mesh, variant=args.variant, d=args.d,
                                  helmholtz=helm, dtype=dtype,
                                  backend=args.backend,
-                                 block_elems=block_elems)
+                                 block_elems=block_elems,
+                                 shard_ctx=shard_ctx)
     print(f"backend={prob.backend}")
+    if shard_ctx is not None:
+        part = prob.partition
+        print(f"partition: shards={part.n_shards} "
+              f"elems/shard={[int(c) for c in part.elem_counts]} "
+              f"local_dofs={part.n_local} shared_dofs={part.n_shared} "
+              f"({part.n_shared / mesh.n_global:.1%} of field exchanged)")
     rng = np.random.default_rng(0)
     shape = (mesh.n_global,) if args.d == 1 else (mesh.n_global, args.d)
     x_true = jnp.asarray(rng.standard_normal(shape), dtype)

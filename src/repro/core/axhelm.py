@@ -41,6 +41,7 @@ __all__ = [
     "setup_partial_gscale",
     "element_diagonal",
     "make_axhelm",
+    "make_axhelm_elem_ops",
 ]
 
 VARIANTS = ("precomputed", "trilinear", "parallelepiped", "merged", "partial")
@@ -234,13 +235,10 @@ def _node_field(a, dtype, node_shape) -> Optional[jnp.ndarray]:
     return jnp.broadcast_to(jnp.asarray(a, dtype=dtype), node_shape)
 
 
-def _make_pallas_apply(variant: str, basis: SpectralBasis, verts, factors,
-                       lam0, lam1, helmholtz: bool, dtype, block_elems,
-                       interpret):
-    """Assemble the per-variant geometry operand once and close over the
-    Pallas entry point (repro.kernels.axhelm.ops.axhelm)."""
-    from repro.kernels.axhelm import ops as kops
-
+def _pallas_operands(variant: str, basis: SpectralBasis, verts, factors,
+                     lam0, lam1, dtype):
+    """Per-variant (geom, lam0, lam1) operand assembly for the Pallas
+    kernels — shared by the closure-style and operand-style entry points."""
     node_shape = verts.shape[:-2] + (basis.n1,) * 3
     l0 = _node_field(lam0, dtype, node_shape)
     l1 = _node_field(lam1, dtype, node_shape)
@@ -261,7 +259,18 @@ def _make_pallas_apply(variant: str, basis: SpectralBasis, verts, factors,
         l0, l1 = setup_partial_gscale(verts, basis), None
     else:  # trilinear
         geom = verts
+    return geom, l0, l1
 
+
+def _make_pallas_apply(variant: str, basis: SpectralBasis, verts, factors,
+                       lam0, lam1, helmholtz: bool, dtype, block_elems,
+                       interpret):
+    """Assemble the per-variant geometry operand once and close over the
+    Pallas entry point (repro.kernels.axhelm.ops.axhelm)."""
+    from repro.kernels.axhelm import ops as kops
+
+    geom, l0, l1 = _pallas_operands(variant, basis, verts, factors, lam0,
+                                    lam1, dtype)
     kw = {}
     if variant not in ("merged", "partial"):
         kw["helmholtz"] = helmholtz
@@ -348,6 +357,101 @@ def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
         return axhelm_partial(x, verts, basis, dhat, gscale)
     return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
                     variant, helmholtz)
+
+
+def make_axhelm_elem_ops(variant: str, basis: SpectralBasis,
+                         verts: jnp.ndarray,
+                         lam0: Optional[jnp.ndarray] = None,
+                         lam1: Optional[jnp.ndarray] = None,
+                         helmholtz: bool = False,
+                         dtype=jnp.float32,
+                         backend: Optional[str] = None,
+                         block_elems=None,
+                         interpret: Optional[bool] = None):
+    """Operand-style axhelm: `(elem_ops, apply)` with apply(x, elem_ops).
+
+    Unlike :func:`make_axhelm`, the per-element setup products (factors,
+    Lam2/Lam3, gScale, vertices) are returned as a dict of arrays with a
+    leading element axis instead of being closed over.  That is what the
+    element-sharded solve needs: `shard_map` partitions `elem_ops` (and x)
+    over the device mesh and `apply` runs unchanged on each shard's block —
+    closures cannot be sharded, operands can.  Scalar lambdas and the basis
+    stay closed over (replicated constants).
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown axhelm variant {variant!r}")
+    if variant == "merged" and not helmholtz:
+        raise ValueError("merged scalar factors apply to Helmholtz only")
+    if variant == "partial" and helmholtz:
+        raise ValueError("partial recalculation applies to Poisson only")
+    backend = _resolve_backend(backend, dtype)
+    verts = jnp.asarray(verts, dtype=dtype)
+    node_shape = verts.shape[:-2] + (basis.n1,) * 3
+
+    if backend == "pallas":
+        factors = None
+        if variant == "precomputed":
+            factors = geometry.factors_discrete(
+                geometry.node_coords(verts, basis), basis)
+        geom, l0, l1 = _pallas_operands(variant, basis, verts, factors,
+                                        lam0, lam1, dtype)
+        elem_ops = {"geom": geom}
+        if l0 is not None:
+            elem_ops["lam0"] = l0
+        if l1 is not None:
+            elem_ops["lam1"] = l1
+        kw = {} if variant in ("merged", "partial") else {
+            "helmholtz": helmholtz}
+        from repro.kernels.axhelm import ops as kops
+
+        def apply(x, elem_ops):
+            return kops.axhelm(x, basis, variant, elem_ops["geom"],
+                               lam0=elem_ops.get("lam0"),
+                               lam1=elem_ops.get("lam1"),
+                               block_elems=block_elems, interpret=interpret,
+                               **kw)
+        return elem_ops, apply, backend
+
+    dhat = jnp.asarray(basis.dhat, dtype=dtype)
+    if variant == "precomputed":
+        factors = geometry.factors_discrete(
+            geometry.node_coords(verts, basis), basis)
+        elem_ops = {"g": factors.g, "gwj": factors.gwj}
+
+        def apply(x, elem_ops):
+            f = GeomFactors(elem_ops["g"], elem_ops["gwj"])
+            return axhelm_precomputed(x, f, dhat, lam0, lam1, helmholtz)
+    elif variant == "trilinear":
+        elem_ops = {"verts": verts}
+
+        def apply(x, elem_ops):
+            return axhelm_trilinear(x, elem_ops["verts"], basis, dhat,
+                                    lam0, lam1, helmholtz)
+    elif variant == "parallelepiped":
+        elem_ops = {"verts": verts}
+
+        def apply(x, elem_ops):
+            return axhelm_parallelepiped(x, elem_ops["verts"], basis, dhat,
+                                         lam0, lam1, helmholtz)
+    elif variant == "merged":
+        l0 = jnp.broadcast_to(jnp.asarray(
+            1.0 if lam0 is None else lam0, dtype=dtype), node_shape)
+        l1 = jnp.broadcast_to(jnp.asarray(
+            1.0 if lam1 is None else lam1, dtype=dtype), node_shape)
+        lam2, lam3 = setup_merged_lambdas(verts, basis, l0, l1)
+        elem_ops = {"verts": verts, "lam2": lam2, "lam3": lam3}
+
+        def apply(x, elem_ops):
+            return axhelm_merged(x, elem_ops["verts"], basis, dhat,
+                                 elem_ops["lam2"], elem_ops["lam3"])
+    else:  # partial
+        elem_ops = {"verts": verts,
+                    "gscale": setup_partial_gscale(verts, basis)}
+
+        def apply(x, elem_ops):
+            return axhelm_partial(x, elem_ops["verts"], basis, dhat,
+                                  elem_ops["gscale"])
+    return elem_ops, apply, backend
 
 
 def _make_axhelm_pallas(variant: str, basis: SpectralBasis, verts, coords,

@@ -5,16 +5,25 @@ Q is the sparse binary global-to-local matrix (Eq. 2); it is never built.
   gather  (Q^T): local  (E, N1,N1,N1[, d])         -> global (Ng[, d]) sum
 
 On a sharded mesh the gather is the only cross-element (and cross-device)
-communication of the solver: XLA lowers the segment-sum over replicated ids to
-an all-reduce over the element axis — exactly gslib's role in Nek.
+communication of the solver.  The sharded primitives below implement it
+owner-computes style: each shard gathers into its *local* dof space with a
+plain segment-sum, then one collective (`lax.psum`) runs over only the
+shared-face/edge/corner dofs of the element partition — never the full
+field.  See `mesh_gen.partition_elements` for the index sets and DESIGN.md
+for the exchange protocol.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["scatter", "gather", "dssum", "multiplicity"]
+__all__ = [
+    "scatter", "gather", "dssum", "multiplicity",
+    "shared_contrib", "apply_shared", "exchange_shared", "gather_sharded",
+]
 
 
 def scatter(x_global: jnp.ndarray, global_ids: jnp.ndarray) -> jnp.ndarray:
@@ -24,7 +33,23 @@ def scatter(x_global: jnp.ndarray, global_ids: jnp.ndarray) -> jnp.ndarray:
 
 def gather(y_local: jnp.ndarray, global_ids: jnp.ndarray,
            n_global: int) -> jnp.ndarray:
-    """Q^T y: sum element-local values into global dofs."""
+    """Q^T y: sum element-local values into global dofs.
+
+    `y_local` must be shaped like `global_ids` (scalar field) or like
+    `global_ids` plus one trailing component axis (vector field).
+    """
+    if y_local.shape[:global_ids.ndim] != global_ids.shape:
+        raise ValueError(
+            f"gather: y_local leading shape {y_local.shape} does not match "
+            f"global_ids shape {global_ids.shape} — expected "
+            f"{global_ids.shape} (scalar field) or {global_ids.shape} + (d,) "
+            f"(vector field with one trailing component axis)")
+    if y_local.ndim > global_ids.ndim + 1:
+        raise ValueError(
+            f"gather: y_local has {y_local.ndim - global_ids.ndim} trailing "
+            f"axes beyond global_ids; vector fields must pack components "
+            f"into a single trailing axis (got shape {y_local.shape} vs ids "
+            f"{global_ids.shape})")
     ids = global_ids.reshape(-1)
     if y_local.ndim == global_ids.ndim:  # scalar field
         return jax.ops.segment_sum(y_local.reshape(-1), ids,
@@ -46,3 +71,69 @@ def multiplicity(global_ids: jnp.ndarray, n_global: int) -> jnp.ndarray:
     ones = jnp.ones(global_ids.size, dtype=jnp.float32)
     return jax.ops.segment_sum(ones, global_ids.reshape(-1),
                                num_segments=n_global)
+
+
+# ---------------------------------------------------------------------------
+# Sharded (owner-computes) gather: per-shard local segment-sum + one
+# collective over the interface dofs only.  The three pieces are split so the
+# exchange algebra is testable without a device mesh (see
+# tests/test_gather_scatter.py) while `gather_sharded` wires them to
+# `lax.psum` inside `shard_map`.
+# ---------------------------------------------------------------------------
+
+
+def _expand_mask(mask: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast a (L,)/(NS,) bool mask against a trailing component axis."""
+    return mask if y.ndim == mask.ndim else mask[..., None]
+
+
+def shared_contrib(y_dofs: jnp.ndarray, shared_idx: jnp.ndarray,
+                   shared_present: jnp.ndarray) -> jnp.ndarray:
+    """This shard's partial sums at the interface dofs, zero where absent.
+
+    y_dofs: (L[, d]) per-shard local dof values; shared_idx: (NS,) local
+    slots (trash where absent); shared_present: (NS,) bool.
+    """
+    vals = y_dofs[shared_idx]
+    return jnp.where(_expand_mask(shared_present, vals), vals, 0.0)
+
+
+def apply_shared(y_dofs: jnp.ndarray, shared_idx: jnp.ndarray,
+                 summed: jnp.ndarray) -> jnp.ndarray:
+    """Write the fully-summed interface values back into the local slots.
+
+    Absent interface dofs carry the trash slot index, so their writes land
+    in the trash slot (whose value is never read unmasked).
+    """
+    return y_dofs.at[shared_idx].set(summed)
+
+
+def exchange_shared(y_dofs: jnp.ndarray, shared_idx: jnp.ndarray,
+                    shared_present: jnp.ndarray,
+                    axis_name: str) -> jnp.ndarray:
+    """Sum interface-dof contributions across shards (the ONLY collective).
+
+    The psum buffer is (NS[, d]) — the shared-face/edge/corner dofs of the
+    partition, not the full field.
+    """
+    contrib = shared_contrib(y_dofs, shared_idx, shared_present)
+    summed = jax.lax.psum(contrib, axis_name)
+    return apply_shared(y_dofs, shared_idx, summed)
+
+
+def gather_sharded(y_local: jnp.ndarray, local_ids: jnp.ndarray,
+                   n_local: int, shared_idx: jnp.ndarray,
+                   shared_present: jnp.ndarray,
+                   axis_name: Optional[str]) -> jnp.ndarray:
+    """Per-shard Q^T: local segment-sum, then the interface exchange.
+
+    Runs inside `shard_map` over the element axis `axis_name`; with
+    axis_name=None the exchange is skipped (single-shard debugging).
+    After the exchange every real local slot holds the *full* global sum
+    for its dof — interface dofs are consistent on every shard that has
+    them, which is exactly gslib's post-gather state.
+    """
+    y_dofs = gather(y_local, local_ids, n_local)
+    if axis_name is None:
+        return y_dofs
+    return exchange_shared(y_dofs, shared_idx, shared_present, axis_name)

@@ -19,7 +19,8 @@ from typing import NamedTuple
 
 import numpy as np
 
-__all__ = ["BoxMesh", "box_mesh", "deform_affine", "deform_trilinear"]
+__all__ = ["BoxMesh", "MeshPartition", "box_mesh", "deform_affine",
+           "deform_trilinear", "partition_elements"]
 
 
 class BoxMesh(NamedTuple):
@@ -81,6 +82,135 @@ def box_mesh(nx: int, ny: int, nz: int, order: int,
     bx[:, :, 0], bx[:, :, -1] = True, True
     boundary = bx.reshape(-1)
     return BoxMesh(verts, global_ids, n_global, boundary, (nx, ny, nz), n)
+
+
+class MeshPartition(NamedTuple):
+    """An element partition of a :class:`BoxMesh` over ``n_shards`` shards.
+
+    Elements are split into contiguous blocks in element order (x-slabs on a
+    box mesh) and padded to a common per-shard count with "dead" elements.
+    Every shard gets a *local dof space* of fixed size ``n_local``: the unique
+    global dofs its real elements touch, then padding, then one trailing
+    **trash slot** (index ``n_local - 1``) that absorbs all dead-element and
+    not-present writes.  Dofs living on more than one shard are the *shared*
+    (interface) dofs — the only values that ever cross shards.
+
+    All arrays are numpy (host-side, setup-time); shapes use
+    S = n_shards, EP = e_per_shard, L = n_local, NS = n_shared.
+
+    n_shards:       number of shards S.
+    e_per_shard:    padded element count per shard (EP).
+    n_local:        per-shard local dof count L, incl. the trash slot.
+    n_shared:       NS — total interface dofs (>= 1; padded with a dummy).
+    elem_counts:    (S,) real (un-padded) elements per shard.
+    verts:          (S, EP, 8, 3) element vertices; dead elements hold the
+                    reference cube so det(J) != 0.
+    local_ids:      (S, EP, N1, N1, N1) int32 — node -> local dof index;
+                    dead elements point at the trash slot.
+    local_to_global:(S, L) int32 — local slot -> global dof (0 for padding
+                    and trash: those slots are masked everywhere they matter).
+    owned_mask:     (S, L) bool — True iff this shard owns the dof (each
+                    global dof is owned by exactly one shard; padding/trash
+                    slots are never owned).
+    valid_mask:     (S, L) bool — True on real local dofs (owned or ghost);
+                    False on padding and the trash slot.
+    shared_idx:     (S, NS) int32 — for every interface dof, its local slot
+                    on this shard, or the trash slot when not present here.
+    shared_present: (S, NS) bool — interface dof lives on this shard.
+    """
+
+    n_shards: int
+    e_per_shard: int
+    n_local: int
+    n_shared: int
+    elem_counts: np.ndarray
+    verts: np.ndarray
+    local_ids: np.ndarray
+    local_to_global: np.ndarray
+    owned_mask: np.ndarray
+    valid_mask: np.ndarray
+    shared_idx: np.ndarray
+    shared_present: np.ndarray
+
+
+def _reference_cube_verts() -> np.ndarray:
+    """The [-1, 1]^3 cube in paper Def. 2 vertex order (dead-element pad)."""
+    v = np.empty((8, 3))
+    for vtx in range(8):
+        v[vtx] = [2.0 * (vtx & 1) - 1.0, 2.0 * ((vtx >> 1) & 1) - 1.0,
+                  2.0 * ((vtx >> 2) & 1) - 1.0]
+    return v
+
+
+def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
+    """Partition mesh elements into ``n_shards`` contiguous blocks.
+
+    Builds the per-shard local dof spaces and the shared-dof (interface)
+    index sets that the sharded gather exchanges — see
+    ``gather_scatter.gather_sharded``.  Pure numpy; runs once at setup.
+    """
+    e_total = len(mesh.verts)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > e_total:
+        raise ValueError(f"cannot shard {e_total} elements over "
+                         f"{n_shards} shards (need >= 1 element per shard)")
+    n1 = mesh.order + 1
+    base, extra = divmod(e_total, n_shards)
+    counts = np.array([base + (1 if s < extra else 0)
+                       for s in range(n_shards)])
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    ep = int(counts.max())
+
+    # Per-shard unique dof sets and ownership (first shard that sees a dof
+    # owns it — with contiguous slabs that is the lower-index neighbour).
+    shard_dofs = []
+    for s in range(n_shards):
+        ids_s = mesh.global_ids[starts[s]:starts[s + 1]]
+        shard_dofs.append(np.unique(ids_s))
+    n_local = max(len(d) for d in shard_dofs) + 1        # + trash slot
+    trash = n_local - 1
+
+    # Interface dofs: global dofs present on >= 2 shards.
+    presence = np.zeros(mesh.n_global, dtype=np.int32)
+    for d in shard_dofs:
+        presence[d] += 1
+    shared_g = np.flatnonzero(presence >= 2)
+    n_shared = max(len(shared_g), 1)
+
+    owner = np.full(mesh.n_global, -1, dtype=np.int64)
+    for s in range(n_shards - 1, -1, -1):
+        owner[shard_dofs[s]] = s
+
+    verts = np.broadcast_to(_reference_cube_verts(),
+                            (n_shards, ep, 8, 3)).copy()
+    local_ids = np.full((n_shards, ep, n1, n1, n1), trash, dtype=np.int32)
+    local_to_global = np.zeros((n_shards, n_local), dtype=np.int32)
+    owned = np.zeros((n_shards, n_local), dtype=bool)
+    valid = np.zeros((n_shards, n_local), dtype=bool)
+    shared_idx = np.full((n_shards, n_shared), trash, dtype=np.int32)
+    shared_present = np.zeros((n_shards, n_shared), dtype=bool)
+
+    for s in range(n_shards):
+        ne = counts[s]
+        dofs = shard_dofs[s]
+        nl = len(dofs)
+        verts[s, :ne] = mesh.verts[starts[s]:starts[s + 1]]
+        # global -> local remap of this shard's connectivity
+        g2l = np.full(mesh.n_global, trash, dtype=np.int32)
+        g2l[dofs] = np.arange(nl, dtype=np.int32)
+        local_ids[s, :ne] = g2l[mesh.global_ids[starts[s]:starts[s + 1]]]
+        local_to_global[s, :nl] = dofs
+        owned[s, :nl] = owner[dofs] == s
+        valid[s, :nl] = True
+        if len(shared_g):
+            shared_idx[s] = g2l[shared_g]
+            shared_present[s] = shared_idx[s] != trash
+            # a shared dof whose local slot happens to be the trash slot is
+            # impossible: real slots stop at nl <= trash
+    return MeshPartition(n_shards, ep, n_local, n_shared, counts, verts,
+                         local_ids, local_to_global, owned, valid,
+                         shared_idx, shared_present)
 
 
 def deform_affine(mesh: BoxMesh, matrix: np.ndarray | None = None,

@@ -4,24 +4,34 @@ Composes the matrix-free pipeline of Algorithm 1 (scatter -> axhelm ->
 gather) into a global SPD operator on unique dofs and runs PCG, mirroring the
 Nekbone proxy app (Poisson with Dirichlet mask, or Helmholtz which is SPD
 without masking).
+
+With a `SolverShardCtx` (distributed.context) the same pipeline runs
+element-sharded under `shard_map` over a 1-D device mesh: each device owns a
+contiguous slab of elements, the gather becomes a per-shard segment-sum plus
+one psum over only the interface dofs, and PCG's dot products psum scalars —
+the whole while_loop stays inside the sharded region.  See DESIGN.md.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import axhelm as axhelm_mod
 from repro.core import gather_scatter as gs
 from repro.core import geometry
-from repro.core.mesh_gen import BoxMesh
-from repro.core.pcg import PCGResult, pcg
+from repro.core.mesh_gen import BoxMesh, MeshPartition, partition_elements
+from repro.core.pcg import PCGResult, owned_dot, pcg
 from repro.core.spectral import SpectralBasis, basis as make_basis
 
-__all__ = ["NekboneProblem", "setup_problem", "solve", "flop_count"]
+__all__ = ["NekboneProblem", "ShardedNekboneProblem", "setup_problem",
+           "solve", "flop_count"]
 
 
 class NekboneProblem(NamedTuple):
@@ -34,6 +44,31 @@ class NekboneProblem(NamedTuple):
     helmholtz: bool
     variant: str
     backend: str = "reference"
+
+
+class ShardedNekboneProblem(NamedTuple):
+    """An element-sharded Nekbone problem (see `setup_problem(shard_ctx=)`).
+
+    `op` has global-field semantics (Ng[, d] -> Ng[, d]) but runs the
+    scatter -> axhelm -> gather pipeline under `shard_map`; `run_pcg` runs
+    the whole PCG while_loop inside the sharded region and returns a
+    `PCGResult` whose `x` has been reassembled onto global dofs (owner
+    writes its dofs; interface values are identical on every shard by
+    construction, so owner-wins is exact).
+    """
+
+    op: object                   # global-semantics A(x) via shard_map
+    diag: jnp.ndarray            # diag(A) on global dofs
+    mask: Optional[jnp.ndarray]  # Dirichlet mask on global dofs
+    mesh: BoxMesh
+    basis: SpectralBasis
+    d: int
+    helmholtz: bool
+    variant: str
+    backend: str
+    shard_ctx: object            # distributed.context.SolverShardCtx
+    partition: MeshPartition
+    run_pcg: object              # (b, tol, max_iter, precond=) -> PCGResult
 
 
 def _global_op(element_op, mesh: BoxMesh, mask, d: int):
@@ -64,43 +99,14 @@ def _global_op(element_op, mesh: BoxMesh, mask, d: int):
     return apply
 
 
-def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
-                  helmholtz: bool = False, lam0=None, lam1=None,
-                  dirichlet: bool | None = None,
-                  dtype=jnp.float32,
-                  backend: str | None = None,
-                  block_elems=None,
-                  interpret: bool | None = None) -> NekboneProblem:
-    """Build the global operator + Jacobi diagonal for a mesh/variant.
-
-    `backend` selects the element-kernel implementation ("reference",
-    "pallas", or "auto"; see core.axhelm.make_axhelm) — with "pallas" the
-    PCG while_loop drives the Pallas kernel every iteration.  `block_elems`
-    and `interpret` are forwarded to the Pallas path ("auto" autotunes).
-    """
-    b = make_basis(mesh.order)
-    verts = jnp.asarray(mesh.verts, dtype=dtype)
-    if helmholtz and lam1 is None:
-        lam1 = jnp.asarray(0.1, dtype=dtype)  # Nekbone's h2-like shift
-    if helmholtz and lam0 is None:
-        lam0 = jnp.asarray(1.0, dtype=dtype)
-    op = axhelm_mod.make_axhelm(variant, b, verts, lam0=lam0, lam1=lam1,
-                                helmholtz=helmholtz, dtype=dtype,
-                                backend=backend, block_elems=block_elems,
-                                interpret=interpret)
-    if dirichlet is None:
-        dirichlet = not helmholtz  # Poisson needs the mask to be SPD
-    mask = jnp.asarray(mesh.boundary) if dirichlet else None
-
-    element_apply = op.apply
-    apply = _global_op(element_apply, mesh, mask, d)
-
-    # Jacobi diagonal from the (always available) factor arrays.
+def _global_diag(mesh: BoxMesh, b: SpectralBasis, factors, lam0, lam1,
+                 helmholtz: bool, d: int, mask, dtype) -> jnp.ndarray:
+    """Jacobi diagonal on global dofs from per-element factor arrays."""
     lam0n = None if lam0 is None else jnp.broadcast_to(
         jnp.asarray(lam0, dtype=dtype), (len(mesh.verts),) + (b.n1,) * 3)
     lam1n = None if lam1 is None else jnp.broadcast_to(
         jnp.asarray(lam1, dtype=dtype), (len(mesh.verts),) + (b.n1,) * 3)
-    dl = axhelm_mod.element_diagonal(op.factors,
+    dl = axhelm_mod.element_diagonal(factors,
                                      jnp.asarray(b.dhat, dtype=dtype),
                                      lam0=lam0n, lam1=lam1n,
                                      helmholtz=helmholtz)
@@ -110,8 +116,191 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     if mask is not None:
         m = mask if d == 1 else mask[:, None]
         diag = jnp.where(m, 1.0, diag)
+    return diag
+
+
+def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
+                  helmholtz: bool = False, lam0=None, lam1=None,
+                  dirichlet: bool | None = None,
+                  dtype=jnp.float32,
+                  backend: str | None = None,
+                  block_elems=None,
+                  interpret: bool | None = None,
+                  shard_ctx=None) -> NekboneProblem:
+    """Build the global operator + Jacobi diagonal for a mesh/variant.
+
+    `backend` selects the element-kernel implementation ("reference",
+    "pallas", or "auto"; see core.axhelm.make_axhelm) — with "pallas" the
+    PCG while_loop drives the Pallas kernel every iteration.  `block_elems`
+    and `interpret` are forwarded to the Pallas path ("auto" autotunes).
+
+    `shard_ctx` (a `distributed.context.SolverShardCtx`, e.g. from
+    `make_solver_ctx(devices=N)`) partitions the elements over a 1-D device
+    mesh and returns a `ShardedNekboneProblem` whose solve runs under
+    `shard_map`.  `shard_ctx=None` — and any 1-device context, which
+    `make_solver_ctx` already collapses to None — takes the single-device
+    path below, bit-identical to previous behaviour.
+    """
+    b = make_basis(mesh.order)
+    verts = jnp.asarray(mesh.verts, dtype=dtype)
+    if helmholtz and lam1 is None:
+        lam1 = jnp.asarray(0.1, dtype=dtype)  # Nekbone's h2-like shift
+    if helmholtz and lam0 is None:
+        lam0 = jnp.asarray(1.0, dtype=dtype)
+    if dirichlet is None:
+        dirichlet = not helmholtz  # Poisson needs the mask to be SPD
+    mask = jnp.asarray(mesh.boundary) if dirichlet else None
+
+    if shard_ctx is not None and shard_ctx.n_shards > 1:
+        return _setup_problem_sharded(
+            mesh, b, variant, d, helmholtz, lam0, lam1, mask, dtype,
+            backend, block_elems, interpret, shard_ctx)
+
+    op = axhelm_mod.make_axhelm(variant, b, verts, lam0=lam0, lam1=lam1,
+                                helmholtz=helmholtz, dtype=dtype,
+                                backend=backend, block_elems=block_elems,
+                                interpret=interpret)
+    apply = _global_op(op.apply, mesh, mask, d)
+    diag = _global_diag(mesh, b, op.factors, lam0, lam1, helmholtz, d, mask,
+                        dtype)
     return NekboneProblem(apply, diag, mask, mesh, b, d, helmholtz, variant,
                           op.backend)
+
+
+def _diag_factors(variant: str, b: SpectralBasis, verts: jnp.ndarray):
+    """Per-element factor arrays for the Jacobi diagonal — the same choices
+    `make_axhelm` makes, computed on the *unpartitioned* mesh so the sharded
+    setup produces the identical diagonal to the single-device path."""
+    if variant == "precomputed":
+        return geometry.factors_discrete(geometry.node_coords(verts, b), b)
+    if variant == "parallelepiped":
+        return geometry.factors_parallelepiped(verts, b)
+    return geometry.factors_trilinear(verts, b)
+
+
+def _setup_problem_sharded(mesh: BoxMesh, b: SpectralBasis, variant: str,
+                           d: int, helmholtz: bool, lam0, lam1, mask, dtype,
+                           backend, block_elems, interpret,
+                           shard_ctx) -> "ShardedNekboneProblem":
+    for name, lam in (("lam0", lam0), ("lam1", lam1)):
+        if lam is not None and jnp.ndim(lam) > 0:
+            # a (E, N1, N1, N1) field would need partitioning + padding into
+            # elem_ops; fail clearly instead of deep inside shard_map tracing
+            raise NotImplementedError(
+                f"per-element {name} fields are not yet supported with "
+                f"shard_ctx (got shape {jnp.shape(lam)}); pass a scalar, or "
+                f"solve single-device")
+    part = partition_elements(mesh, shard_ctx.n_shards)
+    flat_verts = jnp.asarray(part.verts.reshape(-1, 8, 3), dtype=dtype)
+    elem_ops, elem_apply, backend_used = axhelm_mod.make_axhelm_elem_ops(
+        variant, b, flat_verts, lam0=lam0, lam1=lam1, helmholtz=helmholtz,
+        dtype=dtype, backend=backend, block_elems=block_elems,
+        interpret=interpret)
+    verts = jnp.asarray(mesh.verts, dtype=dtype)
+    diag = _global_diag(mesh, b, _diag_factors(variant, b, verts), lam0,
+                        lam1, helmholtz, d, mask, dtype)
+    apply_global, run_pcg = _build_sharded_runner(
+        part, shard_ctx, elem_ops, elem_apply, mask, diag, d,
+        mesh.n_global)
+    return ShardedNekboneProblem(apply_global, diag, mask, mesh, b, d,
+                                 helmholtz, variant, backend_used, shard_ctx,
+                                 part, run_pcg)
+
+
+def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
+                          mask, diag, d: int, n_global: int):
+    """Wire the per-shard pipeline into `shard_map` over `ctx`'s 1-D mesh.
+
+    Index sets are flattened over a leading (n_shards * per_shard) axis and
+    sharded with P(axis) so every device receives exactly its shard's slice;
+    inside the shard region the only collectives are the interface-dof psum
+    in `gather_sharded` and the scalar psums of `owned_dot`.
+    """
+    axis = ctx.axis
+    s, ep, nl, ns = (part.n_shards, part.e_per_shard, part.n_local,
+                     part.n_shared)
+    n1 = part.local_ids.shape[-1]
+    local_ids = jnp.asarray(part.local_ids.reshape(s * ep, n1, n1, n1))
+    shared_idx = jnp.asarray(part.shared_idx.reshape(-1))
+    present = jnp.asarray(part.shared_present.reshape(-1))
+    l2g = jnp.asarray(part.local_to_global.reshape(-1))
+    owned = jnp.asarray(part.owned_mask.reshape(-1))
+    valid = jnp.asarray(part.valid_mask.reshape(-1))
+    diag_loc = diag[l2g]
+    mask_loc = mask[l2g] if mask is not None else jnp.zeros(s * nl, bool)
+    has_mask = mask is not None
+
+    pe = P(axis)
+    ops_specs = jax.tree.map(lambda _: pe, elem_ops)
+    idx_args = (local_ids, shared_idx, present, owned, valid, mask_loc)
+    idx_specs = (pe,) * len(idx_args)
+    expand = gs._expand_mask
+
+    def localize(xg):
+        xl = xg[l2g]
+        return jnp.where(expand(valid, xl), xl, 0)
+
+    def globalize(xl):
+        w = expand(owned, xl)
+        shape = (n_global,) + xl.shape[1:]
+        return jnp.zeros(shape, xl.dtype).at[l2g].add(jnp.where(w, xl, 0))
+
+    def a_op_local(x, eo, lid, sidx, spres, own, val, m):
+        """Per-shard A(x): scatter -> axhelm -> sharded gather (+ mask)."""
+        x_in = x
+        if has_mask:
+            x = jnp.where(expand(m, x), 0.0, x)
+        xl = x[lid]                                   # (EP, N1,N1,N1[, d])
+        if d > 1:
+            xl = jnp.moveaxis(xl, -1, 1)
+        yl = elem_apply(xl, eo)
+        if d > 1:
+            yl = jnp.moveaxis(yl, 1, -1)
+        y = gs.gather_sharded(yl, lid, nl, sidx, spres, axis)
+        if has_mask:
+            y = jnp.where(expand(m, y), x_in, y)
+        # dead-element and padding slots must stay exactly zero: anything
+        # accumulating there would feed inf/nan into later iterations
+        return jnp.where(expand(val, y), y, 0)
+
+    smap = functools.partial(shard_map, mesh=ctx.mesh, check_rep=False)
+
+    @jax.jit
+    def apply_global(xg):
+        body = smap(a_op_local, in_specs=(pe, ops_specs) + idx_specs,
+                    out_specs=pe)
+        return globalize(body(localize(xg), elem_ops, *idx_args))
+
+    def pcg_body(b_loc, dg, tol, max_iter, eo, lid, sidx, spres, own, val,
+                 m, use_jacobi):
+        def a_op(x):
+            return a_op_local(x, eo, lid, sidx, spres, own, val, m)
+
+        pre = None
+        if use_jacobi:
+            inv_diag = 1.0 / dg
+
+            def pre(r):
+                return inv_diag * r
+        res = pcg(a_op, b_loc, precond=pre, tol=tol, max_iter=max_iter,
+                  dot=owned_dot(own, axis))
+        # scalars are replicated across shards; emit one slot per shard so
+        # out_specs=P(axis) reassembles them into an (S,) vector
+        return (res.x, res.iterations[None], res.residual[None],
+                res.initial_residual[None])
+
+    @functools.partial(jax.jit, static_argnames=("precond",))
+    def run_pcg(b_global, tol, max_iter, precond="jacobi"):
+        body = smap(
+            functools.partial(pcg_body, use_jacobi=precond == "jacobi"),
+            in_specs=(pe, pe, P(), P(), ops_specs) + idx_specs,
+            out_specs=(pe, pe, pe, pe))
+        x_loc, it, rr, r0 = body(
+            localize(b_global), diag_loc, jnp.asarray(tol),
+            jnp.asarray(max_iter, jnp.int32), elem_ops, *idx_args)
+        return PCGResult(globalize(x_loc), it[0], rr[0], r0[0])
+
+    return apply_global, run_pcg
 
 
 def rhs_from_solution(problem: NekboneProblem, x_true: jnp.ndarray) -> jnp.ndarray:
@@ -124,15 +313,16 @@ def rhs_from_solution(problem: NekboneProblem, x_true: jnp.ndarray) -> jnp.ndarr
 
 def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
           tol: float = 1e-8, max_iter: int = 200) -> PCGResult:
+    if precond not in ("jacobi", "copy"):
+        raise ValueError(f"unknown preconditioner {precond!r}")
+    if isinstance(problem, ShardedNekboneProblem):
+        return problem.run_pcg(b_rhs, tol, max_iter, precond=precond)
+    pre = None
     if precond == "jacobi":
         inv_diag = 1.0 / problem.diag
 
         def pre(r):
             return inv_diag * r
-    elif precond == "copy":
-        pre = None
-    else:
-        raise ValueError(f"unknown preconditioner {precond!r}")
     return pcg(problem.op, b_rhs, precond=pre, tol=tol, max_iter=max_iter)
 
 

@@ -13,7 +13,29 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PCGResult", "pcg"]
+__all__ = ["PCGResult", "pcg", "owned_dot"]
+
+
+def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None
+              ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """A `dot` for `pcg` on element-sharded fields.
+
+    `weight` is the per-shard ownership indicator (1.0 where this shard owns
+    the dof, 0.0 on ghost/padding/trash slots), so interface dofs — which
+    are replicated on every shard that touches them — are counted exactly
+    once; `axis_name` psums the partial reductions across shards.  Inside
+    `shard_map` this makes every PCG inner product a single scalar psum,
+    which is all the communication the iteration adds on top of the gather.
+    """
+
+    def dot(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        w = weight if u.ndim == weight.ndim else weight[..., None]
+        part = jnp.sum(jnp.where(w, u * v, 0))
+        if axis_name is None:
+            return part
+        return jax.lax.psum(part, axis_name)
+
+    return dot
 
 
 class PCGResult(NamedTuple):

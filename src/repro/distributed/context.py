@@ -2,16 +2,23 @@
 
 `ShardCtx` carries the mesh and the axis-name conventions; `None` means
 single-device execution (tests).  Models receive it explicitly — no globals.
+
+`SolverShardCtx` is the solver-side analogue: a 1-D device mesh over which
+the Nekbone solve partitions *elements* (see `core.nekbone.setup_problem`
+and DESIGN.md).  Same convention: `None` means the single-device path.
 """
 
 from __future__ import annotations
 
 from typing import NamedTuple, Optional, Tuple
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["ShardCtx", "make_ctx", "batch_axes", "constraint"]
+__all__ = ["ShardCtx", "SolverShardCtx", "make_ctx", "make_solver_ctx",
+           "batch_axes", "constraint"]
 
 
 class ShardCtx(NamedTuple):
@@ -33,6 +40,42 @@ class ShardCtx(NamedTuple):
     @property
     def all_axes(self) -> Tuple[str, ...]:
         return tuple(self.mesh.axis_names)
+
+
+class SolverShardCtx(NamedTuple):
+    """1-D device mesh for the element-sharded Nekbone solve.
+
+    `axis` is the mesh axis name the elements are partitioned over; PCG dot
+    products and the interface-dof exchange `psum` over it.
+    """
+
+    mesh: Mesh
+    axis: str
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.shape[self.axis]
+
+
+def make_solver_ctx(devices: Optional[int] = None,
+                    axis: str = "elem") -> Optional[SolverShardCtx]:
+    """Build a 1-D element mesh over the first `devices` local devices.
+
+    devices=None uses every visible device; devices=1 (or a single visible
+    device) returns None — callers fall through to the unsharded path, which
+    keeps single-device execution bit-identical to today's solve.
+    """
+    devs = jax.devices()
+    if devices is not None:
+        if devices > len(devs):
+            raise ValueError(
+                f"requested {devices} devices but only {len(devs)} are "
+                f"visible (set XLA_FLAGS=--xla_force_host_platform_device_"
+                f"count={devices} to simulate more on CPU)")
+        devs = devs[:devices]
+    if len(devs) <= 1:
+        return None
+    return SolverShardCtx(Mesh(np.asarray(devs), (axis,)), axis)
 
 
 def make_ctx(mesh: Optional[Mesh]) -> Optional[ShardCtx]:

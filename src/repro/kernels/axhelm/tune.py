@@ -150,6 +150,20 @@ def _save_json(backend: str, key: str, entry: dict) -> None:
         pass  # a read-only cache dir must never break the solve
 
 
+def _clamp_to_elems(eb: int, e_total: Optional[int]) -> int:
+    """Clamp a tuned block size to the caller's element count.
+
+    The cache is keyed per (variant, N, d, dtype) configuration, but the
+    element-sharded solve calls the kernel on per-shard blocks that can be
+    far smaller than the mesh the sweep ran on — a winning block of 64 on a
+    9-element shard would spend 86% of the grid step on padding.  The cached
+    winner stays unclamped; only this call's resolution shrinks."""
+    if e_total is None or eb <= e_total:
+        return eb
+    under = [c for c in _CANDIDATES if c <= max(int(e_total), 1)]
+    return max(under) if under else 1
+
+
 def get_block_elems(variant: str, n1: int, d: int, dtype,
                     helmholtz: bool = False,
                     e_total: Optional[int] = None,
@@ -161,17 +175,17 @@ def get_block_elems(variant: str, n1: int, d: int, dtype,
     with _LOCK:
         hit = _MEM_CACHE.get((backend, key))
     if hit is not None:
-        return hit
+        return _clamp_to_elems(hit, e_total)
     entry = _load_json().get(backend, {}).get(key)
     if entry is not None:
         eb = int(entry["block_elems"])
         with _LOCK:
             _MEM_CACHE[(backend, key)] = eb
-        return eb
+        return _clamp_to_elems(eb, e_total)
     if autotune_now:
         eb, _ = autotune(variant, n1 - 1, d=d, dtype=dtype,
                          helmholtz=helmholtz, interpret=interpret)
-        return eb
+        return _clamp_to_elems(eb, e_total)
     cand = feasible_block_elems(variant, n1, d, dtype, helmholtz, e_total)
     heuristic = default_block_elems(n1, d)
     under = [c for c in cand if c <= heuristic]

@@ -64,6 +64,22 @@ def test_autotune_sweeps_caches_and_reuses(isolated_cache):
     assert tune.get_block_elems("trilinear", 3, 1, jnp.float32) == winner
 
 
+def test_cached_winner_clamped_to_shard_elems(isolated_cache):
+    """A cached block size larger than the caller's element count is clamped
+    to the next candidate at or below it — the element-sharded solve calls
+    the kernel on per-shard blocks much smaller than the tuned mesh."""
+    backend = tune._backend_tag(None)
+    key = tune._config_key("trilinear", 3, 1, jnp.float32, False)
+    tune._MEM_CACHE[(backend, key)] = 64
+    assert tune.get_block_elems("trilinear", 3, 1, jnp.float32) == 64
+    assert tune.get_block_elems("trilinear", 3, 1, jnp.float32,
+                                e_total=9) == 8
+    assert tune.get_block_elems("trilinear", 3, 1, jnp.float32,
+                                e_total=64) == 64
+    # the cached entry itself must stay unclamped
+    assert tune._MEM_CACHE[(backend, key)] == 64
+
+
 def test_block_elems_auto_entry_point(isolated_cache, rng):
     """block_elems='auto' on the public op autotunes then computes."""
     from repro.core import geometry

@@ -1,10 +1,27 @@
-"""Gather-scatter (Q/Q^T actions): adjointness, dssum, multiplicity."""
+"""Gather-scatter (Q/Q^T actions): adjointness, dssum, multiplicity, and
+the sharded (owner-computes) gather algebra on random meshes."""
 
+import contextlib
+
+import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gather_scatter as gs, mesh_gen
+
+
+@contextlib.contextmanager
+def _x64():
+    """fp64 scoped to one property example (restores the incoming state, so
+    the session-scoped x64 fixture other modules rely on is untouched)."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_enable_x64", prev)
 
 
 def _dense_q(mesh):
@@ -20,15 +37,16 @@ def test_matches_dense_q(rng):
     q = _dense_q(mesh)
     xg = rng.standard_normal(mesh.n_global)
     yl = rng.standard_normal(q.shape[0])
-    ids = jnp.asarray(mesh.global_ids)
-    n1 = mesh.order + 1
-    shape = (len(mesh.verts), n1, n1, n1)
-    np.testing.assert_allclose(
-        np.asarray(gs.scatter(jnp.asarray(xg), ids)).reshape(-1), q @ xg,
-        atol=1e-12)
-    np.testing.assert_allclose(
-        gs.gather(jnp.asarray(yl).reshape(shape), ids, mesh.n_global),
-        q.T @ yl, atol=1e-12)
+    with _x64():  # fp64 regardless of which modules ran before this one
+        ids = jnp.asarray(mesh.global_ids)
+        n1 = mesh.order + 1
+        shape = (len(mesh.verts), n1, n1, n1)
+        np.testing.assert_allclose(
+            np.asarray(gs.scatter(jnp.asarray(xg), ids)).reshape(-1), q @ xg,
+            atol=1e-12)
+        np.testing.assert_allclose(
+            gs.gather(jnp.asarray(yl).reshape(shape), ids, mesh.n_global),
+            q.T @ yl, atol=1e-12)
 
 
 @settings(max_examples=10, deadline=None)
@@ -38,13 +56,14 @@ def test_adjointness(seed):
     adjoint) — the identity gslib relies on."""
     rng = np.random.default_rng(seed)
     mesh = mesh_gen.box_mesh(2, 1, 2, 3)
-    ids = jnp.asarray(mesh.global_ids)
-    n1 = mesh.order + 1
-    shape = (len(mesh.verts), n1, n1, n1)
-    x = jnp.asarray(rng.standard_normal(mesh.n_global))
-    y = jnp.asarray(rng.standard_normal(shape))
-    lhs = float(jnp.vdot(gs.scatter(x, ids), y))
-    rhs = float(jnp.vdot(x, gs.gather(y, ids, mesh.n_global)))
+    with _x64():  # fp64 regardless of which modules ran before this one
+        ids = jnp.asarray(mesh.global_ids)
+        n1 = mesh.order + 1
+        shape = (len(mesh.verts), n1, n1, n1)
+        x = jnp.asarray(rng.standard_normal(mesh.n_global))
+        y = jnp.asarray(rng.standard_normal(shape))
+        lhs = float(jnp.vdot(gs.scatter(x, ids), y))
+        rhs = float(jnp.vdot(x, gs.gather(y, ids, mesh.n_global)))
     np.testing.assert_allclose(lhs, rhs, rtol=1e-10)
 
 
@@ -66,6 +85,132 @@ def test_dssum_is_scatter_of_gather(rng):
     out = gs.dssum(y, ids, mesh.n_global)
     ref = gs.scatter(gs.gather(y, ids, mesh.n_global), ids)
     np.testing.assert_allclose(out, ref)
+
+
+def _random_mesh(rng, nx, ny, nz, order):
+    mesh = mesh_gen.box_mesh(nx, ny, nz, order)
+    return mesh_gen.deform_trilinear(mesh, seed=int(rng.integers(100)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(nx=st.integers(1, 3), ny=st.integers(1, 3), nz=st.integers(1, 2),
+       order=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_adjointness_random_meshes(nx, ny, nz, order, seed):
+    """Property: <Q x, y> == <x, Q^T y> on randomly shaped/warped meshes."""
+    rng = np.random.default_rng(seed)
+    mesh = _random_mesh(rng, nx, ny, nz, order)
+    with _x64():
+        ids = jnp.asarray(mesh.global_ids)
+        x = jnp.asarray(rng.standard_normal(mesh.n_global))
+        y = jnp.asarray(rng.standard_normal(mesh.global_ids.shape))
+        lhs = float(jnp.vdot(gs.scatter(x, ids), y))
+        rhs = float(jnp.vdot(x, gs.gather(y, ids, mesh.n_global)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nx=st.integers(1, 3), ny=st.integers(1, 3), nz=st.integers(1, 2),
+       order=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_dssum_averaging_is_projection(nx, ny, nz, order, seed):
+    """Property: P y = Q((Q^T y) / mult) satisfies P(P y) = P y.
+
+    Multiplicity-weighted dssum averaging is how Nek makes a local field
+    globally consistent; being a projection means re-averaging a consistent
+    field is a no-op.
+    """
+    rng = np.random.default_rng(seed)
+    mesh = _random_mesh(rng, nx, ny, nz, order)
+    with _x64():
+        ids = jnp.asarray(mesh.global_ids)
+        mult = gs.multiplicity(ids, mesh.n_global).astype(jnp.float64)
+        y = jnp.asarray(rng.standard_normal(mesh.global_ids.shape))
+
+        def average(y_local):
+            return gs.scatter(
+                gs.gather(y_local, ids, mesh.n_global) / mult, ids)
+
+        once = np.asarray(average(y))
+        twice = np.asarray(average(jnp.asarray(once)))
+    np.testing.assert_allclose(twice, once, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nx=st.integers(1, 4), ny=st.integers(1, 3), nz=st.integers(1, 2),
+       order=st.integers(1, 3), n_shards=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_sharded_gather_matches_dense(nx, ny, nz, order, n_shards, seed):
+    """Property: per-shard local gather + shared-dof exchange == the dense
+    single-device gather, on random meshes and shard counts — including
+    dead-element padding slots fed with garbage."""
+    rng = np.random.default_rng(seed)
+    mesh = _random_mesh(rng, nx, ny, nz, order)
+    e = len(mesh.verts)
+    n_shards = min(n_shards, e)
+    part = mesh_gen.partition_elements(mesh, n_shards)
+    n1 = mesh.order + 1
+
+    y = rng.standard_normal((e, n1, n1, n1))
+    with _x64():
+        dense = np.asarray(gs.gather(jnp.asarray(y),
+                                     jnp.asarray(mesh.global_ids),
+                                     mesh.n_global))
+
+        # per-shard local y blocks; dead-element padding gets garbage that
+        # must all land in the trash slot
+        starts = np.concatenate([[0], np.cumsum(part.elem_counts)])
+        y_dofs = []
+        for s in range(n_shards):
+            blk = rng.standard_normal((part.e_per_shard, n1, n1, n1))
+            blk[:part.elem_counts[s]] = y[starts[s]:starts[s + 1]]
+            y_dofs.append(gs.gather(jnp.asarray(blk),
+                                    jnp.asarray(part.local_ids[s]),
+                                    part.n_local))
+        # the exchange: one summed buffer over the interface dofs only
+        total = sum(
+            gs.shared_contrib(y_dofs[s], jnp.asarray(part.shared_idx[s]),
+                              jnp.asarray(part.shared_present[s]))
+            for s in range(n_shards))
+        out = np.zeros(mesh.n_global)
+        seen = np.zeros(mesh.n_global, dtype=bool)
+        for s in range(n_shards):
+            y_s = np.asarray(gs.apply_shared(
+                y_dofs[s], jnp.asarray(part.shared_idx[s]), total))
+            valid = part.valid_mask[s]
+            gids = part.local_to_global[s][valid]
+            # every shard's valid slots hold the full global sums
+            np.testing.assert_allclose(y_s[valid], dense[gids], rtol=1e-10,
+                                       atol=1e-10)
+            own = part.owned_mask[s]
+            out[part.local_to_global[s][own]] = y_s[own]
+            seen[part.local_to_global[s][own]] = True
+    assert seen.all()  # every global dof owned exactly once
+    np.testing.assert_allclose(out, dense, rtol=1e-10, atol=1e-10)
+
+
+def test_gather_rejects_mismatched_shapes(rng):
+    """Regression: gather() used to treat any ndim==ids.ndim input as a
+    scalar field and reshape blindly — transposed or mis-batched vector
+    fields flowed through silently with wrong results."""
+    mesh = mesh_gen.box_mesh(2, 1, 1, 2)
+    ids = jnp.asarray(mesh.global_ids)
+    n1 = mesh.order + 1
+    e = len(mesh.verts)
+    good = jnp.asarray(rng.standard_normal((e, n1, n1, n1)))
+    # transposed layout: same size, same ndim, wrong axes
+    with pytest.raises(ValueError, match="does not match"):
+        gs.gather(jnp.moveaxis(good, 0, -1), ids, mesh.n_global)
+    # two trailing axes: components must be packed into one axis
+    with pytest.raises(ValueError, match="trailing"):
+        gs.gather(jnp.asarray(
+            rng.standard_normal((e, n1, n1, n1, 3, 2))), ids, mesh.n_global)
+    # wrong element count
+    with pytest.raises(ValueError, match="does not match"):
+        gs.gather(jnp.asarray(
+            rng.standard_normal((e + 1, n1, n1, n1))), ids, mesh.n_global)
+    # valid scalar and vector fields still pass
+    gs.gather(good, ids, mesh.n_global)
+    gs.gather(jnp.asarray(rng.standard_normal((e, n1, n1, n1, 3))), ids,
+              mesh.n_global)
 
 
 def test_vector_field_gather(rng):
