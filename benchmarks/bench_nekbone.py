@@ -5,11 +5,14 @@ iteration count, and final error — and checks the iteration-invariance that
 the paper uses as its correctness evidence.  CPU wall numbers: relative.
 
 Also emits weak/strong-scaling rows for the element-sharded solve
-(`setup_problem(shard_ctx=...)`): strong scaling holds the mesh fixed while
+(`setup_problem(shard_ctx=...)`) and a multi-RHS sweep (`solve` on
+(Ng, nrhs) stacked RHS blocks): strong scaling holds the mesh fixed while
 the device count grows; weak scaling grows the element count with the
-devices.  Results land in BENCH_nekbone.json:
+devices; the nrhs sweep shows the paper-model bytes per RHS falling as the
+batch amortizes the per-element geometry traffic.  Results land in
+BENCH_nekbone.json:
 
-    {"table6": [...], "scaling": [...]}
+    {"table6": [...], "scaling": [...], "multirhs": [...]}
 
 Device counts beyond the visible devices are simulated by re-running this
 script in a subprocess with --xla_force_host_platform_device_count (the
@@ -126,6 +129,52 @@ def scaling_rows(device_counts=(1, 2, 4), nx: int = 3, order: int = 4,
     return out
 
 
+def multirhs_rows(nrhs_list=(1, 2, 4, 8), nx: int = 3, order: int = 4,
+                  tol: float = 1e-6, variant: str = "trilinear",
+                  helm: bool = False):
+    """Block-PCG nrhs sweep on a fixed mesh (single device).
+
+    Per row: per-column iteration counts, wall per solve and per RHS, and
+    the paper-model traffic per RHS (`core.paper_roofline.axhelm_cost` with
+    the nrhs extension): geometry is loaded/recomputed once per element per
+    operator application regardless of nrhs, so bytes/RHS decreases toward
+    the X+Y floor as the batch grows — the solver-level analogue of the
+    paper's recomputation trade.
+    """
+    from repro.core.paper_roofline import axhelm_cost
+
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(nx, nx, nx, order),
+                                     seed=1)
+    prob = nekbone.setup_problem(mesh, variant=variant, helmholtz=helm,
+                                 dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    # ONE solution pool: column j is the same RHS in every row, so its
+    # iteration count must be batch-size-invariant (checked in main)
+    x_all = jnp.asarray(
+        rng.standard_normal((mesh.n_global, max(nrhs_list))), jnp.float32)
+    b_all = nekbone.rhs_from_solution(prob, x_all)
+    out = []
+    for nrhs in nrhs_list:
+        b = b_all[:, :nrhs]
+        res, dt = _timed_solve(prob, b, tol)
+        iters = [int(i) for i in np.atleast_1d(np.asarray(res.iterations))]
+        cost = axhelm_cost(order, 1, helm, variant, fp_size=4, nrhs=nrhs)
+        out.append({
+            "nrhs": nrhs,
+            "variant": variant,
+            "equation": "helmholtz" if helm else "poisson",
+            "elements": len(mesh.verts),
+            "dofs": mesh.n_global,
+            "iters": iters,
+            "wall_s": dt,
+            "wall_per_rhs_s": dt / nrhs,
+            "model_bytes_per_elem": cost.m_bytes,
+            "model_bytes_per_rhs": cost.m_bytes / nrhs,
+            "model_intensity": cost.f_tot / cost.m_bytes,
+        })
+    return out
+
+
 def _scaling_via_subprocess(device_counts, nx, order, tol):
     """Re-run this file with forced host devices; collect its JSON rows."""
     env = dict(os.environ)
@@ -153,10 +202,15 @@ def main():
     ap.add_argument("--order", type=int, default=4)
     ap.add_argument("--tol", type=float, default=1e-6)
     ap.add_argument("--no-scaling", action="store_true")
+    ap.add_argument("--nrhs", default="1,2,4,8",
+                    help="comma-separated RHS-batch widths for the "
+                         "multi-RHS sweep (block-PCG)")
+    ap.add_argument("--no-multirhs", action="store_true")
     ap.add_argument("--scaling-child", action="store_true",
                     help=argparse.SUPPRESS)
     args = ap.parse_args()
     device_counts = tuple(int(s) for s in args.devices.split(","))
+    nrhs_list = tuple(int(s) for s in args.nrhs.split(","))
 
     if args.scaling_child:
         for r in scaling_rows(device_counts, args.nx, args.order, args.tol):
@@ -198,6 +252,30 @@ def main():
         for r in strong:
             assert abs(r["iters"] - base) <= 1, (base, r)
         print("# strong-scaling iteration parity: OK")
+    if not args.no_multirhs:
+        mr = multirhs_rows(nrhs_list, args.nx, args.order, args.tol)
+        payload["multirhs"] = mr
+        print("# multirhs: nrhs,iters,wall_s,wall_per_rhs_s,"
+              "model_bytes_per_rhs")
+        for r in mr:
+            print(f"bench_nekbone_multirhs,{r['nrhs']},"
+                  f"{max(r['iters'])},{r['wall_s']:.4f},"
+                  f"{r['wall_per_rhs_s']:.4f},"
+                  f"{r['model_bytes_per_rhs']:.0f}")
+        # batching must amortize geometry traffic (the acceptance gate) and
+        # must not perturb convergence: column j carries the SAME RHS in
+        # every row, so its iteration count may move by at most 1 as the
+        # batch around it grows (fp reduction-order wiggle only)
+        bpr = [r["model_bytes_per_rhs"] for r in mr]
+        assert all(b1 > b2 for b1, b2 in zip(bpr, bpr[1:])), bpr
+        by_col = {}
+        for r in mr:
+            for j, it in enumerate(r["iters"]):
+                by_col.setdefault(j, []).append(it)
+        for j, its in by_col.items():
+            assert max(its) - min(its) <= 1, (j, its)
+        print("# multi-RHS bytes/RHS decreasing + per-column iteration "
+              "parity: OK")
     with open(OUT_JSON, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     print(f"# wrote {OUT_JSON}")

@@ -136,15 +136,19 @@ def axhelm_markdown_table(rows: Optional[List[dict]] = None) -> str:
     """
     rows = load_axhelm() if rows is None else rows
     lines = [
-        "| eq | variant | backend | us/elem | P_eff GF | bytes/elem | "
-        "intensity | R_eff(v5e) GF | eff |",
-        "|---|---|---|---|---|---|---|---|---|",
+        "| eq | variant | backend | nrhs | us/elem | P_eff GF | bytes/elem | "
+        "bytes/RHS | intensity | R_eff(v5e) GF | eff |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
+        nrhs = r.get("nrhs", 1)
+        bpr = r.get("model_bytes_per_rhs", r["model_bytes_per_elem"] / nrhs)
         lines.append(
             f"| {r['equation']} | {r['variant']} | {r['backend']} | "
+            f"{nrhs} | "
             f"{r['us_per_elem']:.2f} | {r['p_eff_gflops']:.2f} | "
-            f"{r['model_bytes_per_elem']:.0f} | {r['model_intensity']:.2f} | "
+            f"{r['model_bytes_per_elem']:.0f} | {bpr:.0f} | "
+            f"{r['model_intensity']:.2f} | "
             f"{r['model_r_eff_gflops_v5e']:.0f} | "
             f"{r['roofline_frac_v5e']:.4f} |")
     return "\n".join(lines)

@@ -48,10 +48,13 @@ VARIANTS = ("precomputed", "trilinear", "parallelepiped", "merged", "partial")
 
 
 def _expand(a: Optional[jnp.ndarray], x: jnp.ndarray) -> Optional[jnp.ndarray]:
-    """Broadcast a per-node factor (E, N1, N1, N1[, 6]) against x's d axis."""
-    if a is None or x.ndim == 4:
+    """Broadcast a per-node factor (E, N1, N1, N1[, 6]) against x's batch
+    axes — (E, d, N1^3) vector fields and (E, nrhs, d, N1^3) RHS-batched
+    fields insert one and two singleton axes respectively; one factor set
+    per element serves every column."""
+    if a is None or jnp.ndim(a) == 0 or x.ndim == 4:
         return a
-    return a[:, None]
+    return a.reshape(a.shape[:1] + (1,) * (x.ndim - 4) + a.shape[1:])
 
 
 def _core(x: jnp.ndarray, g: jnp.ndarray, dhat: jnp.ndarray,
@@ -153,11 +156,7 @@ def axhelm_partial(x: jnp.ndarray, verts: jnp.ndarray, basis: SpectralBasis,
                    dhat: jnp.ndarray, gscale: jnp.ndarray) -> jnp.ndarray:
     """Paper §4.1.2 (Poisson): recompute adj(K~), re-read gScale from memory."""
     adj = _adjugate_factors(verts, basis)
-    if x.ndim == 5:
-        g = adj[:, None] * gscale[:, None, ..., None]
-    else:
-        g = adj * gscale[..., None]
-    return _core(x, g, dhat)
+    return _core(x, _expand(adj * gscale[..., None], x), dhat)
 
 
 def element_diagonal(factors: GeomFactors, dhat: jnp.ndarray,
@@ -262,23 +261,54 @@ def _pallas_operands(variant: str, basis: SpectralBasis, verts, factors,
     return geom, l0, l1
 
 
-def _make_pallas_apply(variant: str, basis: SpectralBasis, verts, factors,
-                       lam0, lam1, helmholtz: bool, dtype, block_elems,
-                       interpret):
-    """Assemble the per-variant geometry operand once and close over the
-    Pallas entry point (repro.kernels.axhelm.ops.axhelm)."""
-    from repro.kernels.axhelm import ops as kops
+def _validate_setup(variant: str, basis: SpectralBasis, verts, lam0, lam1,
+                    helmholtz: bool) -> None:
+    """Shared argument validation for BOTH axhelm entry points.
 
-    geom, l0, l1 = _pallas_operands(variant, basis, verts, factors, lam0,
-                                    lam1, dtype)
-    kw = {}
-    if variant not in ("merged", "partial"):
-        kw["helmholtz"] = helmholtz
+    `make_axhelm` and `make_axhelm_elem_ops` funnel through here (and
+    through one operand-assembly dispatch below), so unknown variants,
+    wrong-equation variants, and mis-shaped operands fail identically from
+    either — by construction, not by parity testing.
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown axhelm variant {variant!r}; expected one "
+                         f"of {VARIANTS}")
+    if variant == "merged" and not helmholtz:
+        raise ValueError("merged scalar factors apply to Helmholtz only")
+    if variant == "partial" and helmholtz:
+        raise ValueError("partial recalculation applies to Poisson only")
+    if jnp.ndim(verts) != 3 or jnp.shape(verts)[-2:] != (8, 3):
+        raise ValueError(
+            f"axhelm setup: verts must be (E, 8, 3) trilinear element "
+            f"vertices, got shape {jnp.shape(verts)}")
+    node_shape = jnp.shape(verts)[:-2] + (basis.n1,) * 3
+    for name, lam in (("lam0", lam0), ("lam1", lam1)):
+        if lam is None or jnp.ndim(lam) == 0:
+            continue
+        if jnp.shape(lam) != node_shape:
+            raise ValueError(
+                f"axhelm setup: {name} must be a scalar or a per-node "
+                f"(E, N1, N1, N1) field of shape {node_shape}, got "
+                f"{jnp.shape(lam)}")
 
-    def apply(x):
-        return kops.axhelm(x, basis, variant, geom, lam0=l0, lam1=l1,
-                           block_elems=block_elems, interpret=interpret, **kw)
-    return apply
+
+def _setup_factors(variant: str, basis: SpectralBasis, verts, coords,
+                   dtype, elem_ops) -> GeomFactors:
+    """The `GeomFactors` carried on `AxhelmOp` (Jacobi diagonal and other
+    setup products) — reused from `elem_ops` when already assembled."""
+    if variant == "precomputed":
+        if "g" in elem_ops:                      # reference operands
+            return GeomFactors(elem_ops["g"], elem_ops["gwj"])
+        if "geom" in elem_ops:                   # pallas packed [g6, gwj]
+            geom = elem_ops["geom"]
+            return GeomFactors(geom[..., :6], geom[..., 6])
+        if coords is None:
+            coords = geometry.node_coords(verts, basis)
+        return geometry.factors_discrete(jnp.asarray(coords, dtype=dtype),
+                                         basis)
+    if variant == "parallelepiped":
+        return geometry.factors_parallelepiped(verts, basis)
+    return geometry.factors_trilinear(verts, basis)
 
 
 def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
@@ -292,6 +322,11 @@ def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
                 interpret: Optional[bool] = None) -> AxhelmOp:
     """Build an axhelm closure for a mesh (one-time setup outside the solve).
 
+    A thin closure over :func:`make_axhelm_elem_ops` — the closure- and
+    operand-style entry points share ONE dispatch/validation/operand-assembly
+    path, so they cannot drift (they used to be parallel implementations
+    kept in sync only by the op-parity tests).
+
     `coords` (physical node coordinates) is required for the `precomputed`
     variant on general meshes; for trilinear meshes it is derived from verts.
 
@@ -302,61 +337,17 @@ def make_axhelm(variant: str, basis: SpectralBasis, verts: jnp.ndarray,
     `block_elems`/`interpret` are forwarded to the Pallas path (see
     kernels/axhelm/ops.axhelm; block_elems="auto" invokes the autotuner).
     """
-    if variant not in VARIANTS:
-        raise ValueError(f"unknown axhelm variant {variant!r}")
-    backend = _resolve_backend(backend, dtype)
-    dhat = jnp.asarray(basis.dhat, dtype=dtype)
     verts = jnp.asarray(verts, dtype=dtype)
-    if backend == "pallas":
-        return _make_axhelm_pallas(variant, basis, verts, coords, lam0, lam1,
-                                   helmholtz, dtype, block_elems, interpret)
-
-    if variant == "precomputed":
-        if coords is None:
-            coords = geometry.node_coords(verts, basis)
-        factors = geometry.factors_discrete(jnp.asarray(coords, dtype=dtype), basis)
-
-        def apply(x):
-            return axhelm_precomputed(x, factors, dhat, lam0, lam1, helmholtz)
-        return AxhelmOp(apply, factors, variant, helmholtz)
-
-    if variant == "trilinear":
-        def apply(x):
-            return axhelm_trilinear(x, verts, basis, dhat, lam0, lam1, helmholtz)
-        return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
-                        variant, helmholtz)
-
-    if variant == "parallelepiped":
-        def apply(x):
-            return axhelm_parallelepiped(x, verts, basis, dhat, lam0, lam1,
-                                         helmholtz)
-        return AxhelmOp(apply, geometry.factors_parallelepiped(verts, basis),
-                        variant, helmholtz)
-
-    if variant == "merged":
-        if not helmholtz:
-            raise ValueError("merged scalar factors apply to Helmholtz only")
-        node_shape = verts.shape[:-2] + (basis.n1,) * 3
-        l0 = jnp.broadcast_to(jnp.asarray(
-            1.0 if lam0 is None else lam0, dtype=dtype), node_shape)
-        l1 = jnp.broadcast_to(jnp.asarray(
-            1.0 if lam1 is None else lam1, dtype=dtype), node_shape)
-        lam2, lam3 = setup_merged_lambdas(verts, basis, l0, l1)
-
-        def apply(x):
-            return axhelm_merged(x, verts, basis, dhat, lam2, lam3)
-        return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
-                        variant, helmholtz)
-
-    # partial (Poisson)
-    if helmholtz:
-        raise ValueError("partial recalculation applies to Poisson only")
-    gscale = setup_partial_gscale(verts, basis)
+    elem_ops, elem_apply, backend_used = make_axhelm_elem_ops(
+        variant, basis, verts, lam0=lam0, lam1=lam1, helmholtz=helmholtz,
+        dtype=dtype, backend=backend, block_elems=block_elems,
+        interpret=interpret, coords=coords)
+    factors = _setup_factors(variant, basis, verts, coords, dtype, elem_ops)
 
     def apply(x):
-        return axhelm_partial(x, verts, basis, dhat, gscale)
-    return AxhelmOp(apply, geometry.factors_trilinear(verts, basis),
-                    variant, helmholtz)
+        return elem_apply(x, elem_ops)
+
+    return AxhelmOp(apply, factors, variant, helmholtz, backend_used)
 
 
 def make_axhelm_elem_ops(variant: str, basis: SpectralBasis,
@@ -367,32 +358,42 @@ def make_axhelm_elem_ops(variant: str, basis: SpectralBasis,
                          dtype=jnp.float32,
                          backend: Optional[str] = None,
                          block_elems=None,
-                         interpret: Optional[bool] = None):
-    """Operand-style axhelm: `(elem_ops, apply)` with apply(x, elem_ops).
+                         interpret: Optional[bool] = None,
+                         coords: Optional[jnp.ndarray] = None):
+    """Operand-style axhelm: `(elem_ops, apply, backend)` with
+    apply(x, elem_ops) — the ONE setup path both entry points share.
 
-    Unlike :func:`make_axhelm`, the per-element setup products (factors,
-    Lam2/Lam3, gScale, vertices) are returned as a dict of arrays with a
-    leading element axis instead of being closed over.  That is what the
-    element-sharded solve needs: `shard_map` partitions `elem_ops` (and x)
-    over the device mesh and `apply` runs unchanged on each shard's block —
-    closures cannot be sharded, operands can.  Scalar lambdas and the basis
-    stay closed over (replicated constants).
+    The per-element setup products (factors, Lam2/Lam3, gScale, vertices)
+    are returned as a dict of arrays with a leading element axis instead of
+    being closed over.  That is what the element-sharded solve needs:
+    `shard_map` partitions `elem_ops` (and x) over the device mesh and
+    `apply` runs unchanged on each shard's block — closures cannot be
+    sharded, operands can.  Scalar lambdas and the basis stay closed over
+    (replicated constants).  `apply` accepts scalar (E, N1^3), vector
+    (E, d, N1^3) and RHS-batched (E, nrhs, d, N1^3) fields on both
+    backends; every batch column reuses the element's single factor set.
     """
-    if variant not in VARIANTS:
-        raise ValueError(f"unknown axhelm variant {variant!r}")
-    if variant == "merged" and not helmholtz:
-        raise ValueError("merged scalar factors apply to Helmholtz only")
-    if variant == "partial" and helmholtz:
-        raise ValueError("partial recalculation applies to Poisson only")
+    _validate_setup(variant, basis, verts, lam0, lam1, helmholtz)
     backend = _resolve_backend(backend, dtype)
+    if backend == "pallas" and jnp.dtype(dtype).itemsize > 4:
+        import warnings
+
+        warnings.warn(
+            "axhelm backend='pallas' computes in fp32 (no fp64 MXU); "
+            f"requested dtype {jnp.dtype(dtype).name} will not gain "
+            "precision — use backend='reference' for fp64 solves, or "
+            "loosen the PCG tolerance to fp32 levels (>= ~1e-6)",
+            stacklevel=3)
     verts = jnp.asarray(verts, dtype=dtype)
     node_shape = verts.shape[:-2] + (basis.n1,) * 3
 
     if backend == "pallas":
         factors = None
         if variant == "precomputed":
+            if coords is None:
+                coords = geometry.node_coords(verts, basis)
             factors = geometry.factors_discrete(
-                geometry.node_coords(verts, basis), basis)
+                jnp.asarray(coords, dtype=dtype), basis)
         geom, l0, l1 = _pallas_operands(variant, basis, verts, factors,
                                         lam0, lam1, dtype)
         elem_ops = {"geom": geom}
@@ -414,8 +415,10 @@ def make_axhelm_elem_ops(variant: str, basis: SpectralBasis,
 
     dhat = jnp.asarray(basis.dhat, dtype=dtype)
     if variant == "precomputed":
-        factors = geometry.factors_discrete(
-            geometry.node_coords(verts, basis), basis)
+        if coords is None:
+            coords = geometry.node_coords(verts, basis)
+        factors = geometry.factors_discrete(jnp.asarray(coords, dtype=dtype),
+                                            basis)
         elem_ops = {"g": factors.g, "gwj": factors.gwj}
 
         def apply(x, elem_ops):
@@ -452,35 +455,3 @@ def make_axhelm_elem_ops(variant: str, basis: SpectralBasis,
             return axhelm_partial(x, elem_ops["verts"], basis, dhat,
                                   elem_ops["gscale"])
     return elem_ops, apply, backend
-
-
-def _make_axhelm_pallas(variant: str, basis: SpectralBasis, verts, coords,
-                        lam0, lam1, helmholtz: bool, dtype, block_elems,
-                        interpret) -> AxhelmOp:
-    """Pallas-backed AxhelmOp: same setup products (factors for the Jacobi
-    diagonal), apply() drives the TPU kernel."""
-    if jnp.dtype(dtype).itemsize > 4:
-        import warnings
-
-        warnings.warn(
-            "axhelm backend='pallas' computes in fp32 (no fp64 MXU); "
-            f"requested dtype {jnp.dtype(dtype).name} will not gain "
-            "precision — use backend='reference' for fp64 solves, or "
-            "loosen the PCG tolerance to fp32 levels (>= ~1e-6)",
-            stacklevel=3)
-    if variant == "merged" and not helmholtz:
-        raise ValueError("merged scalar factors apply to Helmholtz only")
-    if variant == "partial" and helmholtz:
-        raise ValueError("partial recalculation applies to Poisson only")
-    if variant == "precomputed":
-        if coords is None:
-            coords = geometry.node_coords(verts, basis)
-        factors = geometry.factors_discrete(jnp.asarray(coords, dtype=dtype),
-                                            basis)
-    elif variant == "parallelepiped":
-        factors = geometry.factors_parallelepiped(verts, basis)
-    else:
-        factors = geometry.factors_trilinear(verts, basis)
-    apply = _make_pallas_apply(variant, basis, verts, factors, lam0, lam1,
-                               helmholtz, dtype, block_elems, interpret)
-    return AxhelmOp(apply, factors, variant, helmholtz, "pallas")

@@ -36,7 +36,9 @@ def gather(y_local: jnp.ndarray, global_ids: jnp.ndarray,
     """Q^T y: sum element-local values into global dofs.
 
     `y_local` must be shaped like `global_ids` (scalar field) or like
-    `global_ids` plus one trailing component axis (vector field).
+    `global_ids` plus one trailing component axis — a d-vector field or an
+    nrhs RHS batch (the solver flattens a combined (d, nrhs) batch into one
+    axis before gathering, so one segment-sum serves every column).
     """
     if y_local.shape[:global_ids.ndim] != global_ids.shape:
         raise ValueError(
@@ -83,8 +85,12 @@ def multiplicity(global_ids: jnp.ndarray, n_global: int) -> jnp.ndarray:
 
 
 def _expand_mask(mask: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    """Broadcast a (L,)/(NS,) bool mask against a trailing component axis."""
-    return mask if y.ndim == mask.ndim else mask[..., None]
+    """Broadcast a (L,)/(NS,) bool mask against trailing batch axes — one
+    for a vector field (d) or RHS batch (nrhs), two for a batched vector
+    field (d, nrhs)."""
+    if y.ndim == mask.ndim:
+        return mask
+    return mask.reshape(mask.shape + (1,) * (y.ndim - mask.ndim))
 
 
 def shared_contrib(y_dofs: jnp.ndarray, shared_idx: jnp.ndarray,
@@ -113,8 +119,10 @@ def exchange_shared(y_dofs: jnp.ndarray, shared_idx: jnp.ndarray,
                     axis_name: str) -> jnp.ndarray:
     """Sum interface-dof contributions across shards (the ONLY collective).
 
-    The psum buffer is (NS[, d]) — the shared-face/edge/corner dofs of the
-    partition, not the full field.
+    The psum buffer is (NS[, c]) with c the flattened batch width (d, nrhs,
+    or d*nrhs) — the shared-face/edge/corner dofs of the partition, not the
+    full field.  A multi-RHS solve still pays exactly ONE exchange per
+    operator application: the batch rides along as extra psum columns.
     """
     contrib = shared_contrib(y_dofs, shared_idx, shared_present)
     summed = jax.lax.psum(contrib, axis_name)

@@ -27,7 +27,7 @@ from repro.core import axhelm as axhelm_mod
 from repro.core import gather_scatter as gs
 from repro.core import geometry
 from repro.core.mesh_gen import BoxMesh, MeshPartition, partition_elements
-from repro.core.pcg import PCGResult, owned_dot, pcg
+from repro.core.pcg import PCGResult, owned_dot, pcg, pcg_block
 from repro.core.spectral import SpectralBasis, basis as make_basis
 
 __all__ = ["NekboneProblem", "ShardedNekboneProblem", "setup_problem",
@@ -71,27 +71,38 @@ class ShardedNekboneProblem(NamedTuple):
     run_pcg: object              # (b, tol, max_iter, precond=) -> PCGResult
 
 
-def _global_op(element_op, mesh: BoxMesh, mask, d: int):
+def _global_op(element_op, mesh: BoxMesh, mask):
     """A(x) = M Q^T A_e Q M x + (I - M) x  (M = Dirichlet zero-mask).
 
     The identity on masked dofs keeps the operator SPD on the full vector
     space so plain CG applies (the masked dofs just carry x through).
+
+    Shape-polymorphic over batch axes: accepts (Ng,), (Ng, d), the
+    RHS-batched (Ng, nrhs) and (Ng, d, nrhs).  Every axis after the dof
+    axis is flattened into ONE component column (c = d*nrhs) so a single
+    scatter/segment-sum serves the whole batch, the element kernel sees
+    (E, c, N1^3) and amortizes its per-element geometry across all c
+    columns, and the layout is restored on exit.
     """
     ids = jnp.asarray(mesh.global_ids)
     ng = mesh.n_global
 
     def apply(x):
         x_in = x
+        bshape = x.shape[1:]
         if mask is not None:
-            m = mask if d == 1 else mask[:, None]
+            m = gs._expand_mask(mask, x)
             x = jnp.where(m, 0.0, x)
-        xl = gs.scatter(x, ids)                      # (E, N1,N1,N1[, d])
-        if d > 1:
-            xl = jnp.moveaxis(xl, -1, 1)             # (E, d, N1,N1,N1)
+        xf = x.reshape((ng, -1)) if bshape else x
+        xl = gs.scatter(xf, ids)                     # (E, N1,N1,N1[, c])
+        if bshape:
+            xl = jnp.moveaxis(xl, -1, 1)             # (E, c, N1,N1,N1)
         yl = element_op(xl)
-        if d > 1:
+        if bshape:
             yl = jnp.moveaxis(yl, 1, -1)
         y = gs.gather(yl, ids, ng)
+        if bshape:
+            y = y.reshape((ng,) + bshape)
         if mask is not None:
             y = jnp.where(m, x_in, y)
         return y
@@ -126,7 +137,8 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
                   backend: str | None = None,
                   block_elems=None,
                   interpret: bool | None = None,
-                  shard_ctx=None) -> NekboneProblem:
+                  shard_ctx=None,
+                  nrhs: int | None = None) -> NekboneProblem:
     """Build the global operator + Jacobi diagonal for a mesh/variant.
 
     `backend` selects the element-kernel implementation ("reference",
@@ -140,9 +152,19 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     `shard_map`.  `shard_ctx=None` — and any 1-device context, which
     `make_solver_ctx` already collapses to None — takes the single-device
     path below, bit-identical to previous behaviour.
+
+    `nrhs` declares the RHS-batch width later `solve` calls will use
+    (defaults to `shard_ctx.nrhs`, else 1).  The operator itself is
+    shape-polymorphic — any batch width works at solve time — but the
+    declaration matters for `block_elems="auto"`: the autotune sweep then
+    runs at setup, outside any jit trace, with the VMEM feasibility model
+    charged for the declared batch (an X window `nrhs`x larger, geometry
+    unchanged).
     """
     b = make_basis(mesh.order)
     verts = jnp.asarray(mesh.verts, dtype=dtype)
+    if nrhs is None:
+        nrhs = getattr(shard_ctx, "nrhs", None) or 1
     if helmholtz and lam1 is None:
         lam1 = jnp.asarray(0.1, dtype=dtype)  # Nekbone's h2-like shift
     if helmholtz and lam0 is None:
@@ -150,6 +172,11 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     if dirichlet is None:
         dirichlet = not helmholtz  # Poisson needs the mask to be SPD
     mask = jnp.asarray(mesh.boundary) if dirichlet else None
+    n_shards = shard_ctx.n_shards if shard_ctx is not None else 1
+    e_shard = -(-len(mesh.verts) // max(n_shards, 1))  # per-shard slab size
+    block_elems = _resolve_auto_block(variant, b, d, helmholtz, dtype,
+                                      backend, block_elems, interpret, nrhs,
+                                      e_shard)
 
     if shard_ctx is not None and shard_ctx.n_shards > 1:
         return _setup_problem_sharded(
@@ -160,11 +187,37 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
                                 helmholtz=helmholtz, dtype=dtype,
                                 backend=backend, block_elems=block_elems,
                                 interpret=interpret)
-    apply = _global_op(op.apply, mesh, mask, d)
+    apply = _global_op(op.apply, mesh, mask)
     diag = _global_diag(mesh, b, op.factors, lam0, lam1, helmholtz, d, mask,
                         dtype)
     return NekboneProblem(apply, diag, mask, mesh, b, d, helmholtz, variant,
                           op.backend)
+
+
+def _resolve_auto_block(variant: str, b: SpectralBasis, d: int,
+                        helmholtz: bool, dtype, backend, block_elems,
+                        interpret, nrhs: int, e_shard: int):
+    """Resolve block_elems="auto" to a concrete block size at setup time.
+
+    Runs the tune.py sweep (cache-backed) with the declared RHS-batch width
+    NOW — outside jit and outside `shard_map` tracing — instead of on the
+    first traced apply.  The kernel pins helmholtz per variant the same way
+    ops.axhelm does, so the tune cache key matches the one the apply-time
+    resolution would use; `e_shard` (elements per shard) keeps the
+    per-shard clamp the lazy path applied from x.shape.  Anything other
+    than "auto" passes through.
+    """
+    if block_elems != "auto":
+        return block_elems
+    if axhelm_mod._resolve_backend(backend, dtype) != "pallas":
+        return None  # reference backend has no block knob
+    from repro.kernels.axhelm import tune
+
+    kernel_helm = {"merged": True, "partial": False}.get(variant, helmholtz)
+    return tune.get_block_elems(variant, b.n1, d, dtype,
+                                helmholtz=kernel_helm, autotune_now=True,
+                                interpret=interpret, nrhs=nrhs,
+                                e_total=e_shard)
 
 
 def _diag_factors(variant: str, b: SpectralBasis, verts: jnp.ndarray):
@@ -246,17 +299,26 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         return jnp.zeros(shape, xl.dtype).at[l2g].add(jnp.where(w, xl, 0))
 
     def a_op_local(x, eo, lid, sidx, spres, own, val, m):
-        """Per-shard A(x): scatter -> axhelm -> sharded gather (+ mask)."""
+        """Per-shard A(x): scatter -> axhelm -> sharded gather (+ mask).
+
+        Shape-polymorphic like `_global_op`: trailing batch axes (d, nrhs,
+        or both) are flattened into one component column, so the gather's
+        interface psum is ONE (NS, c) exchange for the whole RHS batch.
+        """
         x_in = x
+        bshape = x.shape[1:]
         if has_mask:
             x = jnp.where(expand(m, x), 0.0, x)
-        xl = x[lid]                                   # (EP, N1,N1,N1[, d])
-        if d > 1:
+        xf = x.reshape((x.shape[0], -1)) if bshape else x
+        xl = xf[lid]                                  # (EP, N1,N1,N1[, c])
+        if bshape:
             xl = jnp.moveaxis(xl, -1, 1)
         yl = elem_apply(xl, eo)
-        if d > 1:
+        if bshape:
             yl = jnp.moveaxis(yl, 1, -1)
         y = gs.gather_sharded(yl, lid, nl, sidx, spres, axis)
+        if bshape:
+            y = y.reshape((nl,) + bshape)
         if has_mask:
             y = jnp.where(expand(m, y), x_in, y)
         # dead-element and padding slots must stay exactly zero: anything
@@ -272,7 +334,7 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         return globalize(body(localize(xg), elem_ops, *idx_args))
 
     def pcg_body(b_loc, dg, tol, max_iter, eo, lid, sidx, spres, own, val,
-                 m, use_jacobi):
+                 m, use_jacobi, batched):
         def a_op(x):
             return a_op_local(x, eo, lid, sidx, spres, own, val, m)
 
@@ -281,18 +343,28 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
             inv_diag = 1.0 / dg
 
             def pre(r):
-                return inv_diag * r
-        res = pcg(a_op, b_loc, precond=pre, tol=tol, max_iter=max_iter,
-                  dot=owned_dot(own, axis))
-        # scalars are replicated across shards; emit one slot per shard so
-        # out_specs=P(axis) reassembles them into an (S,) vector
+                # the diagonal has no RHS axis; broadcast it over the batch
+                return (inv_diag[..., None] if batched else inv_diag) * r
+        if batched:
+            res = pcg_block(a_op, b_loc, precond=pre, tol=tol,
+                            max_iter=max_iter,
+                            dot=owned_dot(own, axis, batched=True))
+        else:
+            res = pcg(a_op, b_loc, precond=pre, tol=tol, max_iter=max_iter,
+                      dot=owned_dot(own, axis))
+        # scalars (per-column vectors in the batched case) are replicated
+        # across shards; emit one leading slot per shard so out_specs=
+        # P(axis) reassembles them into an (S,)/(S, nrhs) array
         return (res.x, res.iterations[None], res.residual[None],
                 res.initial_residual[None])
 
     @functools.partial(jax.jit, static_argnames=("precond",))
     def run_pcg(b_global, tol, max_iter, precond="jacobi"):
+        # trailing axes beyond the (Ng[, d]) base layout are the RHS batch
+        batched = b_global.ndim > (2 if d > 1 else 1)
         body = smap(
-            functools.partial(pcg_body, use_jacobi=precond == "jacobi"),
+            functools.partial(pcg_body, use_jacobi=precond == "jacobi",
+                              batched=batched),
             in_specs=(pe, pe, P(), P(), ops_specs) + idx_specs,
             out_specs=(pe, pe, pe, pe))
         x_loc, it, rr, r0 = body(
@@ -304,17 +376,46 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
 
 
 def rhs_from_solution(problem: NekboneProblem, x_true: jnp.ndarray) -> jnp.ndarray:
-    """Manufactured RHS b = A x_true (x_true zeroed on the mask first)."""
+    """Manufactured RHS b = A x_true (x_true zeroed on the mask first).
+
+    `x_true` may carry a trailing RHS-batch axis — (Ng, nrhs) or
+    (Ng, d, nrhs) — producing a stacked RHS block for the batched solve.
+    """
     if problem.mask is not None:
-        m = problem.mask if problem.d == 1 else problem.mask[:, None]
-        x_true = jnp.where(m, 0.0, x_true)
+        x_true = jnp.where(gs._expand_mask(problem.mask, x_true), 0.0,
+                           x_true)
     return problem.op(x_true)
 
 
 def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
           tol: float = 1e-8, max_iter: int = 200) -> PCGResult:
+    """Solve A x = b (PCG).
+
+    `b_rhs` is (Ng,) for d=1 or (Ng, d) for vector problems; ONE extra
+    trailing axis stacks nrhs right-hand sides — (Ng, nrhs) / (Ng, d, nrhs)
+    — solved together by block-PCG (`core.pcg.pcg_block`): one operator
+    application, one gather exchange and one (batched) dot per iteration
+    for the whole block, with per-column convergence.  The returned
+    `PCGResult` then carries per-column iterations/residuals and an x with
+    the same trailing axis.  A trailing axis of size 1 dispatches to the
+    single-RHS path, so the degenerate batch is bit-identical to the
+    unbatched solve.
+    """
     if precond not in ("jacobi", "copy"):
         raise ValueError(f"unknown preconditioner {precond!r}")
+    base = 1 if problem.d == 1 else 2
+    if b_rhs.ndim not in (base, base + 1):
+        raise ValueError(
+            f"solve: b_rhs must be rank {base} (single RHS) or {base + 1} "
+            f"(stacked RHS) for a d={problem.d} problem, got shape "
+            f"{b_rhs.shape}")
+    batched = b_rhs.ndim == base + 1
+    if batched and b_rhs.shape[-1] == 1:
+        # nrhs=1 degenerates to the exact single-RHS code path
+        res = solve(problem, b_rhs[..., 0], precond=precond, tol=tol,
+                    max_iter=max_iter)
+        return PCGResult(res.x[..., None], res.iterations[None],
+                         res.residual[None], res.initial_residual[None])
     if isinstance(problem, ShardedNekboneProblem):
         return problem.run_pcg(b_rhs, tol, max_iter, precond=precond)
     pre = None
@@ -322,8 +423,9 @@ def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
         inv_diag = 1.0 / problem.diag
 
         def pre(r):
-            return inv_diag * r
-    return pcg(problem.op, b_rhs, precond=pre, tol=tol, max_iter=max_iter)
+            return (inv_diag[..., None] if batched else inv_diag) * r
+    runner = pcg_block if batched else pcg
+    return runner(problem.op, b_rhs, precond=pre, tol=tol, max_iter=max_iter)
 
 
 def flop_count(mesh: BoxMesh, d: int, helmholtz: bool, iterations: int) -> float:

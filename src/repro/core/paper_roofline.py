@@ -55,21 +55,29 @@ class AxhelmCost:
 
 
 def axhelm_cost(n: int, d: int, helmholtz: bool, variant: str,
-                fp_size: int = 8) -> AxhelmCost:
+                fp_size: int = 8, nrhs: int = 1) -> AxhelmCost:
     """Tables 3 & 4 of the paper, per element.
 
     variant in {precomputed, parallelepiped, trilinear, merged, partial}.
     `merged` (Helmholtz) and `partial` (Poisson) are the Section 4.1 column.
+
+    `nrhs` models the multi-RHS batch: X/Y traffic and the contraction/
+    pointwise FLOPs scale per column, but the geometry traffic (M_geo), the
+    recalculation FLOPs (F_regeo) and the lambda fields are paid ONCE per
+    element and shared by every column — so bytes/RHS falls toward the
+    X+Y floor and operational intensity rises with nrhs, the same lever the
+    paper pulls by recomputing factors instead of loading them.
     """
     n1 = n + 1
     is_helm = 1 if helmholtz else 0
-    # Table 3: F_ax = d * (12 N1^4 + (15 + 5 isHelm) N1^3)
-    f_ax = d * (12.0 * n1**4 + (15.0 + 5.0 * is_helm) * n1**3)
+    # Table 3: F_ax = d * (12 N1^4 + (15 + 5 isHelm) N1^3), per RHS column
+    f_ax = nrhs * d * (12.0 * n1**4 + (15.0 + 5.0 * is_helm) * n1**3)
     # Tensor-core-eligible contraction work (paper: F_rs = 8 N1^3 d ... per
     # k-layer over N1 layers => 8 N1^4 d of the 12 N1^4 d contraction FLOPs).
-    f_rs = 8.0 * n1**4 * d
-    # M_XYL: X and Y (d each) + lambda0/lambda1 for Helmholtz (Eq. 7).
-    m_xyl = (2.0 * is_helm + 2.0 * d) * n1**3
+    f_rs = 8.0 * n1**4 * d * nrhs
+    # M_XYL: X and Y (d per column) + shared lambda0/lambda1 for Helmholtz
+    # (Eq. 7 extended with the RHS batch).
+    m_xyl = (2.0 * is_helm + 2.0 * d * nrhs) * n1**3
     # Table 4 per variant: geometry traffic (words) and recalc FLOPs.
     if variant == "precomputed":
         m_geo, f_regeo = (6.0 + is_helm) * n1**3, 0.0
@@ -93,9 +101,9 @@ def axhelm_cost(n: int, d: int, helmholtz: bool, variant: str,
 
 
 def roofline(platform: Platform, n: int, d: int, helmholtz: bool,
-             variant: str, use_tc: bool = True) -> dict:
+             variant: str, use_tc: bool = True, nrhs: int = 1) -> dict:
     """Eq. 18-20: T_mem, T_cmp, R_eff, R_tot (per element, seconds/FLOPs)."""
-    cost = axhelm_cost(n, d, helmholtz, variant, platform.fp_size)
+    cost = axhelm_cost(n, d, helmholtz, variant, platform.fp_size, nrhs=nrhs)
     t_mem = cost.m_bytes / platform.bandwidth
     peak_tc = platform.peak_tc if use_tc else platform.peak_gc
     f_rs = cost.f_rs if use_tc else 0.0

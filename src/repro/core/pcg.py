@@ -4,6 +4,12 @@ The operator is supplied as a closure `A(x)` over global dofs (gather o
 axhelm o scatter).  Preconditioners: COPY (none) and JACOBI (inverse
 diagonal).  The loop is a `jax.lax.while_loop`, so the whole solve is a
 single XLA computation — steppable under pjit on the production mesh.
+
+`pcg_block` is the multi-RHS path: nrhs stacked right-hand sides advance
+through one batched iteration with per-column alpha/beta (each column runs
+its own mathematically independent CG — the operator is RHS-independent, so
+batching changes reduction order only) and a converged-column mask that
+freezes finished columns while the rest keep iterating.
 """
 
 from __future__ import annotations
@@ -13,12 +19,13 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["PCGResult", "pcg", "owned_dot"]
+__all__ = ["PCGResult", "pcg", "pcg_block", "owned_dot"]
 
 
-def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None
+def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None,
+              batched: bool = False
               ) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
-    """A `dot` for `pcg` on element-sharded fields.
+    """A `dot` for `pcg`/`pcg_block` on element-sharded fields.
 
     `weight` is the per-shard ownership indicator (1.0 where this shard owns
     the dof, 0.0 on ghost/padding/trash slots), so interface dofs — which
@@ -26,11 +33,20 @@ def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None
     once; `axis_name` psums the partial reductions across shards.  Inside
     `shard_map` this makes every PCG inner product a single scalar psum,
     which is all the communication the iteration adds on top of the gather.
+
+    With `batched=True` the trailing axis of u/v is an RHS batch: the
+    reduction runs over every axis EXCEPT the last and returns per-column
+    dots of shape (nrhs,) — still one psum, just of an (nrhs,) buffer.
     """
 
     def dot(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
-        w = weight if u.ndim == weight.ndim else weight[..., None]
-        part = jnp.sum(jnp.where(w, u * v, 0))
+        w = weight if u.ndim == weight.ndim else weight.reshape(
+            weight.shape + (1,) * (u.ndim - weight.ndim))
+        prod = jnp.where(w, u * v, 0)
+        if batched:
+            part = jnp.sum(prod, axis=tuple(range(prod.ndim - 1)))
+        else:
+            part = jnp.sum(prod)
         if axis_name is None:
             return part
         return jax.lax.psum(part, axis_name)
@@ -98,3 +114,77 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     state = (x, r, z, p, rz, rr, jnp.array(0, dtype=jnp.int32))
     x, r, _, _, _, rr, it = jax.lax.while_loop(cond, body, state)
     return PCGResult(x, it, jnp.sqrt(rr), r0)
+
+
+def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
+              b: jnp.ndarray,
+              x0: Optional[jnp.ndarray] = None,
+              precond: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+              tol: float = 1e-8,
+              max_iter: int = 200,
+              dot: Optional[Callable[[jnp.ndarray, jnp.ndarray],
+                                     jnp.ndarray]] = None,
+              ) -> PCGResult:
+    """Solve A X = B for nrhs stacked right-hand sides (trailing axis).
+
+    Each column runs the SAME iteration as :func:`pcg` with its own
+    alpha/beta — the operator is applied once per iteration to the whole
+    block, so the gather's interface exchange and the element kernels'
+    geometry loads are amortized over every column.  A column whose carried
+    ``rr`` has met the tolerance is *frozen* (its alpha is masked to zero
+    and its search direction stops updating), so late-converging columns
+    cannot perturb finished ones; the loop runs until every column is
+    converged or ``max_iter``.
+
+    `dot(u, v)` must reduce to per-column values of shape (nrhs,) — the
+    default contracts every axis except the last; on a sharded solve pass
+    ``owned_dot(weight, axis, batched=True)``.  Returns a `PCGResult` whose
+    ``iterations``/``residual``/``initial_residual`` are per-column
+    (nrhs,) arrays; ``iterations`` counts the iterations each column
+    actually advanced before its freeze.
+    """
+    if dot is None:
+        def dot(u, v):
+            return jnp.sum(u * v, axis=tuple(range(u.ndim - 1)))
+    if precond is None:
+        def precond(r):
+            return r
+
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - a_op(x)
+    z = precond(r)
+    p = z
+    rz = dot(r, z)
+    rr = dot(r, r)
+    r0 = jnp.sqrt(rr)
+    tol2 = (tol * tol)
+    nrhs = b.shape[-1]
+
+    def cond(state):
+        _, _, _, _, _, rr, it = state
+        return jnp.logical_and(it[-1] < max_iter, jnp.any(rr > tol2))
+
+    def body(state):
+        x, r, z, p, rz, rr, it = state
+        active = rr > tol2                     # (nrhs,) converged-column mask
+        ap = a_op(p)
+        pap = dot(p, ap)
+        # masked columns get alpha = 0: x, r, p freeze exactly where they
+        # converged (the where-guards keep 0/0 NaNs out of dead columns)
+        alpha = jnp.where(active, rz / jnp.where(pap != 0, pap, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = precond(r)
+        rz_new = dot(r, z)
+        rr_new = dot(r, r)
+        beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
+        p = jnp.where(active, z + beta * p, p)
+        it = it.at[-1].add(1)
+        return (x, r, z, p, rz_new, rr_new,
+                it.at[:nrhs].add(active.astype(jnp.int32)))
+
+    # it carries (nrhs,) per-column counts plus one trailing global counter
+    it0 = jnp.zeros((nrhs + 1,), jnp.int32)
+    state = (x, r, z, p, rz, rr, it0)
+    x, r, _, _, _, rr, it = jax.lax.while_loop(cond, body, state)
+    return PCGResult(x, it[:nrhs], jnp.sqrt(rr), r0)

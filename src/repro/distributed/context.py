@@ -18,7 +18,7 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["ShardCtx", "SolverShardCtx", "make_ctx", "make_solver_ctx",
-           "batch_axes", "constraint"]
+           "constraint"]
 
 
 class ShardCtx(NamedTuple):
@@ -46,11 +46,17 @@ class SolverShardCtx(NamedTuple):
     """1-D device mesh for the element-sharded Nekbone solve.
 
     `axis` is the mesh axis name the elements are partitioned over; PCG dot
-    products and the interface-dof exchange `psum` over it.
+    products and the interface-dof exchange `psum` over it.  `nrhs` is the
+    declared RHS-batch width of the solves this context will run (the
+    execution shape, like the mesh itself): `setup_problem` defaults to it,
+    so block autotuning charges VMEM for the batch the solve will actually
+    carry.  Any batch width still works at solve time — the operator is
+    shape-polymorphic — this is a tuning declaration, not a constraint.
     """
 
     mesh: Mesh
     axis: str
+    nrhs: int = 1
 
     @property
     def n_shards(self) -> int:
@@ -58,13 +64,18 @@ class SolverShardCtx(NamedTuple):
 
 
 def make_solver_ctx(devices: Optional[int] = None,
-                    axis: str = "elem") -> Optional[SolverShardCtx]:
+                    axis: str = "elem",
+                    nrhs: int = 1) -> Optional[SolverShardCtx]:
     """Build a 1-D element mesh over the first `devices` local devices.
 
     devices=None uses every visible device; devices=1 (or a single visible
     device) returns None — callers fall through to the unsharded path, which
-    keeps single-device execution bit-identical to today's solve.
+    keeps single-device execution bit-identical to today's solve.  `nrhs`
+    declares the RHS-batch width of the planned solves (see
+    `SolverShardCtx`).
     """
+    if nrhs < 1:
+        raise ValueError(f"nrhs must be >= 1, got {nrhs}")
     devs = jax.devices()
     if devices is not None:
         if devices > len(devs):
@@ -75,7 +86,7 @@ def make_solver_ctx(devices: Optional[int] = None,
         devs = devs[:devices]
     if len(devs) <= 1:
         return None
-    return SolverShardCtx(Mesh(np.asarray(devs), (axis,)), axis)
+    return SolverShardCtx(Mesh(np.asarray(devs), (axis,)), axis, nrhs)
 
 
 def make_ctx(mesh: Optional[Mesh]) -> Optional[ShardCtx]:

@@ -3,11 +3,15 @@
 TPU adaptation of the paper's GPU kernels (see DESIGN.md §3):
 
   * the CUDA "one 2D thread block per element" becomes a 1-D Pallas grid over
-    *blocks of EB elements*; each grid step holds (EB, d, N1^3) of X in VMEM,
+    *blocks of EB elements*; each grid step holds (EB, nrhs, d, N1^3) of X in
+    VMEM — `nrhs` is the multi-RHS batch axis: every RHS column reuses the
+    SAME geometry block (read once for precomputed/parallelepiped, or
+    recomputed once per element for the on-the-fly variants), so geometry
+    traffic per RHS falls as 1/nrhs (DESIGN.md §4a),
   * the Tensor-Core WMMA contractions become MXU `dot_general`s: the three
     sum-factorization contractions are reshaped into matmuls whose batch/row
-    dimension is EB*d*N1{,^2} — element batching fills the MXU the way the
-    paper's k-layer/warp unrolling fills WMMA fragments,
+    dimension is EB*nrhs*d*N1{,^2} — element *and RHS* batching fill the MXU
+    the way the paper's k-layer/warp unrolling fills WMMA fragments,
   * `__constant__` D̂_N becomes a (N1, N1) VMEM operand broadcast to every
     grid step (index_map -> block 0),
   * the on-the-fly trilinear recalculation (paper Algorithm 3) runs *inside*
@@ -42,7 +46,8 @@ _F32 = jnp.float32
 def _grad(x: jnp.ndarray, dhat: jnp.ndarray):
     """Sum-factorization gradient as three explicit MXU matmuls.
 
-    x: (B, N1, N1, N1) fp32 with B = EB*d.  Returns xr, xs, xt same shape.
+    x: (B, N1, N1, N1) fp32 with B = EB*nrhs*d.  Returns xr, xs, xt same
+    shape.
     """
     b, n1 = x.shape[0], x.shape[-1]
     # D_r: rows of x along i: (B*N1^2, N1) @ Dhat^T
@@ -81,13 +86,17 @@ def _grad_transpose(gxr, gxs, gxt, dhat):
 
 
 def _apply_factors(xr, xs, xt, g6, lam0):
-    """gx* = (lam0) * G . (xr, xs, xt); g6: (EB, N1,N1,N1, 6), x*: (EB, d, ...)."""
-    g = g6[:, None]  # broadcast over d
+    """gx* = (lam0) * G . (xr, xs, xt).
+
+    g6: (EB, N1,N1,N1, 6), x*: (EB, nrhs, d, N1,N1,N1) — one factor set per
+    element broadcasts over both the RHS batch and the component axis.
+    """
+    g = g6[:, None, None]  # broadcast over (nrhs, d)
     gxr = g[..., 0] * xr + g[..., 1] * xs + g[..., 2] * xt
     gxs = g[..., 1] * xr + g[..., 3] * xs + g[..., 4] * xt
     gxt = g[..., 2] * xr + g[..., 4] * xs + g[..., 5] * xt
     if lam0 is not None:
-        l0 = lam0[:, None]
+        l0 = lam0[:, None, None]
         gxr, gxs, gxt = l0 * gxr, l0 * gxs, l0 * gxt
     return gxr, gxs, gxt
 
@@ -133,7 +142,7 @@ def _kernel(*refs, variant: str, helmholtz: bool, has_lam0: bool,
     else:
         raise ValueError(variant)
 
-    x = next(it)[...].astype(_F32)                     # (EB, d, N1, N1, N1)
+    x = next(it)[...].astype(_F32)               # (EB, nrhs, d, N1, N1, N1)
     lam0 = next(it)[...].astype(_F32) if has_lam0 else None
     lam1 = next(it)[...].astype(_F32) if has_lam1 else None
 
@@ -147,28 +156,33 @@ def _kernel(*refs, variant: str, helmholtz: bool, has_lam0: bool,
         g6 = adj * lam0[..., None]
         lam0 = None
 
-    eb, n1 = x.shape[0], x.shape[-1]
-    xb = x.reshape(eb * d, n1, n1, n1)
+    eb, nrhs, n1 = x.shape[0], x.shape[1], x.shape[-1]
+    rows = eb * nrhs * d
+    xb = x.reshape(rows, n1, n1, n1)
     xr, xs, xt = _grad(xb, dhat)
-    shape5 = (eb, d, n1, n1, n1)
-    gxr, gxs, gxt = _apply_factors(xr.reshape(shape5), xs.reshape(shape5),
-                                   xt.reshape(shape5), g6, lam0)
-    y = _grad_transpose(gxr.reshape(eb * d, n1, n1, n1),
-                        gxs.reshape(eb * d, n1, n1, n1),
-                        gxt.reshape(eb * d, n1, n1, n1), dhat).reshape(shape5)
+    shape6 = (eb, nrhs, d, n1, n1, n1)
+    gxr, gxs, gxt = _apply_factors(xr.reshape(shape6), xs.reshape(shape6),
+                                   xt.reshape(shape6), g6, lam0)
+    y = _grad_transpose(gxr.reshape(rows, n1, n1, n1),
+                        gxs.reshape(rows, n1, n1, n1),
+                        gxt.reshape(rows, n1, n1, n1), dhat).reshape(shape6)
     if helmholtz:
         mass = gwj if lam1 is None else lam1 * gwj
-        y = y + mass[:, None] * x
+        y = y + mass[:, None, None] * x
     out_ref[...] = y.astype(out_ref.dtype)
 
 
 def build_axhelm_call(variant: str, *, e_total: int, d: int, n1: int,
                       block_elems: int, helmholtz: bool, has_lam0: bool,
-                      has_lam1: bool, out_dtype, interpret: bool):
+                      has_lam1: bool, out_dtype, interpret: bool,
+                      nrhs: int = 1):
     """Construct the pallas_call for a given static configuration.
 
-    Returns (call, input_order) where input_order names the expected operand
-    sequence for documentation/testing.
+    The X operand is (e_total, nrhs, d, N1, N1, N1): `nrhs` right-hand sides
+    share one geometry load/recomputation per element (the multi-RHS
+    amortization of the paper's factor traffic).  `nrhs=1` is the plain
+    matvec.  Returns (call, input_order) where input_order names the
+    expected operand sequence for documentation/testing.
     """
     if e_total % block_elems != 0:
         raise ValueError("e_total must be padded to a multiple of block_elems")
@@ -206,14 +220,14 @@ def build_axhelm_call(variant: str, *, e_total: int, d: int, n1: int,
     else:
         raise ValueError(variant)
 
-    in_specs.append(per_elem(d, n1, n1, n1)); names.append("x")
+    in_specs.append(per_elem(nrhs, d, n1, n1, n1)); names.append("x")
     if has_lam0:
         in_specs.append(per_elem(n1, n1, n1)); names.append("lam0")
     if has_lam1:
         in_specs.append(per_elem(n1, n1, n1)); names.append("lam1")
 
-    out_spec = pl.BlockSpec((eb, d, n1, n1, n1),
-                            lambda i: (i, 0, 0, 0, 0))
+    out_spec = pl.BlockSpec((eb, nrhs, d, n1, n1, n1),
+                            lambda i: (i, 0, 0, 0, 0, 0))
     kern = functools.partial(_kernel, variant=variant, helmholtz=helmholtz,
                              has_lam0=has_lam0, has_lam1=has_lam1, d=d)
     call = pl.pallas_call(
@@ -221,7 +235,8 @@ def build_axhelm_call(variant: str, *, e_total: int, d: int, n1: int,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((e_total, d, n1, n1, n1), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((e_total, nrhs, d, n1, n1, n1),
+                                       out_dtype),
         interpret=interpret,
     )
     return call, names

@@ -1,9 +1,9 @@
 """Jit'd public wrappers for the Pallas axhelm kernels.
 
-Handles layout normalization ((E, N1^3) scalar vs (E, d, N1^3) vector
-fields), element padding to the block size, operand assembly per variant,
-and interpret-mode selection (interpret=True off-TPU so the kernels validate
-on CPU)."""
+Handles layout normalization ((E, N1^3) scalar, (E, d, N1^3) vector, and
+(E, nrhs, d, N1^3) RHS-batched fields), element padding to the block size,
+operand assembly per variant, and interpret-mode selection (interpret=True
+off-TPU so the kernels validate on CPU)."""
 
 from __future__ import annotations
 
@@ -39,7 +39,7 @@ def _should_interpret(interpret: Optional[bool]) -> bool:
 def _axhelm_impl(x, dhat, xi2, w3, geom_operand, lam0, lam1, *, variant,
                  helmholtz, block_elems, interpret, n):
     n1 = n + 1
-    e_total, d = x.shape[0], x.shape[1]
+    e_total, nrhs, d = x.shape[0], x.shape[1], x.shape[2]
     eb = block_elems
     pad = (-e_total) % eb
     ep = e_total + pad
@@ -71,7 +71,7 @@ def _axhelm_impl(x, dhat, xi2, w3, geom_operand, lam0, lam1, *, variant,
     call, _ = build_axhelm_call(
         variant, e_total=ep, d=d, n1=n1, block_elems=eb, helmholtz=helmholtz,
         has_lam0=lam0 is not None, has_lam1=lam1 is not None,
-        out_dtype=x.dtype, interpret=interpret)
+        out_dtype=x.dtype, interpret=interpret, nrhs=nrhs)
 
     operands = [dhat]
     if variant == "precomputed":
@@ -104,7 +104,10 @@ def axhelm(x: jnp.ndarray, basis: SpectralBasis, variant: str,
            interpret: Optional[bool] = None) -> jnp.ndarray:
     """Apply axhelm via the Pallas kernel.
 
-    x:    (E, N1,N1,N1) scalar field or (E, d, N1,N1,N1) vector field.
+    x:    (E, N1,N1,N1) scalar field, (E, d, N1,N1,N1) vector field, or
+          (E, nrhs, d, N1,N1,N1) RHS-batched field — nrhs right-hand sides
+          share one geometry load/recomputation per element (batched scalar
+          fields are (E, nrhs, 1, N1,N1,N1)).
     geom: variant-dependent —
           precomputed:    (E, N1,N1,N1, 7)   [g00..g22, gwj] packed
           trilinear:      (E, 8, 3)          vertices
@@ -126,22 +129,29 @@ def axhelm(x: jnp.ndarray, basis: SpectralBasis, variant: str,
             raise ValueError("partial requires lam0=gScale and lam1=None "
                              "(see core.axhelm.setup_partial_gscale)")
         helmholtz = False
-    squeeze = x.ndim == 4
-    if squeeze:
+    if x.ndim not in (4, 5, 6):
+        raise ValueError(
+            f"axhelm: x must be (E, N1,N1,N1), (E, d, N1,N1,N1) or "
+            f"(E, nrhs, d, N1,N1,N1), got shape {x.shape}")
+    in_ndim = x.ndim
+    if in_ndim == 4:                       # scalar -> (E, 1, 1, N1^3)
+        x = x[:, None, None]
+    elif in_ndim == 5:                     # vector -> (E, 1, d, N1^3)
         x = x[:, None]
     n1 = basis.n1
-    d = x.shape[1]
+    nrhs, d = x.shape[1], x.shape[2]
     if isinstance(block_elems, str):
         if block_elems != "auto":
             raise ValueError(f"block_elems must be an int, None or 'auto', "
                              f"got {block_elems!r}")
         eb = tune.get_block_elems(variant, n1, d, x.dtype,
                                   helmholtz=helmholtz, e_total=x.shape[0],
-                                  autotune_now=True, interpret=interpret)
+                                  autotune_now=True, interpret=interpret,
+                                  nrhs=nrhs)
     elif block_elems is None:
         eb = tune.get_block_elems(variant, n1, d, x.dtype,
                                   helmholtz=helmholtz, e_total=x.shape[0],
-                                  interpret=interpret)
+                                  interpret=interpret, nrhs=nrhs)
     else:
         eb = int(block_elems)
     dt = x.dtype
@@ -151,12 +161,15 @@ def axhelm(x: jnp.ndarray, basis: SpectralBasis, variant: str,
     y = _axhelm_impl(x, dhat, xi2, w3, geom, lam0, lam1,
                      variant=variant, helmholtz=helmholtz, block_elems=eb,
                      interpret=_should_interpret(interpret), n=basis.n)
-    return y[:, 0] if squeeze else y
+    if in_ndim == 4:
+        return y[:, 0, 0]
+    return y[:, 0] if in_ndim == 5 else y
 
 
 def reference(x, basis: SpectralBasis, variant: str, geom, lam0=None,
               lam1=None, helmholtz=False):
-    """Dispatch to the pure-jnp oracle with the same operand convention."""
+    """Dispatch to the pure-jnp oracle with the same operand convention
+    (including the RHS-batched (E, nrhs, d, N1^3) layout)."""
     squeeze = x.ndim == 4
     if squeeze:
         x = x[:, None]

@@ -1,9 +1,11 @@
 """Pure-jnp oracle for the Pallas axhelm kernels.
 
-Shapes follow the kernel convention: x is (E, d, N1, N1, N1) (d static),
-factors per the variant.  These reuse the validated `repro.core` math — the
-Pallas kernels must agree with these references bit-for-bit up to dtype
-tolerance for every shape/dtype sweep in the tests.
+Shapes follow the kernel convention: x is (E, d, N1, N1, N1) or the
+RHS-batched (E, nrhs, d, N1, N1, N1) (batch axes static), factors per the
+variant — one factor set per element broadcasts over every batch axis.
+These reuse the validated `repro.core` math — the Pallas kernels must agree
+with these references bit-for-bit up to dtype tolerance for every
+shape/dtype sweep in the tests.
 """
 
 from __future__ import annotations
@@ -16,19 +18,26 @@ from repro.core import geometry, sumfact
 from repro.core.geometry import GeomFactors
 
 
+def _batched(a, x):
+    """Insert singleton axes after E so a per-element/per-node factor
+    broadcasts against x's (E, *batch, N1, N1, N1) layout."""
+    return a.reshape(a.shape[:1] + (1,) * (x.ndim - 4) + a.shape[1:])
+
+
 def _core(x, g, dhat, lam0=None, mass=None):
-    """y = D^T (lam0 * G) D x (+ mass * x); factors broadcast over d."""
-    g = g[:, None]  # (E, 1, N1, N1, N1, 6)
+    """y = D^T (lam0 * G) D x (+ mass * x); factors broadcast over the
+    batch axes (d, and nrhs when present)."""
+    g = _batched(g, x)          # (E, 1[, 1], N1, N1, N1, 6)
     xr, xs, xt = sumfact.grad_ref(x, dhat)
     gxr = g[..., 0] * xr + g[..., 1] * xs + g[..., 2] * xt
     gxs = g[..., 1] * xr + g[..., 3] * xs + g[..., 4] * xt
     gxt = g[..., 2] * xr + g[..., 4] * xs + g[..., 5] * xt
     if lam0 is not None:
-        l0 = lam0[:, None]
+        l0 = _batched(lam0, x)
         gxr, gxs, gxt = l0 * gxr, l0 * gxs, l0 * gxt
     y = sumfact.grad_ref_transpose(gxr, gxs, gxt, dhat)
     if mass is not None:
-        y = y + mass[:, None] * x
+        y = y + _batched(mass, x) * x
     return y
 
 

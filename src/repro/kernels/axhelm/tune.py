@@ -52,29 +52,34 @@ _MEM_CACHE: Dict[Tuple[str, str], int] = {}
 _LOCK = threading.Lock()
 
 
-def default_block_elems(n1: int, d: int) -> int:
+def default_block_elems(n1: int, d: int, nrhs: int = 1) -> int:
     """Static fallback: EB so the contraction matmuls see ~128 rows but the
-    X block stays under ~1 MiB fp32 (the pre-autotuner heuristic)."""
-    rows_per_elem = d * n1 * n1
+    X block stays under ~1 MiB fp32 (the pre-autotuner heuristic).  The RHS
+    batch multiplies both the matmul rows and the X block the same way a
+    component axis does."""
+    rows_per_elem = d * nrhs * n1 * n1
     eb = max(1, int(np.ceil(128 / rows_per_elem)))
-    while eb > 1 and eb * d * n1**3 * 4 > 1 << 20:
+    while eb > 1 and eb * d * nrhs * n1**3 * 4 > 1 << 20:
         eb //= 2
     return eb
 
 
 def block_vmem_bytes(variant: str, n1: int, d: int, dtype, eb: int,
-                     helmholtz: bool = False) -> int:
+                     helmholtz: bool = False, nrhs: int = 1) -> int:
     """Estimated VMEM bytes for one grid step.
 
     Counts the HBM-backed operand windows at their storage dtype plus the
     fp32 intermediates the kernel materializes (xr/xs/xt, gxr/gxs/gxt, and
-    the recalculated factor fields for the on-the-fly variants).
+    the recalculated factor fields for the on-the-fly variants).  X, Y and
+    the gradient intermediates scale with the RHS batch `nrhs`; the
+    geometry and lambda windows do NOT — they are per-element and shared by
+    every RHS, which is the whole point of the batching.
     """
     ws = jnp.dtype(dtype).itemsize
     fp32 = 4
     nodes = n1 ** 3
-    total = 2 * eb * d * nodes * ws          # x in + y out
-    total += 6 * eb * d * nodes * fp32       # xr/xs/xt + gxr/gxs/gxt
+    total = 2 * eb * nrhs * d * nodes * ws      # x in + y out
+    total += 6 * eb * nrhs * d * nodes * fp32   # xr/xs/xt + gxr/gxs/gxt
     if variant == "precomputed":
         total += eb * nodes * (6 + (1 if helmholtz else 0)) * ws
         if helmholtz:
@@ -105,11 +110,13 @@ def block_vmem_bytes(variant: str, n1: int, d: int, dtype, eb: int,
 def feasible_block_elems(variant: str, n1: int, d: int, dtype,
                          helmholtz: bool = False,
                          e_total: Optional[int] = None,
-                         budget: int = VMEM_BUDGET_BYTES) -> List[int]:
+                         budget: int = VMEM_BUDGET_BYTES,
+                         nrhs: int = 1) -> List[int]:
     """VMEM-feasible candidate block sizes (always contains at least 1)."""
     out = [eb for eb in _CANDIDATES
            if (e_total is None or eb <= max(int(e_total), 1))
-           and block_vmem_bytes(variant, n1, d, dtype, eb, helmholtz) <= budget]
+           and block_vmem_bytes(variant, n1, d, dtype, eb, helmholtz,
+                                nrhs=nrhs) <= budget]
     return out or [1]
 
 
@@ -120,8 +127,10 @@ def _backend_tag(interpret: Optional[bool]) -> str:
 
 
 def _config_key(variant: str, n1: int, d: int, dtype,
-                helmholtz: bool) -> str:
-    return f"{variant}/n1={n1}/d={d}/{jnp.dtype(dtype).name}/helm={int(helmholtz)}"
+                helmholtz: bool, nrhs: int = 1) -> str:
+    key = f"{variant}/n1={n1}/d={d}/{jnp.dtype(dtype).name}/helm={int(helmholtz)}"
+    # nrhs=1 keeps the pre-batching key so existing caches stay valid
+    return key if nrhs == 1 else key + f"/nrhs={nrhs}"
 
 
 def cache_path() -> str:
@@ -168,10 +177,17 @@ def get_block_elems(variant: str, n1: int, d: int, dtype,
                     helmholtz: bool = False,
                     e_total: Optional[int] = None,
                     autotune_now: bool = False,
-                    interpret: Optional[bool] = None) -> int:
-    """Resolve the block size: mem cache -> JSON cache -> sweep/heuristic."""
+                    interpret: Optional[bool] = None,
+                    nrhs: int = 1) -> int:
+    """Resolve the block size: mem cache -> JSON cache -> sweep/heuristic.
+
+    `nrhs` keys the caches per RHS-batch width and shrinks the VMEM-feasible
+    candidate set (the X window scales with nrhs; the geometry window does
+    not), so a block tuned for the matvec cannot overflow VMEM when the
+    batched solve drives the same configuration.
+    """
     backend = _backend_tag(interpret)
-    key = _config_key(variant, n1, d, dtype, helmholtz)
+    key = _config_key(variant, n1, d, dtype, helmholtz, nrhs)
     with _LOCK:
         hit = _MEM_CACHE.get((backend, key))
     if hit is not None:
@@ -184,15 +200,16 @@ def get_block_elems(variant: str, n1: int, d: int, dtype,
         return _clamp_to_elems(eb, e_total)
     if autotune_now:
         eb, _ = autotune(variant, n1 - 1, d=d, dtype=dtype,
-                         helmholtz=helmholtz, interpret=interpret)
+                         helmholtz=helmholtz, interpret=interpret, nrhs=nrhs)
         return _clamp_to_elems(eb, e_total)
-    cand = feasible_block_elems(variant, n1, d, dtype, helmholtz, e_total)
-    heuristic = default_block_elems(n1, d)
+    cand = feasible_block_elems(variant, n1, d, dtype, helmholtz, e_total,
+                                nrhs=nrhs)
+    heuristic = default_block_elems(n1, d, nrhs)
     under = [c for c in cand if c <= heuristic]
     return max(under) if under else min(cand)
 
 
-def _synthetic_inputs(variant, n, d, dtype, helmholtz, e):
+def _synthetic_inputs(variant, n, d, dtype, helmholtz, e, nrhs=1):
     """Build (x, geom, lam0, lam1) for a timing run (lazy heavy imports)."""
     from repro.core import axhelm as core_ax
     from repro.core import geometry
@@ -205,7 +222,10 @@ def _synthetic_inputs(variant, n, d, dtype, helmholtz, e):
     verts = jnp.asarray(
         ref_cube[None] + 0.15 * rng.standard_normal((e, 8, 3)), dtype)
     node = (e,) + (b.n1,) * 3
-    x_shape = node if d == 1 else (e, d) + (b.n1,) * 3
+    if nrhs > 1:
+        x_shape = (e, nrhs, d) + (b.n1,) * 3
+    else:
+        x_shape = node if d == 1 else (e, d) + (b.n1,) * 3
     x = jnp.asarray(rng.standard_normal(x_shape), dtype)
     lam0 = lam1 = None
     if variant == "precomputed":
@@ -241,7 +261,7 @@ def autotune(variant: str, n: int, d: int = 1, dtype=jnp.float32,
              helmholtz: Optional[bool] = None, e: int = 64, iters: int = 3,
              candidates: Optional[Sequence[int]] = None,
              interpret: Optional[bool] = None,
-             save: bool = True) -> Tuple[int, Dict[int, float]]:
+             save: bool = True, nrhs: int = 1) -> Tuple[int, Dict[int, float]]:
     """Time every feasible block size once; cache and return the winner.
 
     Returns ``(best_block_elems, {block_elems: seconds})``.  The sweep runs
@@ -258,9 +278,9 @@ def autotune(variant: str, n: int, d: int = 1, dtype=jnp.float32,
         helmholtz = variant == "merged"
     n1 = n + 1
     cand = list(candidates) if candidates else feasible_block_elems(
-        variant, n1, d, dtype, helmholtz, e_total=e)
+        variant, n1, d, dtype, helmholtz, e_total=e, nrhs=nrhs)
     b, x, geom, lam0, lam1 = _synthetic_inputs(variant, n, d, dtype,
-                                               helmholtz, e)
+                                               helmholtz, e, nrhs=nrhs)
     kw = {}
     if variant not in ("merged", "partial") and helmholtz:
         kw["helmholtz"] = True
@@ -278,7 +298,7 @@ def autotune(variant: str, n: int, d: int = 1, dtype=jnp.float32,
         timings[eb] = best
     winner = min(timings, key=timings.get)
     backend = _backend_tag(interpret)
-    key = _config_key(variant, n1, d, dtype, helmholtz)
+    key = _config_key(variant, n1, d, dtype, helmholtz, nrhs)
     with _LOCK:
         _MEM_CACHE[(backend, key)] = winner
     if save:

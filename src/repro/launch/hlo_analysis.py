@@ -98,16 +98,24 @@ class HloCost:
 
 
 def _parse_operands(rest: str) -> List[str]:
-    """Operand names up to the closing paren of the op's argument list."""
+    """Operand names up to the closing paren of the op's argument list.
+
+    Operands may carry inline types — `f32[32,64]{1,0} %Arg_0.1` — whose
+    `[dims]` and `{layout}` contain commas, so the splitter must track
+    bracket/brace nesting, not just parens: splitting on every depth-1
+    comma used to shred `f32[32,64]` into fragments, the `%name` lookup
+    came back empty, and every dot's contraction dims resolved to 1 (the
+    FLOP undercount the walker tests pinned).
+    """
     depth = 1
     out, cur = [], []
     for ch in rest:
         if depth == 1 and ch == ",":
             out.append("".join(cur)); cur = []
             continue
-        if ch == "(":
+        if ch in "([{":
             depth += 1
-        elif ch == ")":
+        elif ch in ")]}":
             depth -= 1
             if depth == 0:
                 break

@@ -15,6 +15,7 @@ replicated) — the standard trick for, e.g., GQA kv_heads=4 on a TP=16 mesh.
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -95,18 +96,29 @@ def abstract_params(specs, mesh: Optional[Mesh] = None, rules=None):
 
 
 def init_from_specs(key, specs):
-    """Materialize parameters: truncated-normal fan-in init, per-leaf keys."""
-    leaves, treedef = jax.tree.flatten(
+    """Materialize parameters: truncated-normal fan-in init, per-leaf keys.
+
+    Per-leaf keys are derived from each leaf's *tree path* (fold_in of a
+    stable path hash), NOT from positional `jax.random.split`: a positional
+    split makes every parameter's init depend on how many leaves the spec
+    tree happens to have, so adding one optional buffer (e.g. the
+    `rope_table` of rope_policy="precomputed") silently re-randomized every
+    other weight — two configs differing only in a buffer could never be
+    compared.  Path-keyed init gives any leaf the same values in any tree
+    that contains it.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
-    keys = jax.random.split(key, len(leaves))
     vals = []
-    for k, s in zip(keys, leaves):
+    for path, s in leaves:
         if s.init_scale == 0.0:
             vals.append(jnp.zeros(s.shape, s.dtype))
         elif len(s.shape) <= 1:
             vals.append(jnp.ones(s.shape, s.dtype) if s.init_scale == -1.0
                         else jnp.zeros(s.shape, s.dtype))
         else:
+            path_hash = zlib.crc32(jax.tree_util.keystr(path).encode())
+            k = jax.random.fold_in(key, path_hash)
             fan_in = math.prod(s.shape[:-1])
             std = s.init_scale / math.sqrt(max(fan_in, 1))
             vals.append((jax.random.truncated_normal(k, -2, 2, s.shape,

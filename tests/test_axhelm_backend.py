@@ -77,6 +77,75 @@ def test_backend_env_default(monkeypatch):
     assert op.backend == "reference"
 
 
+# ---------------------------------------------------------------------------
+# Unified setup path: make_axhelm is a thin closure over make_axhelm_elem_ops
+# — the two entry points must agree BY CONSTRUCTION (bit-identical apply)
+# and raise identical validation errors from the one shared path.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant,helm", ALL_CASES)
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_make_axhelm_matches_elem_ops_by_construction(rng, variant, helm,
+                                                      backend):
+    """Closure-style and operand-style applies are the same code path, so
+    their outputs are BIT-identical (not just close) on every variant and
+    backend — the drift the op-parity tests used to guard is now
+    impossible by construction."""
+    n = 3
+    b = basis(n)
+    mesh = _mesh(variant, n)
+    verts = jnp.asarray(mesh.verts, jnp.float32)
+    e = verts.shape[0]
+    x = jnp.asarray(rng.standard_normal((e, b.n1, b.n1, b.n1)), jnp.float32)
+    kw = {}
+    if helm:
+        node = (e, b.n1, b.n1, b.n1)
+        kw = dict(lam0=jnp.asarray(1 + 0.3 * rng.random(node), jnp.float32),
+                  lam1=jnp.asarray(0.5 + 0.2 * rng.random(node),
+                                   jnp.float32),
+                  helmholtz=True)
+    op = core_ax.make_axhelm(variant, b, verts, dtype=jnp.float32,
+                             backend=backend, **kw)
+    elem_ops, elem_apply, backend_used = core_ax.make_axhelm_elem_ops(
+        variant, b, verts, dtype=jnp.float32, backend=backend, **kw)
+    assert op.backend == backend_used == backend
+    y_closure = op.apply(x)
+    y_operand = elem_apply(x, elem_ops)
+    assert bool(jnp.all(y_closure == y_operand)), (variant, helm, backend)
+    # the batched layout flows through both styles identically as well
+    xb = jnp.asarray(rng.standard_normal((e, 2, 1, b.n1, b.n1, b.n1)),
+                     jnp.float32)
+    assert bool(jnp.all(op.apply(xb) == elem_apply(xb, elem_ops)))
+
+
+@pytest.mark.parametrize("entry", ["make_axhelm", "make_axhelm_elem_ops"])
+def test_shared_path_validation_errors(rng, entry):
+    """Unknown variants, wrong-equation variants, and mis-shaped operands
+    raise the same ValueError from BOTH entry points (one shared
+    _validate_setup)."""
+    b = basis(2)
+    verts = jnp.asarray(_mesh("trilinear", 2).verts, jnp.float32)
+    e = verts.shape[0]
+    make = getattr(core_ax, entry)
+    with pytest.raises(ValueError, match="unknown axhelm variant"):
+        make("spectral", b, verts, dtype=jnp.float32)
+    with pytest.raises(ValueError, match="Helmholtz only"):
+        make("merged", b, verts, dtype=jnp.float32, helmholtz=False)
+    with pytest.raises(ValueError, match="Poisson only"):
+        make("partial", b, verts, dtype=jnp.float32, helmholtz=True)
+    with pytest.raises(ValueError, match=r"verts must be \(E, 8, 3\)"):
+        make("trilinear", b, verts.reshape(-1, 3), dtype=jnp.float32)
+    bad_lam = jnp.ones((e, 2, 2, 2), jnp.float32)  # wrong node shape
+    with pytest.raises(ValueError, match="lam0 must be a scalar or"):
+        make("trilinear", b, verts, dtype=jnp.float32, helmholtz=True,
+             lam0=bad_lam)
+    # scalars and correctly shaped fields still pass
+    make("trilinear", b, verts, dtype=jnp.float32, helmholtz=True,
+         lam0=jnp.asarray(2.0), lam1=jnp.ones((e, b.n1, b.n1, b.n1),
+                                              jnp.float32))
+
+
 @pytest.mark.parametrize("variant,helm", [("trilinear", False),
                                           ("partial", False),
                                           ("merged", True)])

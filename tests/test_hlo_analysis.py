@@ -8,15 +8,10 @@ import pytest
 
 from repro.launch.hlo_analysis import _type_bytes, analyze_hlo
 
-# Pre-existing seed failure: the walker's dot-FLOP extraction does not match
-# the HLO text this jax/XLA CPU build emits — e.g. a 32x64x16 matmul counts
-# 1024 flops instead of 65536 (launch/hlo_analysis.py misses the fused/
-# reduced dot contraction dims), so all exact-count assertions undershoot.
-_FLOP_WALKER_XFAIL = pytest.mark.xfail(
-    strict=False,
-    reason="seed: analyze_hlo undercounts dot FLOPs on this XLA CPU build "
-           "(1024 vs 65536 for a 32x64x16 matmul) — contraction-dim parsing "
-           "in launch/hlo_analysis.py does not match the emitted HLO text")
+# The seed's dot-FLOP undercount (1024 vs 65536 for a 32x64x16 matmul) was
+# root-caused to _parse_operands splitting on the commas INSIDE inline
+# operand types (`f32[32,64]{1,0} %arg`) — fixed by bracket-aware operand
+# splitting; the exact-count tests below are the regression gate.
 
 
 def test_type_bytes():
@@ -26,7 +21,6 @@ def test_type_bytes():
     assert _type_bytes("u8[128]") == 128
 
 
-@_FLOP_WALKER_XFAIL
 def test_matmul_flops_exact():
     a = jnp.zeros((32, 64), jnp.float32)
     b = jnp.zeros((64, 16), jnp.float32)
@@ -35,7 +29,6 @@ def test_matmul_flops_exact():
     np.testing.assert_allclose(cost.flops, 2 * 32 * 64 * 16, rtol=1e-12)
 
 
-@_FLOP_WALKER_XFAIL
 def test_scan_trip_count_folded():
     """A scan of L matmuls must count L x the body flops."""
     L, D = 5, 32
@@ -53,7 +46,6 @@ def test_scan_trip_count_folded():
     np.testing.assert_allclose(cost.flops, L * 2 * 4 * D * D, rtol=1e-6)
 
 
-@_FLOP_WALKER_XFAIL
 def test_grad_scan_counts_forward_and_backward():
     L, D = 3, 16
     params = jnp.zeros((L, D, D), jnp.float32)

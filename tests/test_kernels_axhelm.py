@@ -204,6 +204,91 @@ def test_merged_partial_operand_validation(rng):
         kops.axhelm(x, b, "partial", verts, lam0=gs, lam1=gs)  # stray lam1
 
 
+def _variant_operands(variant, verts, b, rng, helm):
+    """(geom, kwargs) for any of the five variants (helm only where legal)."""
+    if variant == "precomputed":
+        geom = _geom_precomputed(verts, b)
+    elif variant == "parallelepiped":
+        geom = kref.gelem_from_verts(verts)
+    else:
+        geom = verts
+    e = verts.shape[0]
+    node = (e, b.n1, b.n1, b.n1)
+    if variant == "merged":
+        (lam2, lam3), _ = _merged_operands(verts, b, rng)
+        return geom, dict(lam0=lam2, lam1=lam3)
+    if variant == "partial":
+        return geom, dict(lam0=_partial_operand(verts, b))
+    kw = {}
+    if helm:
+        kw = dict(lam0=jnp.asarray(1 + 0.3 * rng.random(node), jnp.float32),
+                  lam1=jnp.asarray(0.5 + 0.2 * rng.random(node),
+                                   jnp.float32),
+                  helmholtz=True)
+    return geom, kw
+
+
+@pytest.mark.parametrize("variant,helm", [
+    ("precomputed", False), ("trilinear", False), ("parallelepiped", False),
+    ("partial", False), ("merged", True), ("precomputed", True)])
+@pytest.mark.parametrize("d", [1, 3])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5),
+                                       (jnp.bfloat16, 0.05)])
+def test_batched_matches_vmapped_single_rhs(rng, variant, helm, d, dtype,
+                                            tol):
+    """Property (all five variants, fp32/bf16, d=1/3): one batched kernel
+    call on (E, nrhs, d, N1^3) == vmapping the single-RHS kernel over the
+    RHS axis — the batch reuses one geometry set per element but computes
+    every column exactly as the unbatched kernel would."""
+    import jax
+
+    n, nrhs = 3, 3
+    b = basis(n)
+    mesh_fn = mesh_gen.deform_affine if variant == "parallelepiped" \
+        else mesh_gen.deform_trilinear
+    mesh = mesh_fn(mesh_gen.box_mesh(2, 2, 1, n), seed=1)
+    verts = jnp.asarray(mesh.verts, jnp.float32)
+    e = verts.shape[0]
+    geom, kw = _variant_operands(variant, verts, b, rng, helm)
+    geom = geom.astype(dtype)
+    kw = {k: (v.astype(dtype) if hasattr(v, "astype") else v)
+          for k, v in kw.items()}
+    x = jnp.asarray(rng.standard_normal((e, nrhs, d, b.n1, b.n1, b.n1)),
+                    dtype)
+
+    def single(xcol):                       # (E, d, N1^3) -> (E, d, N1^3)
+        return kops.axhelm(xcol, b, variant, geom, block_elems=2, **kw)
+
+    y_batched = kops.axhelm(x, b, variant, geom, block_elems=2, **kw)
+    y_vmapped = jax.vmap(single, in_axes=1, out_axes=1)(x)
+    assert y_batched.shape == x.shape
+    np.testing.assert_allclose(np.asarray(y_batched, np.float32),
+                               np.asarray(y_vmapped, np.float32),
+                               rtol=tol, atol=tol)
+    # and the batched oracle agrees too
+    y_ref = kops.reference(
+        x.astype(jnp.float32), b, variant,
+        geom.astype(jnp.float32),
+        **{k: (v.astype(jnp.float32) if hasattr(v, "astype") else v)
+           for k, v in kw.items()})
+    np.testing.assert_allclose(np.asarray(y_batched, np.float32), y_ref,
+                               rtol=max(tol, 2e-5), atol=max(tol, 1e-4))
+
+
+def test_batched_scalar_layout(rng):
+    """(E, nrhs, 1, N1^3) batched scalar == stacking single scalar calls."""
+    b = basis(3)
+    verts = _mesh_verts(3)
+    e = verts.shape[0]
+    x = jnp.asarray(rng.standard_normal((e, 4, 1, b.n1, b.n1, b.n1)),
+                    jnp.float32)
+    y = kops.axhelm(x, b, "trilinear", verts, block_elems=2)
+    y_loop = jnp.stack([kops.axhelm(x[:, r, 0], b, "trilinear", verts,
+                                    block_elems=2)
+                        for r in range(4)], axis=1)[:, :, None]
+    np.testing.assert_allclose(y, y_loop, rtol=1e-6, atol=1e-6)
+
+
 def test_kernel_agrees_with_core_solver_path(rng):
     """Kernel path == the fp64-validated core operator (fp32 tolerance)."""
     from repro.core import axhelm as core_ax

@@ -115,13 +115,16 @@ def test_full_configs_have_expected_scale():
         assert lo < n_params < hi, (arch, n_params)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="seed: precomputed-table RoPE disagrees with on-the-fly RoPE "
-           "(loss delta ~0.12 > 1e-2 at reduced scale) — the rope_table "
-           "lookup path in models/rope.py drifts from the analytic rotation")
 def test_rope_policy_switch_same_loss(rng):
-    """paper-analogue: precomputed-table RoPE == on-the-fly RoPE."""
+    """paper-analogue: precomputed-table RoPE == on-the-fly RoPE.
+
+    The seed-era drift (~0.12 loss delta) was never in models/rope.py — the
+    table and analytic paths are bit-identical — but in init_from_specs:
+    positional per-leaf key splitting meant the extra `rope_table` leaf
+    re-randomized every other weight, so the two policies compared two
+    different models.  Path-keyed init (models/params.py) fixed it; this
+    test is the regression gate.
+    """
     cfg = reduced_config(configs.get("qwen3_0_6b"))
     batch = _batch(cfg, rng)
     losses = {}
