@@ -9,8 +9,11 @@ Also emits weak/strong-scaling rows for the element-sharded solve
 (Ng, nrhs) stacked RHS blocks): strong scaling holds the mesh fixed while
 the device count grows; weak scaling grows the element count with the
 devices; the nrhs sweep shows the paper-model bytes per RHS falling as the
-batch amortizes the per-element geometry traffic.  Results land in
-BENCH_nekbone.json:
+batch amortizes the per-element geometry traffic.  Every sharded scaling
+configuration is measured under BOTH interface exchanges (mesh-wide psum
+and the overlapped neighbour ppermute path) and carries the partition's
+surface metrics (per-shard shared-dof counts, interface-element fraction).
+Results land in BENCH_nekbone.json:
 
     {"table6": [...], "scaling": [...], "multirhs": [...]}
 
@@ -85,12 +88,20 @@ def rows(nx: int = 4, order: int = 7, tol: float = 1e-8):
 
 
 def scaling_rows(device_counts=(1, 2, 4), nx: int = 3, order: int = 4,
-                 tol: float = 1e-6, variant: str = "trilinear"):
+                 tol: float = 1e-6, variant: str = "trilinear",
+                 exchanges=("psum", "neighbour")):
     """Weak + strong scaling of the sharded solve (run with enough devices).
 
     Strong: the (nx, nx, nx) mesh is fixed; devices split its elements.
     Weak:   the mesh grows to (nx * devices, nx, nx) — constant elements
             per device.
+
+    Every sharded configuration is measured once per interface-exchange
+    implementation (`exchanges`): the mesh-wide psum and the overlapped
+    neighbour ppermute path, so the exchange cost shows up as a row pair.
+    Each sharded row also records the partition-quality surface metrics —
+    per-shard shared-dof counts and the interface-element fraction — the
+    quantities a 2-D/3-D box decomposition would shrink.
     """
     from repro.distributed.context import make_solver_ctx
 
@@ -101,31 +112,44 @@ def scaling_rows(device_counts=(1, 2, 4), nx: int = 3, order: int = 4,
             shape = (nx, nx, nx) if mode == "strong" else (nx * s, nx, nx)
             mesh = mesh_gen.deform_trilinear(
                 mesh_gen.box_mesh(*shape, order), seed=1)
-            ctx = make_solver_ctx(devices=s) if s > 1 else None
-            prob = nekbone.setup_problem(mesh, variant=variant,
-                                         dtype=jnp.float32, shard_ctx=ctx)
             x_true = jnp.asarray(rng.standard_normal(mesh.n_global),
                                  jnp.float32)
-            b = nekbone.rhs_from_solution(prob, x_true)
-            res, dt = _timed_solve(prob, b, tol)
-            iters = int(res.iterations)
-            flops = nekbone.flop_count(mesh, 1, False, iters)
-            row = {
-                "mode": mode,
-                "devices": s,
-                "variant": variant,
-                "elements": len(mesh.verts),
-                "dofs": mesh.n_global,
-                "iters": iters,
-                "wall_s": dt,
-                "gflops": flops / dt / 1e9,
-                "gdofs": mesh.n_global * iters / dt / 1e9,
-            }
-            if ctx is not None:
-                part = prob.partition
-                row["shared_dofs"] = int(part.n_shared)
-                row["shared_frac"] = part.n_shared / mesh.n_global
-            out.append(row)
+            for exchange in (exchanges if s > 1 else exchanges[:1]):
+                ctx = make_solver_ctx(devices=s, exchange=exchange) \
+                    if s > 1 else None
+                prob = nekbone.setup_problem(mesh, variant=variant,
+                                             dtype=jnp.float32,
+                                             shard_ctx=ctx)
+                b = nekbone.rhs_from_solution(prob, x_true)
+                res, dt = _timed_solve(prob, b, tol)
+                iters = int(res.iterations)
+                flops = nekbone.flop_count(mesh, 1, False, iters)
+                row = {
+                    "mode": mode,
+                    "devices": s,
+                    "variant": variant,
+                    "exchange": exchange if s > 1 else "none",
+                    "elements": len(mesh.verts),
+                    "dofs": mesh.n_global,
+                    "iters": iters,
+                    "wall_s": dt,
+                    "gflops": flops / dt / 1e9,
+                    "gdofs": mesh.n_global * iters / dt / 1e9,
+                }
+                if ctx is not None:
+                    part = prob.partition
+                    row["shared_dofs"] = int(part.n_shared)
+                    row["shared_frac"] = part.n_shared / mesh.n_global
+                    # partition-quality surface metrics (box-decomposition
+                    # groundwork): how many interface dofs each shard
+                    # actually touches, and how much of the element volume
+                    # sits on the surface
+                    row["shared_dofs_per_shard"] = [
+                        int(c) for c in part.shared_present.sum(axis=1)]
+                    row["iface_elem_frac"] = \
+                        float(part.iface_counts.sum()) / len(mesh.verts)
+                    row["neighbour_offsets"] = list(part.nbr_offsets)
+                out.append(row)
     return out
 
 
@@ -175,6 +199,25 @@ def multirhs_rows(nrhs_list=(1, 2, 4, 8), nx: int = 3, order: int = 4,
     return out
 
 
+def _check_scaling(sc):
+    """Print the scaling rows and machine-check the parity evidence."""
+    print("# scaling: mode,devices,exchange,elements,dofs,iters,wall_s,"
+          "gflops")
+    for r in sc:
+        print(f"bench_nekbone_scaling,{r['mode']},{r['devices']},"
+              f"{r['exchange']},{r['elements']},{r['dofs']},{r['iters']},"
+              f"{r['wall_s']:.4f},{r['gflops']:.2f}")
+    # sharding must not change the iteration count (parity evidence):
+    # every strong-scaling run — psum AND neighbour exchange — within +-1
+    # of the fewest-devices run
+    strong = sorted((r for r in sc if r["mode"] == "strong"),
+                    key=lambda r: r["devices"])
+    base = strong[0]["iters"]
+    for r in strong:
+        assert abs(r["iters"] - base) <= 1, (base, r)
+    print("# strong-scaling iteration parity (both exchanges): OK")
+
+
 def _scaling_via_subprocess(device_counts, nx, order, tol):
     """Re-run this file with forced host devices; collect its JSON rows."""
     env = dict(os.environ)
@@ -206,6 +249,10 @@ def main():
                     help="comma-separated RHS-batch widths for the "
                          "multi-RHS sweep (block-PCG)")
     ap.add_argument("--no-multirhs", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: scaling rows only (incl. the neighbour-"
+                         "exchange rows) on a small mesh, skip table6 and "
+                         "the multi-RHS sweep")
     ap.add_argument("--scaling-child", action="store_true",
                     help=argparse.SUPPRESS)
     args = ap.parse_args()
@@ -215,6 +262,18 @@ def main():
     if args.scaling_child:
         for r in scaling_rows(device_counts, args.nx, args.order, args.tol):
             print(json.dumps(r))
+        return
+
+    if args.smoke:
+        sc = _scaling_via_subprocess(device_counts, args.nx, args.order,
+                                     args.tol) \
+            if jax.device_count() < max(device_counts) \
+            else scaling_rows(device_counts, args.nx, args.order, args.tol)
+        _check_scaling(sc)
+        with open(OUT_JSON, "w") as f:
+            json.dump({"scaling": sc}, f, indent=1, sort_keys=True)
+        print(f"# smoke: wrote {OUT_JSON} ({len(sc)} scaling rows, "
+              f"exchanges: {sorted({r['exchange'] for r in sc})})")
         return
 
     print("# bench_nekbone (Table 6 analogue): eq,variant,gflops,gdofs,"
@@ -239,19 +298,7 @@ def main():
             sc = _scaling_via_subprocess(device_counts, args.nx, args.order,
                                          args.tol)
         payload["scaling"] = sc
-        print("# scaling: mode,devices,elements,dofs,iters,wall_s,gflops")
-        for r in sc:
-            print(f"bench_nekbone_scaling,{r['mode']},{r['devices']},"
-                  f"{r['elements']},{r['dofs']},{r['iters']},"
-                  f"{r['wall_s']:.4f},{r['gflops']:.2f}")
-        # sharding must not change the iteration count (parity evidence):
-        # every strong-scaling run within +-1 of the fewest-devices run
-        strong = sorted((r for r in sc if r["mode"] == "strong"),
-                        key=lambda r: r["devices"])
-        base = strong[0]["iters"]
-        for r in strong:
-            assert abs(r["iters"] - base) <= 1, (base, r)
-        print("# strong-scaling iteration parity: OK")
+        _check_scaling(sc)
     if not args.no_multirhs:
         mr = multirhs_rows(nrhs_list, args.nx, args.order, args.tol)
         payload["multirhs"] = mr

@@ -6,7 +6,8 @@ chosen axhelm variant; prints GFLOPS / GDOFS / iterations / error.
 Run:  PYTHONPATH=src python examples/nekbone_solve.py \
           [--elements 4 4 4] [--order 7] [--variant trilinear] \
           [--equation poisson] [--d 1] [--precision float32] \
-          [--backend auto] [--block-elems N|auto] [--devices N] [--nrhs R]
+          [--backend auto] [--block-elems N|auto] [--devices N] [--nrhs R] \
+          [--exchange psum|neighbour]
 
 --backend auto drives the Pallas axhelm kernel inside the PCG while_loop
 (interpret mode off-TPU) for fp32/bf16 and the jnp reference for fp64;
@@ -14,6 +15,8 @@ Run:  PYTHONPATH=src python examples/nekbone_solve.py \
 --devices N shards the elements over N devices (shard_map element
 partition + interface-dof exchange; on a CPU-only host missing devices are
 simulated via --xla_force_host_platform_device_count).
+--exchange neighbour swaps the mesh-wide interface psum for per-neighbour
+ppermute rounds that overlap with interior-element compute (DESIGN.md).
 --nrhs R solves R stacked right-hand sides in one block-PCG: one operator
 application, one interface exchange and one batched dot per iteration for
 the whole block — geometry traffic is amortized over the batch.
@@ -49,6 +52,12 @@ def _parse_args():
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the solve over N devices (1 = the exact "
                          "single-device path)")
+    ap.add_argument("--exchange", default="psum",
+                    choices=["psum", "neighbour"],
+                    help="interface-dof exchange on the sharded solve: one "
+                         "mesh-wide psum (default), or per-neighbour "
+                         "ppermute rounds overlapped with interior-element "
+                         "compute")
     ap.add_argument("--nrhs", type=int, default=1,
                     help="solve R stacked right-hand sides with block-PCG "
                          "(1 = the exact single-RHS path)")
@@ -89,12 +98,13 @@ def main():
     else:
         mesh = mesh_gen.deform_trilinear(mesh, seed=3)
     e = len(mesh.verts)
-    shard_ctx = make_solver_ctx(devices=args.devices, nrhs=args.nrhs) \
+    shard_ctx = make_solver_ctx(devices=args.devices, nrhs=args.nrhs,
+                                exchange=args.exchange) \
         if args.devices > 1 else None
     n_shards = shard_ctx.n_shards if shard_ctx is not None else 1
     print(f"mesh: E={e} N={args.order} dofs={mesh.n_global} "
           f"variant={args.variant} eq={args.equation} d={args.d} "
-          f"devices={n_shards} nrhs={args.nrhs}")
+          f"devices={n_shards} nrhs={args.nrhs} exchange={args.exchange}")
 
     prob = nekbone.setup_problem(mesh, variant=args.variant, d=args.d,
                                  helmholtz=helm, dtype=dtype,
@@ -104,10 +114,13 @@ def main():
     print(f"backend={prob.backend}")
     if shard_ctx is not None:
         part = prob.partition
+        iface_frac = float(part.iface_counts.sum()) / e
         print(f"partition: shards={part.n_shards} "
               f"elems/shard={[int(c) for c in part.elem_counts]} "
               f"local_dofs={part.n_local} shared_dofs={part.n_shared} "
-              f"({part.n_shared / mesh.n_global:.1%} of field exchanged)")
+              f"({part.n_shared / mesh.n_global:.1%} of field exchanged) "
+              f"iface_elems={iface_frac:.1%} "
+              f"neighbour_offsets={list(part.nbr_offsets)}")
     rng = np.random.default_rng(0)
     shape = (mesh.n_global,) if args.d == 1 else (mesh.n_global, args.d)
     if args.nrhs > 1:

@@ -15,7 +15,7 @@ for the exchange protocol.
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,8 @@ import jax.numpy as jnp
 __all__ = [
     "scatter", "gather", "dssum", "multiplicity",
     "shared_contrib", "apply_shared", "exchange_shared", "gather_sharded",
+    "NeighbourRound", "neighbour_rounds", "neighbour_start",
+    "neighbour_finish", "exchange_neighbour", "gather_sharded_neighbour",
 ]
 
 
@@ -145,3 +147,118 @@ def gather_sharded(y_local: jnp.ndarray, local_ids: jnp.ndarray,
     if axis_name is None:
         return y_dofs
     return exchange_shared(y_dofs, shared_idx, shared_present, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# Neighbour-wise (ppermute) interface exchange: instead of one mesh-wide
+# psum over ALL interface dofs, each shard trades per-pair buffers with the
+# few shards it actually borders.  One exchange is a fixed set of ROUNDS —
+# one per neighbour offset k, two `lax.ppermute` shifts each (+k and -k) —
+# whose point-to-point permutes never serialize the mesh behind a global
+# all-reduce and whose start can be hoisted before independent compute
+# (the interior-element work) by the async collective scheduler.  The
+# `neighbour_start` / `neighbour_finish` split exposes exactly that seam.
+# ---------------------------------------------------------------------------
+
+
+class NeighbourRound(NamedTuple):
+    """One exchange round: the per-shard view of offset k's pair sets.
+
+    fwd_perm / bwd_perm are STATIC (src, dst) device lists for the +k / -k
+    `ppermute` shifts; the index/mask arrays are this shard's slices of the
+    partition's per-offset tables (`mesh_gen.MeshPartition.nbr_*`):
+    lo_idx/lo_mask — local slots of the dofs shared with shard s + k,
+    hi_idx/hi_mask — local slots of the dofs shared with shard s - k, both
+    enumerated in the same sorted-by-global-id order, trash-padded to the
+    offset's static width M_k.
+    """
+
+    fwd_perm: tuple
+    bwd_perm: tuple
+    lo_idx: jnp.ndarray
+    lo_mask: jnp.ndarray
+    hi_idx: jnp.ndarray
+    hi_mask: jnp.ndarray
+
+
+def neighbour_rounds(offsets: Sequence[int], n_shards: int,
+                     nbr_tables: Sequence[jnp.ndarray]
+                     ) -> Sequence[NeighbourRound]:
+    """Zip the static shift permutations with the per-shard table slices.
+
+    `nbr_tables` holds the shard-local (lo_idx, lo_mask, hi_idx, hi_mask)
+    quadruple for each offset, flattened in offset order (the layout the
+    solver passes through `shard_map` operands).
+    """
+    rounds = []
+    for j, k in enumerate(offsets):
+        fwd = tuple((s, s + k) for s in range(n_shards - k))
+        bwd = tuple((s + k, s) for s in range(n_shards - k))
+        lo_idx, lo_mask, hi_idx, hi_mask = nbr_tables[4 * j:4 * j + 4]
+        rounds.append(NeighbourRound(fwd, bwd, lo_idx, lo_mask,
+                                     hi_idx, hi_mask))
+    return rounds
+
+
+def neighbour_start(y_dofs: jnp.ndarray, rounds: Sequence[NeighbourRound],
+                    axis_name: str):
+    """Launch every ppermute of the exchange; returns the in-flight recvs.
+
+    All sends read from `y_dofs` — this shard's OWN partial sums — so the
+    permutes depend on nothing but the interface-element gather.  Any
+    compute issued between `neighbour_start` and `neighbour_finish` (the
+    interior elements) is dataflow-independent of the permutes and can
+    overlap them.
+    """
+    recvs = []
+    for r in rounds:
+        send_lo = shared_contrib(y_dofs, r.lo_idx, r.lo_mask)
+        send_hi = shared_contrib(y_dofs, r.hi_idx, r.hi_mask)
+        recv_hi = jax.lax.ppermute(send_lo, axis_name, r.fwd_perm)
+        recv_lo = jax.lax.ppermute(send_hi, axis_name, r.bwd_perm)
+        recvs.append((recv_hi, recv_lo))
+    return recvs
+
+
+def neighbour_finish(y_dofs: jnp.ndarray,
+                     rounds: Sequence[NeighbourRound], recvs) -> jnp.ndarray:
+    """Accumulate the received neighbour partials into the local dofs.
+
+    Each neighbour's partial is added exactly once, so a dof shared by m
+    shards ends as own + (m - 1) received partials = the full global sum on
+    every sharer (non-receiving shards got ppermute's zeros; padding lands
+    masked in the trash slot).
+    """
+    for r, (recv_hi, recv_lo) in zip(rounds, recvs):
+        y_dofs = y_dofs.at[r.hi_idx].add(
+            jnp.where(_expand_mask(r.hi_mask, recv_hi), recv_hi, 0.0))
+        y_dofs = y_dofs.at[r.lo_idx].add(
+            jnp.where(_expand_mask(r.lo_mask, recv_lo), recv_lo, 0.0))
+    return y_dofs
+
+
+def exchange_neighbour(y_dofs: jnp.ndarray,
+                       rounds: Sequence[NeighbourRound],
+                       axis_name: str) -> jnp.ndarray:
+    """Sum interface-dof contributions pairwise across neighbour shards.
+
+    Numerically equivalent to `exchange_shared` (same partials, summed in
+    per-shard neighbour order instead of the psum's reduction order)."""
+    return neighbour_finish(y_dofs, rounds,
+                            neighbour_start(y_dofs, rounds, axis_name))
+
+
+def gather_sharded_neighbour(y_local: jnp.ndarray, local_ids: jnp.ndarray,
+                             n_local: int,
+                             rounds: Sequence[NeighbourRound],
+                             axis_name: Optional[str]) -> jnp.ndarray:
+    """Per-shard Q^T with the neighbour-wise exchange.
+
+    Drop-in replacement for `gather_sharded`: identical post-gather state
+    (every real local slot holds the full global sum) with the mesh-wide
+    interface psum replaced by point-to-point ppermute rounds.
+    """
+    y_dofs = gather(y_local, local_ids, n_local)
+    if axis_name is None:
+        return y_dofs
+    return exchange_neighbour(y_dofs, rounds, axis_name)

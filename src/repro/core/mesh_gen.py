@@ -95,6 +95,15 @@ class MeshPartition(NamedTuple):
     not-present writes.  Dofs living on more than one shard are the *shared*
     (interface) dofs — the only values that ever cross shards.
 
+    Within each shard the real elements are reordered **interface first**:
+    an element is *interface* iff any of its dofs is shared with another
+    shard, so slots ``[0, iface_counts[s])`` hold every element that can
+    contribute to a shared dof and slots from there to ``elem_counts[s]``
+    are pure-interior.  ``e_iface = max(iface_counts)`` is the static split
+    point the overlapped solver uses: computing slots ``[0, e_iface)`` first
+    produces every interface-dof contribution, so the neighbour exchange can
+    fly while slots ``[e_iface, EP)`` compute.
+
     All arrays are numpy (host-side, setup-time); shapes use
     S = n_shards, EP = e_per_shard, L = n_local, NS = n_shared.
 
@@ -117,6 +126,28 @@ class MeshPartition(NamedTuple):
     shared_idx:     (S, NS) int32 — for every interface dof, its local slot
                     on this shard, or the trash slot when not present here.
     shared_present: (S, NS) bool — interface dof lives on this shard.
+    iface_counts:   (S,) interface-element count per shard (those elements
+                    occupy the shard's first slots).
+    e_iface:        max(iface_counts) — the static interface/interior
+                    element split point (0 when S == 1).
+    elem_perm:      (S, EP) int64 — original mesh element index held by
+                    each shard slot (the interface-first reordering made
+                    explicit); -1 on dead padding slots.
+    nbr_offsets:    tuple of positive shard-index offsets k such that SOME
+                    pair (s, s + k) shares at least one dof — the neighbour
+                    adjacency, expressed as ppermute shift distances.  With
+                    contiguous slabs this is a handful of small offsets.
+    nbr_lo_idx:     per offset k, (S, M_k) int32 — on shard s, the local
+                    slots of the dofs shared between s and s + k, sorted by
+                    global id (so both sides enumerate them identically);
+                    trash-padded to the per-offset max count M_k.  Rows
+                    s >= S - k are all-trash.
+    nbr_lo_mask:    per offset k, (S, M_k) bool — valid entries above.
+    nbr_hi_idx:     per offset k, (S, M_k) int32 — on shard s, the local
+                    slots of the dofs shared between s - k and s, in the
+                    SAME sorted order the low side uses.  Rows s < k are
+                    all-trash.
+    nbr_hi_mask:    per offset k, (S, M_k) bool.
     """
 
     n_shards: int
@@ -131,6 +162,14 @@ class MeshPartition(NamedTuple):
     valid_mask: np.ndarray
     shared_idx: np.ndarray
     shared_present: np.ndarray
+    iface_counts: np.ndarray
+    e_iface: int
+    elem_perm: np.ndarray
+    nbr_offsets: tuple
+    nbr_lo_idx: tuple
+    nbr_lo_mask: tuple
+    nbr_hi_idx: tuple
+    nbr_hi_mask: tuple
 
 
 def _reference_cube_verts() -> np.ndarray:
@@ -145,9 +184,12 @@ def _reference_cube_verts() -> np.ndarray:
 def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
     """Partition mesh elements into ``n_shards`` contiguous blocks.
 
-    Builds the per-shard local dof spaces and the shared-dof (interface)
-    index sets that the sharded gather exchanges — see
-    ``gather_scatter.gather_sharded``.  Pure numpy; runs once at setup.
+    Builds the per-shard local dof spaces, the shared-dof (interface) index
+    sets that the mesh-wide psum exchange uses (``gather_sharded``), the
+    neighbour-shard adjacency + per-neighbour send/recv index sets that the
+    ppermute exchange uses (``gather_sharded_neighbour``), and the
+    interface-first element ordering the overlapped solver splits on.
+    Pure numpy; runs once at setup.
     """
     e_total = len(mesh.verts)
     if n_shards < 1:
@@ -182,6 +224,12 @@ def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
     for s in range(n_shards - 1, -1, -1):
         owner[shard_dofs[s]] = s
 
+    # Interface ELEMENTS: any of the element's dofs is shared with another
+    # shard.  (All such contributions come from these elements, so running
+    # them first makes the shared-dof partials complete before the interior
+    # elements have even started — the overlap window.)
+    elem_iface = (presence[mesh.global_ids] >= 2).any(axis=(1, 2, 3))
+
     verts = np.broadcast_to(_reference_cube_verts(),
                             (n_shards, ep, 8, 3)).copy()
     local_ids = np.full((n_shards, ep, n1, n1, n1), trash, dtype=np.int32)
@@ -190,16 +238,26 @@ def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
     valid = np.zeros((n_shards, n_local), dtype=bool)
     shared_idx = np.full((n_shards, n_shared), trash, dtype=np.int32)
     shared_present = np.zeros((n_shards, n_shared), dtype=bool)
+    iface_counts = np.zeros(n_shards, dtype=np.int64)
+    elem_perm = np.full((n_shards, ep), -1, dtype=np.int64)
+    g2l_all = []
 
     for s in range(n_shards):
         ne = counts[s]
         dofs = shard_dofs[s]
         nl = len(dofs)
-        verts[s, :ne] = mesh.verts[starts[s]:starts[s + 1]]
+        # interface-first stable reorder of this shard's slab
+        slab = np.arange(starts[s], starts[s + 1])
+        iface = elem_iface[slab] if n_shards > 1 else np.zeros(ne, bool)
+        perm = np.concatenate([slab[iface], slab[~iface]])
+        iface_counts[s] = int(iface.sum())
+        elem_perm[s, :ne] = perm
+        verts[s, :ne] = mesh.verts[perm]
         # global -> local remap of this shard's connectivity
         g2l = np.full(mesh.n_global, trash, dtype=np.int32)
         g2l[dofs] = np.arange(nl, dtype=np.int32)
-        local_ids[s, :ne] = g2l[mesh.global_ids[starts[s]:starts[s + 1]]]
+        g2l_all.append(g2l)
+        local_ids[s, :ne] = g2l[mesh.global_ids[perm]]
         local_to_global[s, :nl] = dofs
         owned[s, :nl] = owner[dofs] == s
         valid[s, :nl] = True
@@ -208,9 +266,50 @@ def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
             shared_present[s] = shared_idx[s] != trash
             # a shared dof whose local slot happens to be the trash slot is
             # impossible: real slots stop at nl <= trash
+
+    # Neighbour adjacency + per-pair index sets.  For every ordered pair
+    # (s, s + k) sharing >= 1 dof: the shared set, sorted by global id so
+    # both sides enumerate it identically, remapped to each side's local
+    # slots and padded (trash/False) to the per-offset max count.  A dof
+    # shared by > 2 shards appears in every pairwise set it belongs to —
+    # the pairwise exchange then delivers every other sharer's partial
+    # directly, which is exactly what summing to the full value needs.
+    # Pair sets come from the (S, NS) presence matrix (a vectorized AND per
+    # offset over the interface dofs only), not per-pair set intersections
+    # of the full dof arrays.
+    pair_dofs = {}
+    for k in range(1, n_shards):
+        both = shared_present[:-k] & shared_present[k:]      # (S - k, NS)
+        if both.any():
+            # shared_g is ascending, so each column list is sorted by
+            # global id — the order both sides of the exchange rely on
+            pair_dofs[k] = [shared_g[both[s]] for s in range(n_shards - k)]
+    nbr_offsets = tuple(sorted(pair_dofs))
+    nbr_lo_idx, nbr_lo_mask, nbr_hi_idx, nbr_hi_mask = [], [], [], []
+    for k in nbr_offsets:
+        cols = pair_dofs[k]
+        mk = max(len(c) for c in cols)
+        lo_i = np.full((n_shards, mk), trash, dtype=np.int32)
+        lo_m = np.zeros((n_shards, mk), dtype=bool)
+        hi_i = np.full((n_shards, mk), trash, dtype=np.int32)
+        hi_m = np.zeros((n_shards, mk), dtype=bool)
+        for s, c in enumerate(cols):
+            nc = len(c)
+            lo_i[s, :nc] = g2l_all[s][c]
+            lo_m[s, :nc] = True
+            hi_i[s + k, :nc] = g2l_all[s + k][c]
+            hi_m[s + k, :nc] = True
+        nbr_lo_idx.append(lo_i)
+        nbr_lo_mask.append(lo_m)
+        nbr_hi_idx.append(hi_i)
+        nbr_hi_mask.append(hi_m)
     return MeshPartition(n_shards, ep, n_local, n_shared, counts, verts,
                          local_ids, local_to_global, owned, valid,
-                         shared_idx, shared_present)
+                         shared_idx, shared_present, iface_counts,
+                         int(iface_counts.max()) if n_shards > 1 else 0,
+                         elem_perm, nbr_offsets, tuple(nbr_lo_idx),
+                         tuple(nbr_lo_mask), tuple(nbr_hi_idx),
+                         tuple(nbr_hi_mask))
 
 
 def deform_affine(mesh: BoxMesh, matrix: np.ndarray | None = None,

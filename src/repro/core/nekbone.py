@@ -20,12 +20,12 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import axhelm as axhelm_mod
 from repro.core import gather_scatter as gs
 from repro.core import geometry
+from repro.distributed.context import shard_map_compat
 from repro.core.mesh_gen import BoxMesh, MeshPartition, partition_elements
 from repro.core.pcg import PCGResult, owned_dot, pcg, pcg_block
 from repro.core.spectral import SpectralBasis, basis as make_basis
@@ -173,15 +173,27 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
         dirichlet = not helmholtz  # Poisson needs the mask to be SPD
     mask = jnp.asarray(mesh.boundary) if dirichlet else None
     n_shards = shard_ctx.n_shards if shard_ctx is not None else 1
-    e_shard = -(-len(mesh.verts) // max(n_shards, 1))  # per-shard slab size
+    part = None
+    e_shard = len(mesh.verts)
+    if n_shards > 1:
+        part = partition_elements(mesh, n_shards)
+        e_shard = part.e_per_shard
+        if getattr(shard_ctx, "exchange", "psum") == "neighbour" \
+                and 0 < part.e_iface < part.e_per_shard:
+            # overlapped exchange: the kernel runs on the interface and
+            # interior sub-batches separately.  Clamp to the SMALLER one:
+            # a block no launch pads up to (padding the interface launch
+            # would delay neighbour_start — the overlap window itself);
+            # the larger launch just takes more grid steps
+            e_shard = min(part.e_iface, part.e_per_shard - part.e_iface)
     block_elems = _resolve_auto_block(variant, b, d, helmholtz, dtype,
                                       backend, block_elems, interpret, nrhs,
                                       e_shard)
 
-    if shard_ctx is not None and shard_ctx.n_shards > 1:
+    if part is not None:
         return _setup_problem_sharded(
             mesh, b, variant, d, helmholtz, lam0, lam1, mask, dtype,
-            backend, block_elems, interpret, shard_ctx)
+            backend, block_elems, interpret, shard_ctx, part)
 
     op = axhelm_mod.make_axhelm(variant, b, verts, lam0=lam0, lam1=lam1,
                                 helmholtz=helmholtz, dtype=dtype,
@@ -233,8 +245,8 @@ def _diag_factors(variant: str, b: SpectralBasis, verts: jnp.ndarray):
 
 def _setup_problem_sharded(mesh: BoxMesh, b: SpectralBasis, variant: str,
                            d: int, helmholtz: bool, lam0, lam1, mask, dtype,
-                           backend, block_elems, interpret,
-                           shard_ctx) -> "ShardedNekboneProblem":
+                           backend, block_elems, interpret, shard_ctx,
+                           part: MeshPartition) -> "ShardedNekboneProblem":
     for name, lam in (("lam0", lam0), ("lam1", lam1)):
         if lam is not None and jnp.ndim(lam) > 0:
             # a (E, N1, N1, N1) field would need partitioning + padding into
@@ -243,7 +255,6 @@ def _setup_problem_sharded(mesh: BoxMesh, b: SpectralBasis, variant: str,
                 f"per-element {name} fields are not yet supported with "
                 f"shard_ctx (got shape {jnp.shape(lam)}); pass a scalar, or "
                 f"solve single-device")
-    part = partition_elements(mesh, shard_ctx.n_shards)
     flat_verts = jnp.asarray(part.verts.reshape(-1, 8, 3), dtype=dtype)
     elem_ops, elem_apply, backend_used = axhelm_mod.make_axhelm_elem_ops(
         variant, b, flat_verts, lam0=lam0, lam1=lam1, helmholtz=helmholtz,
@@ -265,9 +276,12 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
     """Wire the per-shard pipeline into `shard_map` over `ctx`'s 1-D mesh.
 
     Index sets are flattened over a leading (n_shards * per_shard) axis and
-    sharded with P(axis) so every device receives exactly its shard's slice;
-    inside the shard region the only collectives are the interface-dof psum
-    in `gather_sharded` and the scalar psums of `owned_dot`.
+    sharded with P(axis) so every device receives exactly its shard's slice.
+    With ctx.exchange == "psum" the only collectives inside the shard region
+    are the interface-dof psum in `gather_sharded` and the scalar psums of
+    `owned_dot`; with "neighbour" the interface psum is replaced by
+    point-to-point `ppermute` rounds launched BEFORE the interior-element
+    compute, so the exchange and the bulk of the axhelm work can overlap.
     """
     axis = ctx.axis
     s, ep, nl, ns = (part.n_shards, part.e_per_shard, part.n_local,
@@ -282,10 +296,22 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
     diag_loc = diag[l2g]
     mask_loc = mask[l2g] if mask is not None else jnp.zeros(s * nl, bool)
     has_mask = mask is not None
+    neighbour = getattr(ctx, "exchange", "psum") == "neighbour"
+    # static interface/interior element split point (see MeshPartition):
+    # slots [0, ei) cover every interface element on every shard
+    ei = part.e_iface
+    nbr_args = ()
+    if neighbour:
+        nbr_args = tuple(
+            jnp.asarray(t.reshape(-1))
+            for j in range(len(part.nbr_offsets))
+            for t in (part.nbr_lo_idx[j], part.nbr_lo_mask[j],
+                      part.nbr_hi_idx[j], part.nbr_hi_mask[j]))
 
     pe = P(axis)
     ops_specs = jax.tree.map(lambda _: pe, elem_ops)
-    idx_args = (local_ids, shared_idx, present, owned, valid, mask_loc)
+    idx_args = (local_ids, shared_idx, present, owned, valid,
+                mask_loc) + nbr_args
     idx_specs = (pe,) * len(idx_args)
     expand = gs._expand_mask
 
@@ -298,12 +324,27 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         shape = (n_global,) + xl.shape[1:]
         return jnp.zeros(shape, xl.dtype).at[l2g].add(jnp.where(w, xl, 0))
 
-    def a_op_local(x, eo, lid, sidx, spres, own, val, m):
+    def _elem_batch(xl, eo, lid, lo, hi, bshape):
+        """axhelm + local gather on element slots [lo, hi)."""
+        xb = xl[lo:hi]
+        eob = jax.tree.map(lambda a: a[lo:hi], eo)
+        yb = elem_apply(xb, eob)
+        if bshape:
+            yb = jnp.moveaxis(yb, 1, -1)
+        return gs.gather(yb, lid[lo:hi], nl)
+
+    def a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr):
         """Per-shard A(x): scatter -> axhelm -> sharded gather (+ mask).
 
         Shape-polymorphic like `_global_op`: trailing batch axes (d, nrhs,
-        or both) are flattened into one component column, so the gather's
-        interface psum is ONE (NS, c) exchange for the whole RHS batch.
+        or both) are flattened into one component column, so the interface
+        exchange is ONE (NS, c) psum — or one set of per-neighbour
+        ppermutes — for the whole RHS batch.
+
+        In neighbour mode the interface elements run FIRST: their local
+        gather completes every shared-dof partial, the ppermute rounds
+        launch, and the interior elements (which by construction touch no
+        shared dof) compute while the permutes are in flight.
         """
         x_in = x
         bshape = x.shape[1:]
@@ -313,10 +354,18 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         xl = xf[lid]                                  # (EP, N1,N1,N1[, c])
         if bshape:
             xl = jnp.moveaxis(xl, -1, 1)
-        yl = elem_apply(xl, eo)
-        if bshape:
-            yl = jnp.moveaxis(yl, 1, -1)
-        y = gs.gather_sharded(yl, lid, nl, sidx, spres, axis)
+        if neighbour:
+            rounds = gs.neighbour_rounds(part.nbr_offsets, s, nbr)
+            split = 0 < ei < ep
+            cut = ei if split else ep
+            y = _elem_batch(xl, eo, lid, 0, cut, bshape)
+            recvs = gs.neighbour_start(y, rounds, axis)  # permutes in flight
+            if split:
+                y = y + _elem_batch(xl, eo, lid, cut, ep, bshape)
+            y = gs.neighbour_finish(y, rounds, recvs)
+        else:
+            y = gs.exchange_shared(_elem_batch(xl, eo, lid, 0, ep, bshape),
+                                   sidx, spres, axis)
         if bshape:
             y = y.reshape((nl,) + bshape)
         if has_mask:
@@ -325,7 +374,7 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         # accumulating there would feed inf/nan into later iterations
         return jnp.where(expand(val, y), y, 0)
 
-    smap = functools.partial(shard_map, mesh=ctx.mesh, check_rep=False)
+    smap = functools.partial(shard_map_compat, mesh=ctx.mesh)
 
     @jax.jit
     def apply_global(xg):
@@ -334,9 +383,9 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         return globalize(body(localize(xg), elem_ops, *idx_args))
 
     def pcg_body(b_loc, dg, tol, max_iter, eo, lid, sidx, spres, own, val,
-                 m, use_jacobi, batched):
+                 m, *nbr, use_jacobi, batched):
         def a_op(x):
-            return a_op_local(x, eo, lid, sidx, spres, own, val, m)
+            return a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr)
 
         pre = None
         if use_jacobi:

@@ -17,8 +17,39 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["ShardCtx", "SolverShardCtx", "make_ctx", "make_solver_ctx",
-           "constraint"]
+__all__ = ["ShardCtx", "SolverShardCtx", "EXCHANGES", "make_ctx",
+           "make_solver_ctx", "constraint", "shard_map_compat",
+           "PARTIAL_MANUAL_SHARD_MAP"]
+
+# jax >= 0.5 exposes top-level jax.shard_map; that release is also where
+# DIFFERENTIATING a partially-manual shard_map works (0.4.x trips an XLA
+# SPMD partitioner check — IsManualSubgroup mismatch).  Callers that want
+# partial-manual mode gate on this single probe instead of re-testing.
+PARTIAL_MANUAL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, manual_axes=None):
+    """`jax.shard_map` across jax versions (the 0.4.x <-> 0.5 API split).
+
+    jax 0.5 renamed the replication check (`check_rep` -> `check_vma`) and
+    the partial-manual selector (`auto=<complement>` -> `axis_names=
+    <manual set>`) and promoted shard_map out of jax.experimental.  Both
+    call styles mean the same thing; this shim always disables the
+    replication check (our bodies psum to replicated outputs, which the
+    static check cannot infer) and takes the MANUAL axis set.
+    """
+    if PARTIAL_MANUAL_SHARD_MAP:
+        kw = {"check_vma": False}
+        if manual_axes is not None:
+            kw["axis_names"] = set(manual_axes)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {"check_rep": False}
+    if manual_axes is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(manual_axes)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
 
 
 class ShardCtx(NamedTuple):
@@ -46,36 +77,53 @@ class SolverShardCtx(NamedTuple):
     """1-D device mesh for the element-sharded Nekbone solve.
 
     `axis` is the mesh axis name the elements are partitioned over; PCG dot
-    products and the interface-dof exchange `psum` over it.  `nrhs` is the
-    declared RHS-batch width of the solves this context will run (the
-    execution shape, like the mesh itself): `setup_problem` defaults to it,
-    so block autotuning charges VMEM for the batch the solve will actually
-    carry.  Any batch width still works at solve time — the operator is
-    shape-polymorphic — this is a tuning declaration, not a constraint.
+    products (and the interface-dof exchange, in "psum" mode) collective
+    over it.  `nrhs` is the declared RHS-batch width of the solves this
+    context will run (the execution shape, like the mesh itself):
+    `setup_problem` defaults to it, so block autotuning charges VMEM for
+    the batch the solve will actually carry.  Any batch width still works
+    at solve time — the operator is shape-polymorphic — this is a tuning
+    declaration, not a constraint.
+
+    `exchange` selects the interface-dof exchange implementation:
+      "psum"      — one mesh-wide `lax.psum` over all interface dofs (the
+                    default and the parity oracle);
+      "neighbour" — per-neighbour `lax.ppermute` rounds, with the exchange
+                    overlapped against interior-element compute (see
+                    DESIGN.md).  Numerically equivalent up to summation
+                    order.
     """
 
     mesh: Mesh
     axis: str
     nrhs: int = 1
+    exchange: str = "psum"
 
     @property
     def n_shards(self) -> int:
         return self.mesh.shape[self.axis]
 
 
+EXCHANGES = ("psum", "neighbour")
+
+
 def make_solver_ctx(devices: Optional[int] = None,
                     axis: str = "elem",
-                    nrhs: int = 1) -> Optional[SolverShardCtx]:
+                    nrhs: int = 1,
+                    exchange: str = "psum") -> Optional[SolverShardCtx]:
     """Build a 1-D element mesh over the first `devices` local devices.
 
     devices=None uses every visible device; devices=1 (or a single visible
     device) returns None — callers fall through to the unsharded path, which
     keeps single-device execution bit-identical to today's solve.  `nrhs`
-    declares the RHS-batch width of the planned solves (see
-    `SolverShardCtx`).
+    declares the RHS-batch width of the planned solves and `exchange` the
+    interface exchange implementation (see `SolverShardCtx`).
     """
     if nrhs < 1:
         raise ValueError(f"nrhs must be >= 1, got {nrhs}")
+    if exchange not in EXCHANGES:
+        raise ValueError(f"unknown exchange {exchange!r}; expected one of "
+                         f"{EXCHANGES}")
     devs = jax.devices()
     if devices is not None:
         if devices > len(devs):
@@ -86,7 +134,8 @@ def make_solver_ctx(devices: Optional[int] = None,
         devs = devs[:devices]
     if len(devs) <= 1:
         return None
-    return SolverShardCtx(Mesh(np.asarray(devs), (axis,)), axis, nrhs)
+    return SolverShardCtx(Mesh(np.asarray(devs), (axis,)), axis, nrhs,
+                          exchange)
 
 
 def make_ctx(mesh: Optional[Mesh]) -> Optional[ShardCtx]:

@@ -12,15 +12,28 @@ import jax
 __all__ = ["make_production_mesh", "make_test_mesh"]
 
 
+def _make_mesh(shape, axes):
+    """`jax.make_mesh` across jax versions.
+
+    `jax.sharding.AxisType` only exists from jax 0.5 (where `make_mesh`
+    wants explicit axis types to silence the Auto/Explicit migration); on
+    0.4.x the kwarg itself is unknown, so the call is version-guarded —
+    both paths produce a fully-Auto mesh.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod (TPU v5e); multi-pod adds the 'pod' axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.context import ShardCtx
+from repro.distributed.context import ShardCtx, shard_map_compat
 from repro.models.config import ModelConfig
 from repro.models.params import ParamSpec
 
@@ -198,13 +198,12 @@ def moe_apply(p, x: jnp.ndarray, cfg: ModelConfig,
         body = functools.partial(_moe_core, cfg=cfg, capacity=cap,
                                  ep_axis=ep_axis, token_axes=token_axes,
                                  use_a2a=use_a2a)
-        shard = jax.shard_map(
+        shard = shard_map_compat(
             lambda xx, rw, g, u, dn: _shard_body(body, xx, rw, g, u, dn),
             mesh=ctx.mesh,
             in_specs=(x_spec, P(None, None), P(ep_axis, None, None),
                       P(ep_axis, None, None), P(ep_axis, None, None)),
-            out_specs=(x_spec, P()),
-            check_vma=False)
+            out_specs=(x_spec, P()))
         y, aux = shard(x, router_w, wg, wu, wd)
         y = y.reshape(b, s, d)
         aux = aux  # already psum'd to a replicated scalar

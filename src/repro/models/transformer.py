@@ -22,7 +22,7 @@ from repro.models.layers import (embed, embedding_spec, linear, linear_spec,
 from repro.models.losses import chunked_ce, project_logits
 from repro.models.params import ParamSpec
 
-__all__ = ["DecoderLM", "stack_specs", "remat_wrap"]
+__all__ = ["DecoderLM", "stack_specs", "remat_wrap", "hoist_barrier"]
 
 
 def stack_specs(spec, n: int):
@@ -31,6 +31,31 @@ def stack_specs(spec, n: int):
         lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
                             dtype=s.dtype, init_scale=s.init_scale),
         spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+@jax.custom_vjp
+def hoist_barrier(tree):
+    """`lax.optimization_barrier` that is differentiable on jax 0.4.x.
+
+    The raw primitive has no JVP/transpose rule there, so every grad
+    through a barrier raised NotImplementedError.  custom_vjp sidesteps the
+    missing rule: forward is the barrier itself; backward barriers the
+    cotangents too, which is exactly what we want — the anti-hoisting fence
+    must also stop XLA from floating the (upcasting) parameter converts out
+    of the BACKWARD layer scan, where the same fp32-copy-of-the-stack
+    blowup bites."""
+    return jax.lax.optimization_barrier(tree)
+
+
+def _hoist_barrier_fwd(tree):
+    return hoist_barrier(tree), None
+
+
+def _hoist_barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+hoist_barrier.defvjp(_hoist_barrier_fwd, _hoist_barrier_bwd)
 
 
 def remat_wrap(fn, mode: str):
@@ -97,7 +122,7 @@ def attn_decode(p, x, cfg: ModelConfig, k_cache, v_cache, cur_len, rope_tab,
     # barrier: XLA:CPU would otherwise hoist the (upcasting) attention-dot
     # convert across the layer scan, materializing an fp32 copy of the whole
     # layer-stacked cache (see attention.decode_attention note)
-    k_cache, v_cache = jax.lax.optimization_barrier((k_cache, v_cache))
+    k_cache, v_cache = hoist_barrier((k_cache, v_cache))
     cur_len = jnp.asarray(cur_len, jnp.int32)
     if cur_len.ndim == 0:
         positions = jnp.full((b, 1), cur_len, jnp.int32)
@@ -235,7 +260,7 @@ class DecoderLM:
             # barrier: stops XLA from hoisting the per-layer fp32 operand
             # upcasts out of the scan (a full fp32 copy of the stacked
             # parameters — ~15 GB/device at kimi scale)
-            lp = jax.lax.optimization_barrier(lp)
+            lp = hoist_barrier(lp)
             return layer_apply(lp, xc, cfg, positions, rope_tab, ctx,
                                collect_kv=collect)
 
@@ -355,7 +380,7 @@ class DecoderLM:
                 lp = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(
                         a, li, 0, keepdims=False), layer_params)
-                lp = jax.lax.optimization_barrier(lp)
+                lp = hoist_barrier(lp)
                 y, _, (k, v) = layer_apply(lp, xc, cfg, positions, rope_tab,
                                            ctx, collect_kv=True)
                 ks = jax.lax.dynamic_update_index_in_dim(

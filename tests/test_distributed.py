@@ -7,20 +7,12 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-# Pre-existing seed failure: every test here spawns an 8-device subprocess
-# that calls launch/mesh.py:make_test_mesh, which uses jax.sharding.AxisType
-# — an API absent in jax 0.4.37 (added in 0.5) — so the subprocess dies with
-# AttributeError before any mesh is built.
-_AXISTYPE_XFAIL = pytest.mark.xfail(
-    strict=False,
-    reason="seed: launch/mesh.py make_test_mesh uses jax.sharding.AxisType, "
-           "absent in jax 0.4.37 — the 8-device subprocess raises "
-           "AttributeError before building the mesh")
-
+# The jax.sharding.AxisType seed failure is fixed: launch/mesh.py now
+# version-guards the axis_types kwarg (absent API on jax 0.4.x), so the
+# 8-device subprocesses build their meshes on every supported jax.
 
 def _run(script: str, devices: int = 8) -> dict:
     env = dict(os.environ)
@@ -42,7 +34,6 @@ from repro.distributed.context import make_ctx
 """
 
 
-@_AXISTYPE_XFAIL
 def test_moe_ep_a2a_matches_local():
     """Expert-parallel all_to_all path == single-device dispatch."""
     res = _run(PREAMBLE + textwrap.dedent("""
@@ -71,7 +62,6 @@ def test_moe_ep_a2a_matches_local():
     assert abs(res["aux_local"] - res["aux_ep"]) < 1e-3
 
 
-@_AXISTYPE_XFAIL
 def test_sharded_train_step_matches_single_device():
     res = _run(PREAMBLE + textwrap.dedent("""
         import repro.configs as configs
@@ -102,7 +92,6 @@ def test_sharded_train_step_matches_single_device():
     assert abs(res["single"] - res["mesh"]) < 2e-2, res
 
 
-@_AXISTYPE_XFAIL
 def test_compressed_crosspod_close_to_exact():
     res = _run(PREAMBLE + textwrap.dedent("""
         from repro.distributed.compression import compressed_crosspod_grads
@@ -129,7 +118,6 @@ def test_compressed_crosspod_close_to_exact():
     assert abs(res["loss"] - res["loss_ref"]) < 1e-4
 
 
-@_AXISTYPE_XFAIL
 def test_miniature_dryrun_cell():
     """A scaled-down dry-run: lower+compile a sharded train step and decode
     step on an 8-device mesh; memory/cost/walker fields all present."""

@@ -155,13 +155,15 @@ def test_sharded_gather_matches_dense(nx, ny, nz, order, n_shards, seed):
                                      jnp.asarray(mesh.global_ids),
                                      mesh.n_global))
 
-        # per-shard local y blocks; dead-element padding gets garbage that
-        # must all land in the trash slot
-        starts = np.concatenate([[0], np.cumsum(part.elem_counts)])
+        # per-shard local y blocks in slot order (elem_perm maps each slot
+        # to its mesh element — slabs are reordered interface-first);
+        # dead-element padding gets garbage that must all land in the
+        # trash slot
         y_dofs = []
         for s in range(n_shards):
             blk = rng.standard_normal((part.e_per_shard, n1, n1, n1))
-            blk[:part.elem_counts[s]] = y[starts[s]:starts[s + 1]]
+            ne = part.elem_counts[s]
+            blk[:ne] = y[part.elem_perm[s, :ne]]
             y_dofs.append(gs.gather(jnp.asarray(blk),
                                     jnp.asarray(part.local_ids[s]),
                                     part.n_local))
@@ -236,11 +238,11 @@ def test_sharded_gather_matches_dense_batched(nx, ny, nz, order, n_shards,
         dense = np.asarray(gs.gather(jnp.asarray(y),
                                      jnp.asarray(mesh.global_ids),
                                      mesh.n_global))
-        starts = np.concatenate([[0], np.cumsum(part.elem_counts)])
         y_dofs = []
         for s in range(n_shards):
             blk = rng.standard_normal((part.e_per_shard, n1, n1, n1, nrhs))
-            blk[:part.elem_counts[s]] = y[starts[s]:starts[s + 1]]
+            ne = part.elem_counts[s]
+            blk[:ne] = y[part.elem_perm[s, :ne]]
             y_dofs.append(gs.gather(jnp.asarray(blk),
                                     jnp.asarray(part.local_ids[s]),
                                     part.n_local))

@@ -25,25 +25,13 @@ def _batch(cfg, rng):
     return batch
 
 
-# Pre-existing seed failure: jax.lax.optimization_barrier has no
-# differentiation rule in jax 0.4.37, and the remat wrapper in
-# models/transformer.py:279 inserts one on the scan carry — every grad
-# through a transformer-family stack raises NotImplementedError.  The
-# SSM/hybrid/encdec families (zamba2, xlstm, seamless) don't hit the wrapper.
-_REMAT_BARRIER_XFAIL = pytest.mark.xfail(
-    strict=False,
-    reason="seed: optimization_barrier differentiation NotImplementedError "
-           "from the remat wrapper in models/transformer.py:279 "
-           "(no JVP/transpose rule in jax 0.4.37)")
-
-_BARRIER_ARCHS = {"phi_3_vision_4_2b", "qwen3_0_6b", "qwen2_7b",
-                  "smollm_360m", "granite_8b", "kimi_k2_1t_a32b",
-                  "moonshot_v1_16b_a3b"}
+# The optimization_barrier-differentiation seed failure is fixed:
+# models/transformer.py wraps the barrier in `hoist_barrier` (custom_vjp
+# supplying the rule jax 0.4.37 lacks), so grads flow through every
+# transformer-family stack — no xfail needed.
 
 
-@pytest.mark.parametrize("arch", [
-    pytest.param(a, marks=_REMAT_BARRIER_XFAIL) if a in _BARRIER_ARCHS else a
-    for a in configs.ARCH_IDS])
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
 def test_reduced_smoke_forward_and_grad(arch, rng):
     cfg = reduced_config(configs.get(arch))
     model = build_model(cfg)

@@ -88,13 +88,9 @@ def test_clip_by_global_norm():
 
 # ----------------------------------------------------------- train loop ---
 
-_REMAT_BARRIER_XFAIL = pytest.mark.xfail(
-    strict=False,
-    reason="seed: optimization_barrier differentiation NotImplementedError "
-           "from the remat wrapper in models/transformer.py:279 "
-           "(no JVP/transpose rule in jax 0.4.37) — any train step that "
-           "grads through the qwen3 stack fails")
-
+# The optimization_barrier-differentiation seed failure is fixed by the
+# custom_vjp `hoist_barrier` wrapper in models/transformer.py — train steps
+# grad through every stack; no xfail needed.
 
 @pytest.fixture(scope="module")
 def tiny_setup():
@@ -104,7 +100,6 @@ def tiny_setup():
     return cfg, model, params
 
 
-@_REMAT_BARRIER_XFAIL
 def test_loss_decreases(tiny_setup):
     cfg, model, params = tiny_setup
     tcfg = TrainConfig(lr=1e-2, warmup=5, total_steps=60, grad_accum=2)
@@ -118,7 +113,6 @@ def test_loss_decreases(tiny_setup):
     assert losses[-1] < losses[0] - 0.3, losses
 
 
-@_REMAT_BARRIER_XFAIL
 def test_grad_accum_equivalence(tiny_setup):
     """grad_accum=2 over a batch == grad_accum=1 (same total batch)."""
     cfg, model, params = tiny_setup
@@ -164,7 +158,6 @@ def test_checkpoint_atomicity(tmp_path):
     assert not [d for d in os.listdir(tmp_path) if d.startswith("tmp_")]
 
 
-@_REMAT_BARRIER_XFAIL
 def test_fault_tolerant_run_resumes(tiny_setup, tmp_path):
     cfg, model, params = tiny_setup
     tcfg = TrainConfig(lr=1e-2, warmup=2, total_steps=40)
@@ -180,7 +173,6 @@ def test_fault_tolerant_run_resumes(tiny_setup, tmp_path):
     assert hist["completed_steps"] >= 15  # replays after restore
 
 
-@_REMAT_BARRIER_XFAIL
 def test_straggler_timeout_aborts(tiny_setup, tmp_path):
     cfg, model, params = tiny_setup
     tcfg = TrainConfig(lr=1e-2, warmup=2, total_steps=40)
