@@ -7,7 +7,7 @@ Run:  PYTHONPATH=src python examples/nekbone_solve.py \
           [--elements 4 4 4] [--order 7] [--variant trilinear] \
           [--equation poisson] [--d 1] [--precision float32] \
           [--backend auto] [--block-elems N|auto] [--devices N] [--nrhs R] \
-          [--exchange psum|neighbour]
+          [--exchange psum|neighbour] [--grid slab|auto|PXxPYxPZ]
 
 --backend auto drives the Pallas axhelm kernel inside the PCG while_loop
 (interpret mode off-TPU) for fp32/bf16 and the jnp reference for fp64;
@@ -17,6 +17,10 @@ partition + interface-dof exchange; on a CPU-only host missing devices are
 simulated via --xla_force_host_platform_device_count).
 --exchange neighbour swaps the mesh-wide interface psum for per-neighbour
 ppermute rounds that overlap with interior-element compute (DESIGN.md).
+--grid picks the element-partition shard grid: slab (1-D, the default),
+auto (smallest-surface factorization of the device count), or an explicit
+PXxPYxPZ box — a box decomposition shrinks the per-shard shared-dof
+surface from a full mesh cross-section to a sub-box surface.
 --nrhs R solves R stacked right-hand sides in one block-PCG: one operator
 application, one interface exchange and one batched dot per iteration for
 the whole block — geometry traffic is amortized over the batch.
@@ -58,6 +62,11 @@ def _parse_args():
                          "mesh-wide psum (default), or per-neighbour "
                          "ppermute rounds overlapped with interior-element "
                          "compute")
+    ap.add_argument("--grid", default="slab",
+                    help="element-partition shard grid: 'slab' (1-D), "
+                         "'auto' (smallest-surface factorization), or an "
+                         "explicit box like '2x2x1' (must multiply to "
+                         "--devices)")
     ap.add_argument("--nrhs", type=int, default=1,
                     help="solve R stacked right-hand sides with block-PCG "
                          "(1 = the exact single-RHS path)")
@@ -89,7 +98,7 @@ def main():
     helm = args.equation == "helmholtz"
 
     from repro.core import mesh_gen, nekbone
-    from repro.distributed.context import make_solver_ctx
+    from repro.distributed.context import make_solver_ctx, parse_grid_arg
 
     nx, ny, nz = args.elements
     mesh = mesh_gen.box_mesh(nx, ny, nz, args.order)
@@ -98,9 +107,11 @@ def main():
     else:
         mesh = mesh_gen.deform_trilinear(mesh, seed=3)
     e = len(mesh.verts)
+    # called unconditionally: at --devices 1 it returns None (the exact
+    # unsharded path) and WARNS if --exchange/--grid would be dropped
     shard_ctx = make_solver_ctx(devices=args.devices, nrhs=args.nrhs,
-                                exchange=args.exchange) \
-        if args.devices > 1 else None
+                                exchange=args.exchange,
+                                grid=parse_grid_arg(args.grid))
     n_shards = shard_ctx.n_shards if shard_ctx is not None else 1
     print(f"mesh: E={e} N={args.order} dofs={mesh.n_global} "
           f"variant={args.variant} eq={args.equation} d={args.d} "
@@ -115,10 +126,11 @@ def main():
     if shard_ctx is not None:
         part = prob.partition
         iface_frac = float(part.iface_counts.sum()) / e
-        print(f"partition: shards={part.n_shards} "
+        print(f"partition: shards={part.n_shards} grid={part.grid} "
               f"elems/shard={[int(c) for c in part.elem_counts]} "
               f"local_dofs={part.n_local} shared_dofs={part.n_shared} "
               f"({part.n_shared / mesh.n_global:.1%} of field exchanged) "
+              f"max_shared/shard={int(part.shared_present.sum(axis=1).max())} "
               f"iface_elems={iface_frac:.1%} "
               f"neighbour_offsets={list(part.nbr_offsets)}")
     rng = np.random.default_rng(0)

@@ -414,28 +414,45 @@ def make_axhelm_elem_ops(variant: str, basis: SpectralBasis,
         return elem_ops, apply, backend
 
     dhat = jnp.asarray(basis.dhat, dtype=dtype)
+    # Per-element lambda FIELDS ride in elem_ops — they have an element
+    # axis, so the sharded solve can partition them like any other setup
+    # product; scalars stay closed over (replicated constants).  `apply`
+    # reads elem_ops first and falls back to the closed-over scalar.
+    lam_ops = {}
+    lam0_s, lam1_s = lam0, lam1
+    if variant in ("precomputed", "trilinear", "parallelepiped"):
+        if lam0 is not None and jnp.ndim(lam0) > 0:
+            lam_ops["lam0"], lam0_s = jnp.asarray(lam0, dtype=dtype), None
+        if lam1 is not None and jnp.ndim(lam1) > 0:
+            lam_ops["lam1"], lam1_s = jnp.asarray(lam1, dtype=dtype), None
     if variant == "precomputed":
         if coords is None:
             coords = geometry.node_coords(verts, basis)
         factors = geometry.factors_discrete(jnp.asarray(coords, dtype=dtype),
                                             basis)
-        elem_ops = {"g": factors.g, "gwj": factors.gwj}
+        elem_ops = {"g": factors.g, "gwj": factors.gwj, **lam_ops}
 
         def apply(x, elem_ops):
             f = GeomFactors(elem_ops["g"], elem_ops["gwj"])
-            return axhelm_precomputed(x, f, dhat, lam0, lam1, helmholtz)
+            return axhelm_precomputed(x, f, dhat,
+                                      elem_ops.get("lam0", lam0_s),
+                                      elem_ops.get("lam1", lam1_s),
+                                      helmholtz)
     elif variant == "trilinear":
-        elem_ops = {"verts": verts}
+        elem_ops = {"verts": verts, **lam_ops}
 
         def apply(x, elem_ops):
             return axhelm_trilinear(x, elem_ops["verts"], basis, dhat,
-                                    lam0, lam1, helmholtz)
+                                    elem_ops.get("lam0", lam0_s),
+                                    elem_ops.get("lam1", lam1_s), helmholtz)
     elif variant == "parallelepiped":
-        elem_ops = {"verts": verts}
+        elem_ops = {"verts": verts, **lam_ops}
 
         def apply(x, elem_ops):
             return axhelm_parallelepiped(x, elem_ops["verts"], basis, dhat,
-                                         lam0, lam1, helmholtz)
+                                         elem_ops.get("lam0", lam0_s),
+                                         elem_ops.get("lam1", lam1_s),
+                                         helmholtz)
     elif variant == "merged":
         l0 = jnp.broadcast_to(jnp.asarray(
             1.0 if lam0 is None else lam0, dtype=dtype), node_shape)

@@ -158,6 +158,15 @@ def gather_sharded(y_local: jnp.ndarray, local_ids: jnp.ndarray,
 # all-reduce and whose start can be hoisted before independent compute
 # (the interior-element work) by the async collective scheduler.  The
 # `neighbour_start` / `neighbour_finish` split exposes exactly that seam.
+#
+# The offsets are shard-LINEAR-index distances, so the same machinery
+# serves 1-D slabs (a few small k) and 2-D/3-D box decompositions, where k
+# is a linearized shard-grid shift |(dx*py + dy)*pz + dz| covering face,
+# edge and corner neighbours: a dof shared by 4 or 8 shards sits in every
+# pairwise table of its sharers, and receiving each other sharer's partial
+# exactly once IS the full sum.  Pairs (s, s + k) that exist arithmetically
+# but not geometrically (grid wrap-around) carry all-masked table rows —
+# their sends are zeros and their receives land masked.
 # ---------------------------------------------------------------------------
 
 

@@ -20,7 +20,8 @@ from typing import NamedTuple
 import numpy as np
 
 __all__ = ["BoxMesh", "MeshPartition", "box_mesh", "deform_affine",
-           "deform_trilinear", "partition_elements"]
+           "deform_trilinear", "partition_elements", "auto_grid",
+           "normalize_grid"]
 
 
 class BoxMesh(NamedTuple):
@@ -87,8 +88,15 @@ def box_mesh(nx: int, ny: int, nz: int, order: int,
 class MeshPartition(NamedTuple):
     """An element partition of a :class:`BoxMesh` over ``n_shards`` shards.
 
-    Elements are split into contiguous blocks in element order (x-slabs on a
-    box mesh) and padded to a common per-shard count with "dead" elements.
+    The shards form a Cartesian **shard grid** ``grid = (px, py, pz)`` with
+    ``px * py * pz == n_shards``; shard ``(sx, sy, sz)`` has linear index
+    ``(sx * py + sy) * pz + sz`` and holds a contiguous sub-box of the
+    element index space (a balanced chunk of each axis extent).  The
+    degenerate 1-D grid ``(n_shards, 1, 1)`` — also what ``grid=None``
+    means — splits the *linear element order* into balanced contiguous
+    ranges instead (x-slabs whenever the extents divide evenly), which is
+    exactly the original slab partition and needs no per-axis divisibility.
+    Shards are padded to a common per-shard count with "dead" elements.
     Every shard gets a *local dof space* of fixed size ``n_local``: the unique
     global dofs its real elements touch, then padding, then one trailing
     **trash slot** (index ``n_local - 1``) that absorbs all dead-element and
@@ -135,8 +143,13 @@ class MeshPartition(NamedTuple):
                     explicit); -1 on dead padding slots.
     nbr_offsets:    tuple of positive shard-index offsets k such that SOME
                     pair (s, s + k) shares at least one dof — the neighbour
-                    adjacency, expressed as ppermute shift distances.  With
-                    contiguous slabs this is a handful of small offsets.
+                    adjacency, expressed as ppermute shift distances.  On a
+                    box grid these are the linearized shard-grid shifts
+                    |(dx * py + dy) * pz + dz| of the face/edge/corner
+                    neighbours (two distinct grid shifts may linearize to
+                    the same k; their pair sets merge harmlessly because
+                    the tables are per source shard).  With 1-D slabs this
+                    is a handful of small integers.
     nbr_lo_idx:     per offset k, (S, M_k) int32 — on shard s, the local
                     slots of the dofs shared between s and s + k, sorted by
                     global id (so both sides enumerate them identically);
@@ -148,6 +161,8 @@ class MeshPartition(NamedTuple):
                     SAME sorted order the low side uses.  Rows s < k are
                     all-trash.
     nbr_hi_mask:    per offset k, (S, M_k) bool.
+    grid:           (px, py, pz) — the shard grid this partition was built
+                    on ((n_shards, 1, 1) for the 1-D slab partition).
     """
 
     n_shards: int
@@ -170,6 +185,120 @@ class MeshPartition(NamedTuple):
     nbr_lo_mask: tuple
     nbr_hi_idx: tuple
     nbr_hi_mask: tuple
+    grid: tuple = (0, 0, 0)
+
+
+def _axis_chunks(extent: int, parts: int) -> list:
+    """Balanced contiguous index chunks of ``range(extent)`` (first chunks
+    take the remainder), as a list of index arrays."""
+    base, extra = divmod(extent, parts)
+    sizes = [base + (1 if i < extra else 0) for i in range(parts)]
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    return [np.arange(starts[i], starts[i + 1]) for i in range(parts)]
+
+
+def auto_grid(shape: tuple, n_shards: int) -> tuple:
+    """Factorize ``n_shards`` into the (px, py, pz) shard grid with the
+    smallest cut surface on a mesh of element extents ``shape``.
+
+    The cut surface counts the element faces on shard boundaries —
+    ``(px-1)*ny*nz + (py-1)*nx*nz + (pz-1)*nx*ny`` — which is what the
+    per-shard shared-dof count scales with, so minimizing it drives the
+    sub-boxes toward cubes (the O((E/S)^(2/3)) surface regime).  Only
+    factorizations whose per-axis counts fit the extents are considered;
+    the 1-D slab ``(n_shards, 1, 1)`` (which needs no divisibility) is
+    always a candidate, so a feasible grid always exists for
+    ``n_shards <= E``.  Ties break toward splitting earlier (x, then y)
+    axes, deterministically.
+    """
+    nx, ny, nz = shape
+    best = None
+    for px in range(1, n_shards + 1):
+        if n_shards % px:
+            continue
+        rest = n_shards // px
+        for py in range(1, rest + 1):
+            if rest % py:
+                continue
+            pz = rest // py
+            cand = (px, py, pz)
+            if cand != (n_shards, 1, 1) and (px > nx or py > ny or pz > nz):
+                continue  # an axis cannot produce that many nonempty chunks
+            score = ((px - 1) * ny * nz + (py - 1) * nx * nz
+                     + (pz - 1) * nx * ny)
+            key = (score, -px, -py)
+            if best is None or key < best[0]:
+                best = (key, cand)
+    return best[1]
+
+
+def normalize_grid(grid, shape, n_shards: int) -> tuple:
+    """Validate/resolve a shard-grid spec to a concrete (px, py, pz).
+
+    ``None`` -> the 1-D slab grid ``(n_shards, 1, 1)``; ``"auto"`` ->
+    :func:`auto_grid`; a 1-/2-/3-tuple is padded with trailing 1s and must
+    multiply to ``n_shards``.  Multi-axis grids additionally need each
+    per-axis count to fit the element extent (balanced chunks must all be
+    nonempty); the 1-D grid has no such constraint (it splits the linear
+    element order, not the x axis).
+
+    ``shape=None`` runs only the mesh-independent checks (spec form,
+    positivity, shard-count product) — what `make_solver_ctx` validates
+    eagerly, before any mesh exists; ``"auto"`` then passes through
+    unresolved.  This is the ONE implementation of the grid-spec rules.
+    """
+    if grid is None:
+        return (n_shards, 1, 1)
+    if isinstance(grid, str):
+        if grid != "auto":
+            raise ValueError(f"grid must be a tuple, None or 'auto', "
+                             f"got {grid!r}")
+        return grid if shape is None else auto_grid(shape, n_shards)
+    grid = tuple(int(p) for p in grid)
+    if not 1 <= len(grid) <= 3:
+        raise ValueError(f"grid must have 1-3 axes, got {grid}")
+    grid = grid + (1,) * (3 - len(grid))
+    if any(p < 1 for p in grid):
+        raise ValueError(f"grid counts must be >= 1, got {grid}")
+    px, py, pz = grid
+    if px * py * pz != n_shards:
+        raise ValueError(f"grid {grid} has {px * py * pz} shards but "
+                         f"{n_shards} devices/shards are requested")
+    if grid != (n_shards, 1, 1) and shape is not None:
+        nx, ny, nz = shape
+        if px > nx or py > ny or pz > nz:
+            raise ValueError(
+                f"grid {grid} does not fit the element extents {shape}: "
+                f"each axis needs at least one element per chunk (use the "
+                f"1-D slab grid ({n_shards}, 1, 1), or 'auto')")
+    return grid
+
+
+def _shard_element_sets(mesh: BoxMesh, n_shards: int, grid: tuple) -> list:
+    """Per-shard element index arrays (ascending mesh-linear order).
+
+    The 1-D grid splits the linear element order into balanced contiguous
+    ranges — bit-for-bit the original slab partition.  A multi-axis grid
+    gives shard (sx, sy, sz) the sub-box chunk_x[sx] x chunk_y[sy] x
+    chunk_z[sz] of the element index space; the element's linear id is
+    ``(ex * ny + ey) * nz + ez`` (the `box_mesh` x-major order).
+    """
+    if grid == (n_shards, 1, 1):
+        # the 1-D slab IS balanced chunking of the linear element order —
+        # same remainder-first rule, one implementation
+        return _axis_chunks(len(mesh.verts), n_shards)
+    nx, ny, nz = mesh.shape
+    px, py, pz = grid
+    cx, cy, cz = (_axis_chunks(nx, px), _axis_chunks(ny, py),
+                  _axis_chunks(nz, pz))
+    out = []
+    for sx in range(px):
+        for sy in range(py):
+            for sz in range(pz):
+                ids = ((cx[sx][:, None, None] * ny + cy[sy][None, :, None])
+                       * nz + cz[sz][None, None, :])
+                out.append(ids.reshape(-1))
+    return out
 
 
 def _reference_cube_verts() -> np.ndarray:
@@ -181,15 +310,28 @@ def _reference_cube_verts() -> np.ndarray:
     return v
 
 
-def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
-    """Partition mesh elements into ``n_shards`` contiguous blocks.
+def partition_elements(mesh: BoxMesh, n_shards: int,
+                       grid=None) -> MeshPartition:
+    """Partition mesh elements into ``n_shards`` contiguous sub-boxes.
+
+    ``grid`` selects the shard-grid shape (see :func:`normalize_grid`):
+    ``None`` / ``(n_shards,)`` / ``(n_shards, 1, 1)`` give the original 1-D
+    slab partition (bit-for-bit — balanced contiguous ranges of the linear
+    element order), ``(px, py, pz)`` a Cartesian box decomposition whose
+    per-shard interface surface scales as O((E/S)^(2/3)) instead of the
+    slab's full cross-section, and ``"auto"`` the smallest-surface
+    factorization of ``n_shards``.
 
     Builds the per-shard local dof spaces, the shared-dof (interface) index
     sets that the mesh-wide psum exchange uses (``gather_sharded``), the
     neighbour-shard adjacency + per-neighbour send/recv index sets that the
-    ppermute exchange uses (``gather_sharded_neighbour``), and the
-    interface-first element ordering the overlapped solver splits on.
-    Pure numpy; runs once at setup.
+    ppermute exchange uses (``gather_sharded_neighbour``) — on a box grid
+    the offsets are linearized shard-grid shifts covering face, edge AND
+    corner neighbours, and a dof on a sub-box edge/corner can be shared by
+    4 or 8 shards (each sharer pair gets its own table entry, which is
+    exactly what the pairwise exchange needs) — and the interface-first
+    element ordering the overlapped solver splits on.  Ownership stays
+    lowest-shard-linear-index.  Pure numpy; runs once at setup.
     """
     e_total = len(mesh.verts)
     if n_shards < 1:
@@ -198,17 +340,17 @@ def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
         raise ValueError(f"cannot shard {e_total} elements over "
                          f"{n_shards} shards (need >= 1 element per shard)")
     n1 = mesh.order + 1
-    base, extra = divmod(e_total, n_shards)
-    counts = np.array([base + (1 if s < extra else 0)
-                       for s in range(n_shards)])
-    starts = np.concatenate([[0], np.cumsum(counts)])
+    grid = normalize_grid(grid, mesh.shape, n_shards)
+    shard_elems = _shard_element_sets(mesh, n_shards, grid)
+    counts = np.array([len(se) for se in shard_elems])
     ep = int(counts.max())
 
-    # Per-shard unique dof sets and ownership (first shard that sees a dof
-    # owns it — with contiguous slabs that is the lower-index neighbour).
+    # Per-shard unique dof sets and ownership (the lowest shard-linear-index
+    # shard that sees a dof owns it — on a box grid that is well defined at
+    # edges/corners too, where 4 or 8 shards meet).
     shard_dofs = []
     for s in range(n_shards):
-        ids_s = mesh.global_ids[starts[s]:starts[s + 1]]
+        ids_s = mesh.global_ids[shard_elems[s]]
         shard_dofs.append(np.unique(ids_s))
     n_local = max(len(d) for d in shard_dofs) + 1        # + trash slot
     trash = n_local - 1
@@ -246,8 +388,8 @@ def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
         ne = counts[s]
         dofs = shard_dofs[s]
         nl = len(dofs)
-        # interface-first stable reorder of this shard's slab
-        slab = np.arange(starts[s], starts[s + 1])
+        # interface-first stable reorder of this shard's slab/sub-box
+        slab = shard_elems[s]
         iface = elem_iface[slab] if n_shards > 1 else np.zeros(ne, bool)
         perm = np.concatenate([slab[iface], slab[~iface]])
         iface_counts[s] = int(iface.sum())
@@ -309,7 +451,7 @@ def partition_elements(mesh: BoxMesh, n_shards: int) -> MeshPartition:
                          int(iface_counts.max()) if n_shards > 1 else 0,
                          elem_perm, nbr_offsets, tuple(nbr_lo_idx),
                          tuple(nbr_lo_mask), tuple(nbr_hi_idx),
-                         tuple(nbr_hi_mask))
+                         tuple(nbr_hi_mask), grid)
 
 
 def deform_affine(mesh: BoxMesh, matrix: np.ndarray | None = None,

@@ -7,14 +7,18 @@ without masking).
 
 With a `SolverShardCtx` (distributed.context) the same pipeline runs
 element-sharded under `shard_map` over a 1-D device mesh: each device owns a
-contiguous slab of elements, the gather becomes a per-shard segment-sum plus
-one psum over only the interface dofs, and PCG's dot products psum scalars —
-the whole while_loop stays inside the sharded region.  See DESIGN.md.
+contiguous slab or Cartesian sub-box of elements (`make_solver_ctx(grid=)`
+selects the shard-grid shape; boxes shrink the per-shard interface surface
+to O((E/S)^(2/3))), the gather becomes a per-shard segment-sum plus one
+psum over only the interface dofs — or per-neighbour ppermute rounds — and
+PCG's dot products psum scalars; the whole while_loop stays inside the
+sharded region.  See DESIGN.md.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -148,10 +152,11 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
 
     `shard_ctx` (a `distributed.context.SolverShardCtx`, e.g. from
     `make_solver_ctx(devices=N)`) partitions the elements over a 1-D device
-    mesh and returns a `ShardedNekboneProblem` whose solve runs under
-    `shard_map`.  `shard_ctx=None` — and any 1-device context, which
-    `make_solver_ctx` already collapses to None — takes the single-device
-    path below, bit-identical to previous behaviour.
+    mesh — as linear slabs, or as the Cartesian sub-boxes of
+    `shard_ctx.grid` — and returns a `ShardedNekboneProblem` whose solve
+    runs under `shard_map`.  `shard_ctx=None` — and any 1-device context,
+    which `make_solver_ctx` already collapses to None — takes the
+    single-device path below, bit-identical to previous behaviour.
 
     `nrhs` declares the RHS-batch width later `solve` calls will use
     (defaults to `shard_ctx.nrhs`, else 1).  The operator itself is
@@ -176,16 +181,26 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     part = None
     e_shard = len(mesh.verts)
     if n_shards > 1:
-        part = partition_elements(mesh, n_shards)
+        part = partition_elements(mesh, n_shards,
+                                  grid=getattr(shard_ctx, "grid", None))
         e_shard = part.e_per_shard
-        if getattr(shard_ctx, "exchange", "psum") == "neighbour" \
-                and 0 < part.e_iface < part.e_per_shard:
-            # overlapped exchange: the kernel runs on the interface and
-            # interior sub-batches separately.  Clamp to the SMALLER one:
-            # a block no launch pads up to (padding the interface launch
-            # would delay neighbour_start — the overlap window itself);
-            # the larger launch just takes more grid steps
-            e_shard = min(part.e_iface, part.e_per_shard - part.e_iface)
+        if getattr(shard_ctx, "exchange", "psum") == "neighbour":
+            # overlapped exchange: ONE launch plan decides both the kernel
+            # sub-batch split and the autotune clamp (see
+            # `_neighbour_launch_plan` — the two used to be separate
+            # conditions that could drift on the degenerate cases)
+            split, _, e_shard = _neighbour_launch_plan(part)
+            if not split:
+                warnings.warn(
+                    f"exchange='neighbour' has no interior elements to "
+                    f"overlap the halo exchange with (every shard slot up "
+                    f"to e_iface={part.e_iface} of e_per_shard="
+                    f"{part.e_per_shard} is interface on some shard, grid="
+                    f"{part.grid}): running the unsplit pipeline — the "
+                    f"exchange is still point-to-point but nothing hides "
+                    f"it.  A box decomposition (make_solver_ctx(grid="
+                    f"'auto')) shrinks the interface surface and restores "
+                    f"the overlap window.", UserWarning, stacklevel=2)
     block_elems = _resolve_auto_block(variant, b, d, helmholtz, dtype,
                                       backend, block_elems, interpret, nrhs,
                                       e_shard)
@@ -204,6 +219,33 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
                         dtype)
     return NekboneProblem(apply, diag, mask, mesh, b, d, helmholtz, variant,
                           op.backend)
+
+
+def _neighbour_launch_plan(part: MeshPartition):
+    """The kernel launch plan for the overlapped neighbour exchange.
+
+    Returns ``(split, cut, tune_elems)``: whether the element batch is run
+    as two launches (interface slots ``[0, cut)`` first, interior
+    ``[cut, EP)`` while the permutes fly), and the element count the block
+    autotuner must clamp to.
+
+    Split mode clamps to the SMALLER sub-batch — a block no launch pads up
+    to (padding the interface launch would delay `neighbour_start`, the
+    overlap window itself); the larger launch just takes more grid steps.
+
+    Degenerate cases fall back to ONE unsplit launch of the full padded
+    batch, clamped to its real size ``EP``: ``e_iface == e_per_shard``
+    (some shard is all-interface — common for thin slabs at high shard
+    counts — so no static split point can leave interior work) and the
+    defensive ``e_iface == 0`` (no interface at all).  The solver body and
+    the setup-time autotune clamp both read THIS plan, so they cannot
+    disagree about which launches exist.
+    """
+    ep, ei = part.e_per_shard, part.e_iface
+    split = 0 < ei < ep
+    cut = ei if split else ep
+    tune_elems = min(ei, ep - ei) if split else ep
+    return split, cut, tune_elems
 
 
 def _resolve_auto_block(variant: str, b: SpectralBasis, d: int,
@@ -243,23 +285,43 @@ def _diag_factors(variant: str, b: SpectralBasis, verts: jnp.ndarray):
     return geometry.factors_trilinear(verts, b)
 
 
+def _partition_lam_field(lam, part: MeshPartition, dtype) -> jnp.ndarray:
+    """Partition + pad an (E, N1, N1, N1) lambda field into the per-shard
+    element layout: `elem_perm` order (interface-first within each shard),
+    dead padding slots filled with 1.0 (any finite value works — dead
+    elements' outputs land masked in the trash slot), flattened over the
+    (S * EP) axis the sharded runner partitions elem_ops on."""
+    lam = np.asarray(lam)
+    perm = part.elem_perm                      # (S, EP); -1 on dead slots
+    vals = lam[np.where(perm >= 0, perm, 0)]
+    vals[perm < 0] = 1.0
+    return jnp.asarray(vals.reshape((-1,) + lam.shape[1:]), dtype=dtype)
+
+
 def _setup_problem_sharded(mesh: BoxMesh, b: SpectralBasis, variant: str,
                            d: int, helmholtz: bool, lam0, lam1, mask, dtype,
                            backend, block_elems, interpret, shard_ctx,
                            part: MeshPartition) -> "ShardedNekboneProblem":
+    # Per-element lambda FIELDS are partitioned into the shard element
+    # layout and travel as elem_ops operands; scalars pass through.  The
+    # Jacobi diagonal below keeps the UNPARTITIONED fields — it is computed
+    # on the whole mesh, identically to the single-device path.
+    node_shape = (len(mesh.verts),) + (b.n1,) * 3
+    lam_sh = []
     for name, lam in (("lam0", lam0), ("lam1", lam1)):
         if lam is not None and jnp.ndim(lam) > 0:
-            # a (E, N1, N1, N1) field would need partitioning + padding into
-            # elem_ops; fail clearly instead of deep inside shard_map tracing
-            raise NotImplementedError(
-                f"per-element {name} fields are not yet supported with "
-                f"shard_ctx (got shape {jnp.shape(lam)}); pass a scalar, or "
-                f"solve single-device")
+            if jnp.shape(lam) != node_shape:
+                raise ValueError(
+                    f"{name} must be a scalar or a per-node (E, N1, N1, N1) "
+                    f"field of shape {node_shape} (the unpartitioned mesh "
+                    f"layout), got {jnp.shape(lam)}")
+            lam = _partition_lam_field(lam, part, dtype)
+        lam_sh.append(lam)
     flat_verts = jnp.asarray(part.verts.reshape(-1, 8, 3), dtype=dtype)
     elem_ops, elem_apply, backend_used = axhelm_mod.make_axhelm_elem_ops(
-        variant, b, flat_verts, lam0=lam0, lam1=lam1, helmholtz=helmholtz,
-        dtype=dtype, backend=backend, block_elems=block_elems,
-        interpret=interpret)
+        variant, b, flat_verts, lam0=lam_sh[0], lam1=lam_sh[1],
+        helmholtz=helmholtz, dtype=dtype, backend=backend,
+        block_elems=block_elems, interpret=interpret)
     verts = jnp.asarray(mesh.verts, dtype=dtype)
     diag = _global_diag(mesh, b, _diag_factors(variant, b, verts), lam0,
                         lam1, helmholtz, d, mask, dtype)
@@ -297,9 +359,10 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
     mask_loc = mask[l2g] if mask is not None else jnp.zeros(s * nl, bool)
     has_mask = mask is not None
     neighbour = getattr(ctx, "exchange", "psum") == "neighbour"
-    # static interface/interior element split point (see MeshPartition):
-    # slots [0, ei) cover every interface element on every shard
-    ei = part.e_iface
+    # static interface/interior launch plan (see _neighbour_launch_plan):
+    # slots [0, cut) cover every interface element on every shard; the
+    # degenerate all-interface case falls back to one unsplit launch
+    split, cut, _ = _neighbour_launch_plan(part)
     nbr_args = ()
     if neighbour:
         nbr_args = tuple(
@@ -356,8 +419,6 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
             xl = jnp.moveaxis(xl, -1, 1)
         if neighbour:
             rounds = gs.neighbour_rounds(part.nbr_offsets, s, nbr)
-            split = 0 < ei < ep
-            cut = ei if split else ep
             y = _elem_batch(xl, eo, lid, 0, cut, bshape)
             recvs = gs.neighbour_start(y, rounds, axis)  # permutes in flight
             if split:
@@ -405,7 +466,7 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         # across shards; emit one leading slot per shard so out_specs=
         # P(axis) reassembles them into an (S,)/(S, nrhs) array
         return (res.x, res.iterations[None], res.residual[None],
-                res.initial_residual[None])
+                res.initial_residual[None], res.breakdown[None])
 
     @functools.partial(jax.jit, static_argnames=("precond",))
     def run_pcg(b_global, tol, max_iter, precond="jacobi"):
@@ -415,11 +476,11 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
             functools.partial(pcg_body, use_jacobi=precond == "jacobi",
                               batched=batched),
             in_specs=(pe, pe, P(), P(), ops_specs) + idx_specs,
-            out_specs=(pe, pe, pe, pe))
-        x_loc, it, rr, r0 = body(
+            out_specs=(pe, pe, pe, pe, pe))
+        x_loc, it, rr, r0, brk = body(
             localize(b_global), diag_loc, jnp.asarray(tol),
             jnp.asarray(max_iter, jnp.int32), elem_ops, *idx_args)
-        return PCGResult(globalize(x_loc), it[0], rr[0], r0[0])
+        return PCGResult(globalize(x_loc), it[0], rr[0], r0[0], brk[0])
 
     return apply_global, run_pcg
 
@@ -464,7 +525,8 @@ def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
         res = solve(problem, b_rhs[..., 0], precond=precond, tol=tol,
                     max_iter=max_iter)
         return PCGResult(res.x[..., None], res.iterations[None],
-                         res.residual[None], res.initial_residual[None])
+                         res.residual[None], res.initial_residual[None],
+                         res.breakdown[None])
     if isinstance(problem, ShardedNekboneProblem):
         return problem.run_pcg(b_rhs, tol, max_iter, precond=precond)
     pre = None

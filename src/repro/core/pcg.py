@@ -55,10 +55,19 @@ def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None,
 
 
 class PCGResult(NamedTuple):
+    """`breakdown` flags a Lanczos breakdown: the iteration hit
+    ``p.Ap <= 0`` while the (column's) residual was still above tolerance —
+    the operator is not SPD on the Krylov space (rank-deficient direction),
+    so CG cannot advance.  The affected solve/column is FROZEN at its last
+    iterate (scalar bool for :func:`pcg`, per-column (nrhs,) bools for
+    :func:`pcg_block`); its `residual` then reports where it stalled, not
+    convergence."""
+
     x: jnp.ndarray
     iterations: jnp.ndarray
     residual: jnp.ndarray          # final sqrt(r.r)
     initial_residual: jnp.ndarray
+    breakdown: jnp.ndarray = None  # bool / (nrhs,) bool; see class docstring
 
 
 def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
@@ -95,25 +104,36 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     # free of cross-element communication (and the trailing evaluation at
     # loop exit costs nothing), instead of re-reducing r on every check.
     def cond(state):
-        _, _, _, _, _, rr, it = state
-        return jnp.logical_and(it < max_iter, rr > tol2)
+        _, _, _, _, _, rr, it, brk = state
+        return jnp.logical_and(it < max_iter,
+                               jnp.logical_and(rr > tol2, ~brk))
 
     def body(state):
-        x, r, z, p, rz, _, it = state
+        x, r, z, p, rz, rr, it, _ = state
         ap = a_op(p)
-        alpha = rz / dot(p, ap)
+        pap = dot(p, ap)
+        # Lanczos breakdown guard: p.Ap <= 0 with the residual still above
+        # tolerance means A is not SPD along p (rank-deficient direction) —
+        # alpha would be garbage (or inf/nan), so FREEZE the iterate at its
+        # last value, flag it, and let cond exit; silently substituting a
+        # denominator would keep "converging" to a wrong answer.
+        bad = pap <= 0.0
+        alpha = jnp.where(bad, 0.0, rz / jnp.where(bad, 1.0, pap))
         x = x + alpha * p
         r = r - alpha * ap
         z = precond(r)
         rz_new = dot(r, z)
         rr_new = dot(r, r)
-        beta = rz_new / rz
-        p = z + beta * p
-        return (x, r, z, p, rz_new, rr_new, it + 1)
+        beta = jnp.where(bad, 0.0, rz_new / jnp.where(rz != 0, rz, 1.0))
+        p = jnp.where(bad, p, z + beta * p)
+        # a frozen iteration did not advance the solve: don't count it
+        return (x, r, z, p, rz_new, rr_new,
+                it + jnp.where(bad, 0, 1).astype(jnp.int32), bad)
 
-    state = (x, r, z, p, rz, rr, jnp.array(0, dtype=jnp.int32))
-    x, r, _, _, _, rr, it = jax.lax.while_loop(cond, body, state)
-    return PCGResult(x, it, jnp.sqrt(rr), r0)
+    state = (x, r, z, p, rz, rr, jnp.array(0, dtype=jnp.int32),
+             jnp.array(False))
+    x, r, _, _, _, rr, it, brk = jax.lax.while_loop(cond, body, state)
+    return PCGResult(x, it, jnp.sqrt(rr), r0, brk)
 
 
 def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
@@ -133,8 +153,11 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     geometry loads are amortized over every column.  A column whose carried
     ``rr`` has met the tolerance is *frozen* (its alpha is masked to zero
     and its search direction stops updating), so late-converging columns
-    cannot perturb finished ones; the loop runs until every column is
-    converged or ``max_iter``.
+    cannot perturb finished ones; a column that hits a Lanczos breakdown
+    (``p.Ap <= 0`` while still active — a rank-deficient direction) is
+    frozen the same way and flagged in ``PCGResult.breakdown``, while the
+    healthy columns keep iterating; the loop runs until every column is
+    converged, broken down, or ``max_iter``.
 
     `dot(u, v)` must reduce to per-column values of shape (nrhs,) — the
     default contracts every axis except the last; on a sharded solve pass
@@ -161,17 +184,28 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     nrhs = b.shape[-1]
 
     def cond(state):
-        _, _, _, _, _, rr, it = state
-        return jnp.logical_and(it[-1] < max_iter, jnp.any(rr > tol2))
+        _, _, _, _, _, rr, it, brk = state
+        return jnp.logical_and(it[-1] < max_iter,
+                               jnp.any(jnp.logical_and(rr > tol2, ~brk)))
 
     def body(state):
-        x, r, z, p, rz, rr, it = state
-        active = rr > tol2                     # (nrhs,) converged-column mask
+        x, r, z, p, rz, rr, it, brk = state
+        active = (rr > tol2) & ~brk            # (nrhs,) live-column mask
         ap = a_op(p)
         pap = dot(p, ap)
+        # Lanczos breakdown on an ACTIVE column: p.Ap <= 0 while its
+        # residual is still above tolerance means A is not SPD along that
+        # column's direction — its alpha would be garbage (the old guard
+        # silently computed rz/1.0 and kept "iterating" toward a wrong x).
+        # Freeze the column at its last iterate and flag it; the healthy
+        # columns keep going.
+        bad = active & (pap <= 0.0)
+        brk = brk | bad
+        active = active & ~bad
         # masked columns get alpha = 0: x, r, p freeze exactly where they
-        # converged (the where-guards keep 0/0 NaNs out of dead columns)
-        alpha = jnp.where(active, rz / jnp.where(pap != 0, pap, 1.0), 0.0)
+        # converged/broke (the where-guards keep 0/0 NaNs out of dead
+        # columns)
+        alpha = jnp.where(active, rz / jnp.where(pap > 0, pap, 1.0), 0.0)
         x = x + alpha * p
         r = r - alpha * ap
         z = precond(r)
@@ -181,10 +215,10 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         p = jnp.where(active, z + beta * p, p)
         it = it.at[-1].add(1)
         return (x, r, z, p, rz_new, rr_new,
-                it.at[:nrhs].add(active.astype(jnp.int32)))
+                it.at[:nrhs].add(active.astype(jnp.int32)), brk)
 
     # it carries (nrhs,) per-column counts plus one trailing global counter
     it0 = jnp.zeros((nrhs + 1,), jnp.int32)
-    state = (x, r, z, p, rz, rr, it0)
-    x, r, _, _, _, rr, it = jax.lax.while_loop(cond, body, state)
-    return PCGResult(x, it[:nrhs], jnp.sqrt(rr), r0)
+    state = (x, r, z, p, rz, rr, it0, jnp.zeros((nrhs,), bool))
+    x, r, _, _, _, rr, it, brk = jax.lax.while_loop(cond, body, state)
+    return PCGResult(x, it[:nrhs], jnp.sqrt(rr), r0, brk)

@@ -10,6 +10,7 @@ and DESIGN.md).  Same convention: `None` means the single-device path.
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -18,8 +19,8 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["ShardCtx", "SolverShardCtx", "EXCHANGES", "make_ctx",
-           "make_solver_ctx", "constraint", "shard_map_compat",
-           "PARTIAL_MANUAL_SHARD_MAP"]
+           "make_solver_ctx", "parse_grid_arg", "constraint",
+           "shard_map_compat", "PARTIAL_MANUAL_SHARD_MAP"]
 
 # jax >= 0.5 exposes top-level jax.shard_map; that release is also where
 # DIFFERENTIATING a partially-manual shard_map works (0.4.x trips an XLA
@@ -92,12 +93,22 @@ class SolverShardCtx(NamedTuple):
                     overlapped against interior-element compute (see
                     DESIGN.md).  Numerically equivalent up to summation
                     order.
+
+    `grid` selects the element-partition shard-grid shape
+    (`core.mesh_gen.normalize_grid`): None — 1-D slabs (the original
+    partition); a (px[, py[, pz]]) tuple multiplying to the device count —
+    a Cartesian box decomposition whose per-shard interface surface is
+    O((E/S)^(2/3)) instead of the slab's full cross-section; or "auto" —
+    the smallest-surface factorization for the mesh at setup time.  The
+    device mesh itself stays 1-D: the shard grid is linearized into the
+    single `axis`, and neighbour offsets become linearized grid shifts.
     """
 
     mesh: Mesh
     axis: str
     nrhs: int = 1
     exchange: str = "psum"
+    grid: object = None
 
     @property
     def n_shards(self) -> int:
@@ -107,17 +118,51 @@ class SolverShardCtx(NamedTuple):
 EXCHANGES = ("psum", "neighbour")
 
 
+def parse_grid_arg(spec: str):
+    """Parse a CLI shard-grid spec: 'slab' -> None (1-D slabs), 'auto'
+    -> 'auto', 'PXxPYxPZ' (e.g. '2x2x1', '2x2') -> an explicit tuple.
+    Shared by examples/nekbone_solve.py and benchmarks/bench_nekbone.py so
+    the two drivers cannot diverge on the syntax."""
+    spec = spec.strip().lower()
+    if spec in ("", "slab", "none"):
+        return None
+    if spec == "auto":
+        return "auto"
+    try:
+        return tuple(int(p) for p in spec.split("x"))
+    except ValueError:
+        raise ValueError(
+            f"bad grid spec {spec!r}: expected 'slab', 'auto', or "
+            f"per-axis shard counts like '2x2x1'") from None
+
+
+def _validate_grid_spec(grid, devices: int) -> None:
+    """Early shard-grid validation: `mesh_gen.normalize_grid` with
+    shape=None runs exactly the mesh-independent rules (spec form,
+    positivity, shard-count product) — ONE implementation; the extent
+    checks re-run at partition time, when the mesh is known."""
+    from repro.core.mesh_gen import normalize_grid
+
+    normalize_grid(grid, None, devices)
+
+
 def make_solver_ctx(devices: Optional[int] = None,
                     axis: str = "elem",
                     nrhs: int = 1,
-                    exchange: str = "psum") -> Optional[SolverShardCtx]:
+                    exchange: str = "psum",
+                    grid=None) -> Optional[SolverShardCtx]:
     """Build a 1-D element mesh over the first `devices` local devices.
 
     devices=None uses every visible device; devices=1 (or a single visible
     device) returns None — callers fall through to the unsharded path, which
-    keeps single-device execution bit-identical to today's solve.  `nrhs`
-    declares the RHS-batch width of the planned solves and `exchange` the
-    interface exchange implementation (see `SolverShardCtx`).
+    keeps single-device execution bit-identical to today's solve.  Because
+    that path has no exchange and no partition at all, a non-default
+    `exchange` or `grid` cannot take effect there: rather than silently
+    dropping them (which would let a bench row mislabel the exchange it
+    actually ran), the collapse warns and normalizes.  `nrhs` declares the
+    RHS-batch width of the planned solves, `exchange` the interface
+    exchange implementation, and `grid` the element-partition shard-grid
+    shape (see `SolverShardCtx`).
     """
     if nrhs < 1:
         raise ValueError(f"nrhs must be >= 1, got {nrhs}")
@@ -133,9 +178,19 @@ def make_solver_ctx(devices: Optional[int] = None,
                 f"count={devices} to simulate more on CPU)")
         devs = devs[:devices]
     if len(devs) <= 1:
+        dropped = [f"{name}={val!r}" for name, val, default in
+                   (("exchange", exchange, "psum"), ("grid", grid, None))
+                   if val != default]
+        if dropped:
+            warnings.warn(
+                f"make_solver_ctx: single-device context runs the exact "
+                f"unsharded solve — {', '.join(dropped)} cannot apply and "
+                f"will be ignored (pass devices>1 to shard)",
+                UserWarning, stacklevel=2)
         return None
+    _validate_grid_spec(grid, len(devs))
     return SolverShardCtx(Mesh(np.asarray(devs), (axis,)), axis, nrhs,
-                          exchange)
+                          exchange, grid)
 
 
 def make_ctx(mesh: Optional[Mesh]) -> Optional[ShardCtx]:

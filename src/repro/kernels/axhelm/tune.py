@@ -166,12 +166,14 @@ def _clamp_to_elems(eb: int, e_total: Optional[int]) -> int:
     element-sharded solve calls the kernel on per-shard blocks that can be
     far smaller than the mesh the sweep ran on — a winning block of 64 on a
     9-element shard would spend 86% of the grid step on padding.  Under the
-    overlapped neighbour exchange the kernel runs on the interface and
-    interior sub-batches separately, so the caller passes the SMALLER
-    sub-batch (min(e_iface, EP - e_iface)) as `e_total`: neither launch
-    then pads up to the block (padding the interface launch would delay
-    the ppermutes), the larger one just takes more grid steps.  The cached
-    winner stays unclamped; only this call's resolution shrinks."""
+    overlapped neighbour exchange the caller passes the element count of
+    `core.nekbone._neighbour_launch_plan` — the SMALLER sub-batch
+    (min(e_iface, EP - e_iface)) in split mode, so neither launch pads up
+    to the block (padding the interface launch would delay the ppermutes)
+    and the larger one just takes more grid steps, or the full EP when the
+    degenerate all-interface partition falls back to one unsplit launch.
+    The cached winner stays unclamped; only this call's resolution
+    shrinks."""
     if e_total is None or eb <= e_total:
         return eb
     under = [c for c in _CANDIDATES if c <= max(int(e_total), 1)]

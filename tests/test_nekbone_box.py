@@ -1,0 +1,461 @@
+"""Box (2-D/3-D) element decomposition: equivalence, surface, regressions.
+
+The contract: `make_solver_ctx(devices=N, grid=(px, py, pz))` partitions
+elements into Cartesian sub-boxes instead of 1-D slabs — strictly fewer
+per-shard shared dofs on chunky meshes — while the solve is observationally
+identical (iteration counts within ±1, both equations/backends, both
+exchanges, nrhs 1 and 4, non-divisible per-axis extents), and
+`grid=(N,)/(N,1,1)/None` reproduce today's slab partition bit-for-bit.
+Also the satellite regressions that ride along: the degenerate
+all-interface launch plan (`core.nekbone._neighbour_launch_plan`), the
+stale-tuned-block clamp, per-element lambda fields under shard_ctx, and
+the devices=1 exchange/grid warn-and-normalize.
+
+Property-layer index-set checks for box grids live in
+tests/test_nekbone_neighbour.py; this file covers construction, the real
+collective path (subprocesses with forced host devices), and the compiled
+HLO gate.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mesh_gen, nekbone
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+TOL = 1e-6
+
+
+def _run(script: str, devices: int) -> list:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return [json.loads(line) for line in out.stdout.strip().splitlines()
+            if line.startswith("{")]
+
+
+# ------------------------------------------------------ construction ----
+
+
+def _assert_partition_equal(a, b):
+    for f in a._fields:
+        va, vb = getattr(a, f), getattr(b, f)
+        if isinstance(va, tuple) and va and isinstance(va[0], np.ndarray):
+            assert len(va) == len(vb), f
+            for x, y in zip(va, vb):
+                np.testing.assert_array_equal(x, y, err_msg=f)
+        elif isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f)
+        else:
+            assert va == vb, (f, va, vb)
+
+
+def test_slab_grid_specs_are_bit_for_bit():
+    """grid=None / (N,) / (N, 1, 1) produce numpy-identical MeshPartitions
+    — the acceptance guarantee that box plumbing cannot perturb the slab
+    path, including on element counts that do not divide evenly."""
+    for shape, n_shards in [((3, 3, 2), 4), ((5, 1, 1), 2), ((6, 6, 6), 4),
+                            ((3, 3, 2), 7)]:
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(*shape, 2),
+                                         seed=3)
+        base = mesh_gen.partition_elements(mesh, n_shards)
+        assert base.grid == (n_shards, 1, 1)
+        for spec in [(n_shards,), (n_shards, 1, 1), (n_shards, 1)]:
+            _assert_partition_equal(
+                base, mesh_gen.partition_elements(mesh, n_shards, grid=spec))
+
+
+def test_box_partition_shrinks_shared_surface():
+    """The acceptance numbers: on a 6x6x6 mesh at 4 shards the (2,2,1) box
+    records strictly fewer per-shard shared dofs and a lower
+    interface-element fraction than the (4,1,1) slab."""
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(6, 6, 6, 3), seed=1)
+    slab = mesh_gen.partition_elements(mesh, 4)
+    box = mesh_gen.partition_elements(mesh, 4, grid=(2, 2, 1))
+    slab_per_shard = slab.shared_present.sum(axis=1)
+    box_per_shard = box.shared_present.sum(axis=1)
+    assert box_per_shard.max() < slab_per_shard.max(), \
+        (box_per_shard, slab_per_shard)
+    # every shard of the box is strictly below the slab's worst shard
+    assert (box_per_shard < slab_per_shard.max()).all()
+    assert box.iface_counts.sum() < slab.iface_counts.sum()
+    assert box.n_shared < slab.n_shared
+    # element sets are a permutation of the mesh either way
+    np.testing.assert_array_equal(
+        np.sort(box.elem_perm[box.elem_perm >= 0]),
+        np.arange(len(mesh.verts)))
+
+
+def test_auto_grid_minimizes_cut_surface():
+    """"auto" picks cube-ish sub-boxes on chunky meshes, slabs on sticks,
+    and falls back to the 1-D slab when nothing else fits."""
+    assert mesh_gen.auto_grid((6, 6, 6), 4) == (2, 2, 1)
+    assert mesh_gen.auto_grid((8, 2, 2), 4) == (4, 1, 1)
+    # (4,2,1) and (2,2,2) tie at 32 cut faces on (4,4,2); the deterministic
+    # tie-break prefers splitting earlier axes harder
+    assert mesh_gen.auto_grid((4, 4, 2), 8) == (4, 2, 1)
+    assert mesh_gen.auto_grid((6, 6, 6), 8) == (2, 2, 2)
+    assert mesh_gen.auto_grid((1, 8, 1), 4) == (1, 4, 1)
+    # prime count exceeding every extent: only the linear slab fits
+    assert mesh_gen.auto_grid((2, 2, 2), 7) == (7, 1, 1)
+
+
+def test_normalize_grid_validation():
+    shape = (3, 3, 2)
+    with pytest.raises(ValueError, match="shards"):
+        mesh_gen.normalize_grid((2, 2), shape, 3)
+    with pytest.raises(ValueError, match="1-3 axes"):
+        mesh_gen.normalize_grid((2, 1, 1, 1), shape, 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        mesh_gen.normalize_grid((2, 0, 1), shape, 0)
+    with pytest.raises(ValueError, match="extents"):
+        mesh_gen.normalize_grid((1, 1, 4), shape, 4)  # nz=2 < 4
+    with pytest.raises(ValueError, match="tuple"):
+        mesh_gen.normalize_grid("cube", shape, 4)
+    # 1-D slab never needs per-axis feasibility
+    assert mesh_gen.normalize_grid((4, 1, 1), shape, 4) == (4, 1, 1)
+    assert mesh_gen.normalize_grid("auto", shape, 4) == \
+        mesh_gen.auto_grid(shape, 4)
+
+
+def test_make_solver_ctx_grid_and_single_device_validation():
+    """Satellite regressions: grid specs are validated eagerly at ctx
+    construction, and the devices=1 collapse WARNS about dropped
+    exchange/grid settings instead of silently ignoring them (the old
+    behaviour let bench rows mislabel the exchange actually run)."""
+    from repro.distributed.context import (_validate_grid_spec,
+                                           make_solver_ctx, parse_grid_arg)
+
+    # eager grid validation (multi-device construction can't run under the
+    # 1-device pytest process; the subprocess suites cover it end-to-end)
+    with pytest.raises(ValueError, match="devices"):
+        _validate_grid_spec((2, 2), 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        _validate_grid_spec((2, 0), 4)
+    _validate_grid_spec((2, 2), 4)
+    _validate_grid_spec("auto", 4)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert make_solver_ctx(devices=1) is None
+    assert not w  # default settings drop nothing: no warning
+    with pytest.warns(UserWarning, match="exchange='neighbour'.*ignored"):
+        assert make_solver_ctx(devices=1, exchange="neighbour") is None
+    with pytest.warns(UserWarning, match="grid.*ignored"):
+        assert make_solver_ctx(devices=1, grid="auto") is None
+    # CLI spec parser (shared by the example and the bench)
+    assert parse_grid_arg("slab") is None
+    assert parse_grid_arg("auto") == "auto"
+    assert parse_grid_arg("2x2x1") == (2, 2, 1)
+    assert parse_grid_arg("2x2") == (2, 2)
+    with pytest.raises(ValueError, match="grid spec"):
+        parse_grid_arg("2,2")
+
+
+def test_neighbour_launch_plan_degenerate_cases():
+    """The launch plan behind the autotune clamp and the kernel split:
+    split mode clamps to the smaller sub-batch; an all-interface partition
+    (thin slabs at high shard counts) falls back to ONE unsplit launch
+    clamped to its REAL size — previously the clamp condition was simply
+    skipped there."""
+    from repro.core.nekbone import _neighbour_launch_plan
+
+    chunky = mesh_gen.partition_elements(
+        mesh_gen.box_mesh(6, 6, 6, 2), 4, grid=(2, 2, 1))
+    split, cut, tune = _neighbour_launch_plan(chunky)
+    assert split and cut == chunky.e_iface
+    assert tune == min(chunky.e_iface, chunky.e_per_shard - chunky.e_iface)
+    assert 0 < tune < chunky.e_per_shard
+
+    thin = mesh_gen.partition_elements(mesh_gen.box_mesh(4, 1, 1, 2), 4)
+    assert thin.e_iface == thin.e_per_shard  # every element is interface
+    split, cut, tune = _neighbour_launch_plan(thin)
+    assert not split
+    assert cut == thin.e_per_shard
+    assert tune == thin.e_per_shard          # the REAL launch size
+
+
+def test_degenerate_auto_block_clamps_stale_cache(tmp_path, monkeypatch):
+    """Regression: with a stale tuned block (e.g. 256, cached from a big
+    single-device sweep) and an all-interface shard of e_per_shard
+    elements, block resolution must clamp to the real launch size instead
+    of padding the launch up to the stale winner."""
+    from repro.kernels.axhelm import tune
+
+    cache = tmp_path / "tune.json"
+    monkeypatch.setenv(tune.CACHE_ENV, str(cache))
+    backend = tune._backend_tag(True)
+    key = tune._config_key("partial", 3, 1, jnp.float32, False)
+    cache.write_text(json.dumps(
+        {backend: {key: {"block_elems": 256, "timings_s": {}}}}))
+    with tune._LOCK:
+        saved = dict(tune._MEM_CACHE)
+        tune._MEM_CACHE.clear()
+    try:
+        eb = tune.get_block_elems("partial", 3, 1, jnp.float32,
+                                  helmholtz=False, e_total=3,
+                                  interpret=True)
+        assert eb <= 4, eb  # largest candidate not exceeding ~e_total
+        unclamped = tune.get_block_elems("partial", 3, 1, jnp.float32,
+                                         helmholtz=False, interpret=True)
+        assert unclamped == 256  # the cached winner itself stays
+    finally:
+        with tune._LOCK:
+            tune._MEM_CACHE.clear()
+            tune._MEM_CACHE.update(saved)
+
+
+def test_degenerate_overlap_warns_at_setup():
+    """exchange="neighbour" on an all-interface partition must SAY the
+    overlap degenerated (and point at the box decomposition) instead of
+    silently running without an overlap window.  Needs a real multi-device
+    ctx, so it runs in a forced-device subprocess."""
+    rows = _run(textwrap.dedent("""
+        import json, warnings
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core import mesh_gen, nekbone
+        from repro.distributed.context import make_solver_ctx
+
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(8, 1, 1, 2),
+                                         seed=3)
+        rng = np.random.default_rng(0)
+        x_true = jnp.asarray(rng.standard_normal(mesh.n_global), jnp.float32)
+        ref = nekbone.setup_problem(mesh, variant="trilinear",
+                                    dtype=jnp.float32,
+                                    shard_ctx=make_solver_ctx(devices=8))
+        b = nekbone.rhs_from_solution(ref, x_true)
+        r0 = nekbone.solve(ref, b, tol=1e-6, max_iter=300)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            sh = nekbone.setup_problem(
+                mesh, variant="trilinear", dtype=jnp.float32,
+                shard_ctx=make_solver_ctx(devices=8, exchange="neighbour"))
+        r1 = nekbone.solve(sh, b, tol=1e-6, max_iter=300)
+        msgs = [str(x.message) for x in w
+                if "no interior elements" in str(x.message)]
+        print(json.dumps({
+            "warned": len(msgs), "mentions_grid": "grid" in "".join(msgs),
+            "it_psum": int(r0.iterations), "it_nbr": int(r1.iterations),
+            "dx": float(jnp.max(jnp.abs(r1.x - r0.x)))}))
+    """), devices=8)
+    (r,) = rows
+    assert r["warned"] == 1, r
+    assert r["mentions_grid"], r
+    # the degenerate path still solves correctly (unsplit fallback)
+    assert abs(r["it_psum"] - r["it_nbr"]) <= 1, r
+    assert r["dx"] < 1e-3, r
+
+
+# ------------------------------------------------- collective parity ----
+
+
+_PARITY_SCRIPT = """
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import mesh_gen, nekbone
+from repro.distributed.context import make_solver_ctx
+
+assert jax.device_count() == 4, jax.devices()
+# the acceptance mesh (6x6x6 at 4 shards, divides evenly by (2,2,1)) plus
+# a mesh whose per-axis extents do NOT divide the grid (5/2, 3/2 chunks)
+mesh_acc = mesh_gen.deform_trilinear(mesh_gen.box_mesh(6, 6, 6, 2), seed=3)
+mesh_odd = mesh_gen.deform_trilinear(mesh_gen.box_mesh(5, 3, 2, 2), seed=4)
+rng = np.random.default_rng(0)
+cases = []
+for helm in (False, True):
+    for exchange in ("psum", "neighbour"):
+        for nrhs in (1, 4):
+            cases.append((mesh_acc, "reference", helm, exchange, nrhs))
+        cases.append((mesh_odd, "reference", helm, exchange, 1))
+        cases.append((mesh_acc, "pallas", helm, exchange, 1))
+# one pallas multi-RHS config covers the batched kernel path cheaply
+cases.append((mesh_acc, "pallas", False, "neighbour", 4))
+for mesh, backend, helm, exchange, nrhs in cases:
+    shape = (mesh.n_global, nrhs) if nrhs > 1 else (mesh.n_global,)
+    x_true = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    variant = ("merged" if helm else "partial") if backend == "pallas" \\
+        else "trilinear"
+    kw = dict(variant=variant, helmholtz=helm, dtype=jnp.float32,
+              backend=backend)
+    slab = nekbone.setup_problem(mesh, shard_ctx=make_solver_ctx(
+        devices=4, nrhs=nrhs, exchange=exchange), **kw)
+    b = nekbone.rhs_from_solution(slab, x_true)
+    r0 = nekbone.solve(slab, b, tol=%(tol)g, max_iter=300)
+    box = nekbone.setup_problem(mesh, shard_ctx=make_solver_ctx(
+        devices=4, nrhs=nrhs, exchange=exchange, grid=(2, 2, 1)), **kw)
+    r1 = nekbone.solve(box, b, tol=%(tol)g, max_iter=300)
+    it0 = np.atleast_1d(np.asarray(r0.iterations)).tolist()
+    it1 = np.atleast_1d(np.asarray(r1.iterations)).tolist()
+    print(json.dumps({
+        "mesh": list(mesh.shape), "backend": backend, "helm": helm,
+        "exchange": exchange, "nrhs": nrhs,
+        "grid_slab": list(slab.partition.grid),
+        "grid_box": list(box.partition.grid),
+        "it_slab": it0, "it_box": it1,
+        "brk": bool(np.asarray(r1.breakdown).any()),
+        "dx": float(jnp.max(jnp.abs(r1.x - r0.x)))}))
+"""
+
+
+def test_box_solve_matches_slab():
+    """Acceptance parity: the (2,2,1) box solve == the (4,1,1) slab solve
+    within ±1 PCG iteration — both equations, both backends, both
+    exchanges, nrhs 1 and 4, and non-divisible per-axis extents."""
+    rows = _run(_PARITY_SCRIPT % {"tol": TOL}, devices=4)
+    # 2 helm x 2 exchange x (2 nrhs acc-ref + 1 odd-ref + 1 acc-pallas)
+    # + 1 pallas nrhs=4 row
+    assert len(rows) == 17, len(rows)
+    assert any(r["backend"] == "pallas" and r["nrhs"] == 4 for r in rows)
+    assert any(r["mesh"] == [5, 3, 2] for r in rows)
+    for r in rows:
+        assert r["grid_slab"] == [4, 1, 1], r
+        assert r["grid_box"] == [2, 2, 1], r
+        assert not r["brk"], r
+        for a, b in zip(r["it_slab"], r["it_box"]):
+            assert abs(a - b) <= 1, r
+        # both solves met the same 1e-6 residual tolerance; their iterate
+        # difference scales with conditioning x tolerance, and the 6^3
+        # acceptance mesh is larger/worse-conditioned than the 18-element
+        # meshes of the older parity suites (which bound dx < 1e-3)
+        assert r["dx"] < 5e-3, r
+
+
+def test_box_grid_hlo_gate():
+    """CI gate on the (2,2,1) grid: the compiled neighbour-exchange
+    operator/solve contain collective-permutes (2 per linearized grid
+    offset per apply) and ZERO interface-sized all-reduces — the box
+    decomposition's extra edge/corner rounds stay point-to-point."""
+    rows = _run(textwrap.dedent("""
+        import json, re
+        import jax, jax.numpy as jnp
+        from repro.core import mesh_gen, nekbone
+        from repro.distributed.context import make_solver_ctx
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(4, 4, 2, 2),
+                                         seed=3)
+        for nrhs in (1, 4):
+            ctx = make_solver_ctx(devices=4, nrhs=nrhs,
+                                  exchange="neighbour", grid=(2, 2, 1))
+            sh = nekbone.setup_problem(mesh, variant="trilinear",
+                                       dtype=jnp.float32, shard_ctx=ctx)
+            ns = int(sh.partition.n_shared)
+            shape = (mesh.n_global, nrhs) if nrhs > 1 else (mesh.n_global,)
+            B = jnp.zeros(shape, jnp.float32)
+            iface = re.compile(r"= f32\\[" + str(ns)
+                               + r"[,\\]]\\S* all-reduce(?:-start)?\\(")
+            cperm = re.compile(r" collective-permute(?:-start)?\\(")
+            txt_op = jax.jit(sh.op).lower(B).compile().as_text()
+            txt_solve = jax.jit(lambda b: sh.run_pcg(b, 1e-6, 300)).lower(
+                B).compile().as_text()
+            print(json.dumps({
+                "nrhs": nrhs, "n_shared": ns,
+                "offsets": list(sh.partition.nbr_offsets),
+                "rounds": 2 * len(sh.partition.nbr_offsets),
+                "op_iface_psums": len(iface.findall(txt_op)),
+                "op_cperms": len(cperm.findall(txt_op)),
+                "solve_iface_psums": len(iface.findall(txt_solve)),
+                "solve_cperms": len(cperm.findall(txt_solve))}))
+    """), devices=4)
+    assert len(rows) == 2
+    for r in rows:
+        # a (2,2,1) grid has x-, y- AND diagonal neighbours: >= 3 offsets
+        assert len(r["offsets"]) >= 3, r
+        assert r["op_iface_psums"] == 0, r
+        assert r["solve_iface_psums"] == 0, r
+        assert r["op_cperms"] == r["rounds"], r
+        assert r["solve_cperms"] == 2 * r["rounds"], r
+
+
+def test_lambda_fields_match_scalars_sharded():
+    """Satellite acceptance: per-element lam0/lam1 FIELDS under shard_ctx
+    — constant fields reproduce the scalar solve exactly, and a varying
+    field solved sharded matches the same field solved single-device, on
+    1/2/4 devices and both backends."""
+    rows = _run(textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core import mesh_gen, nekbone
+        from repro.distributed.context import make_solver_ctx
+
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
+                                         seed=3)
+        n1 = mesh.order + 1
+        e = len(mesh.verts)
+        rng = np.random.default_rng(0)
+        x_true = jnp.asarray(rng.standard_normal(mesh.n_global), jnp.float32)
+        node = (e, n1, n1, n1)
+        lam0_var = jnp.asarray(1.0 + 0.5 * rng.random(node), jnp.float32)
+        lam1_var = jnp.asarray(0.05 + 0.1 * rng.random(node), jnp.float32)
+        for backend in ("reference", "pallas"):
+            variant = "trilinear"
+            kw = dict(variant=variant, helmholtz=True, dtype=jnp.float32,
+                      backend=backend)
+            # single-device oracle for the VARYING fields
+            ref = nekbone.setup_problem(mesh, lam0=lam0_var, lam1=lam1_var,
+                                        **kw)
+            b_var = nekbone.rhs_from_solution(ref, x_true)
+            r_ref = nekbone.solve(ref, b_var, tol=1e-6, max_iter=300)
+            for devices in (1, 2, 4):
+                ctx = make_solver_ctx(devices=devices) if devices > 1 \\
+                    else None
+                # constant field == scalar, bit-for-bit comparable setup
+                lam0_c = jnp.full(node, 1.3, jnp.float32)
+                ps = nekbone.setup_problem(
+                    mesh, lam0=jnp.asarray(1.3, jnp.float32),
+                    lam1=jnp.asarray(0.1, jnp.float32), shard_ctx=ctx, **kw)
+                pf = nekbone.setup_problem(
+                    mesh, lam0=lam0_c, lam1=jnp.full(node, 0.1, jnp.float32),
+                    shard_ctx=ctx, **kw)
+                b = nekbone.rhs_from_solution(ps, x_true)
+                rs = nekbone.solve(ps, b, tol=1e-6, max_iter=300)
+                rf = nekbone.solve(pf, b, tol=1e-6, max_iter=300)
+                # varying field, sharded vs the single-device oracle
+                pv = nekbone.setup_problem(mesh, lam0=lam0_var,
+                                           lam1=lam1_var, shard_ctx=ctx,
+                                           **kw)
+                rv = nekbone.solve(pv, b_var, tol=1e-6, max_iter=300)
+                print(json.dumps({
+                    "backend": backend, "devices": devices,
+                    "it_scalar": int(rs.iterations),
+                    "it_const_field": int(rf.iterations),
+                    "dx_const": float(jnp.max(jnp.abs(rf.x - rs.x))),
+                    "it_var_ref": int(r_ref.iterations),
+                    "it_var_sh": int(rv.iterations),
+                    "dx_var": float(jnp.max(jnp.abs(rv.x - r_ref.x)))}))
+    """), devices=4)
+    assert len(rows) == 6
+    for r in rows:
+        # constant field vs scalar: identical broadcast products
+        assert r["it_scalar"] == r["it_const_field"], r
+        assert r["dx_const"] == 0.0, r
+        # varying field: sharded == single-device oracle
+        assert abs(r["it_var_sh"] - r["it_var_ref"]) <= 1, r
+        assert r["dx_var"] < 1e-3, r
+
+
+def test_lambda_field_shape_validation_sharded():
+    """A mis-shaped lambda field must fail at setup with the mesh-layout
+    message, not deep inside shard_map tracing.  (Checked through the
+    public API with a mocked 2-shard context — partitioning happens before
+    any device work.)"""
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 2, 1, 2), seed=3)
+    part = mesh_gen.partition_elements(mesh, 2)
+    bad = jnp.ones((len(mesh.verts), 2, 2, 2), jnp.float32)  # wrong N1
+    with pytest.raises(ValueError, match="unpartitioned mesh layout"):
+        nekbone._setup_problem_sharded(
+            mesh, nekbone.make_basis(mesh.order), "trilinear", 1, False,
+            bad, None, jnp.asarray(mesh.boundary), jnp.float32,
+            "reference", None, None, None, part)

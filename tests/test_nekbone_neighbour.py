@@ -64,6 +64,23 @@ def _random_mesh(rng, nx, ny, nz, order):
     return mesh_gen.deform_trilinear(mesh, seed=int(rng.integers(100)))
 
 
+def _grid_for(mesh, n_shards, gy, gz):
+    """Map drawn (gy, gz) onto a feasible shard grid for this mesh and
+    shard count: each is clamped to the mesh extent and to a divisor of
+    the (remaining) shard count, the leftover factor goes to x.  Returns
+    None — today's 1-D slab partition — when the draw degenerates to 1x1
+    cross-sections or the x factor cannot chunk the x extent, so the
+    property sweep covers slab, 2-D and 3-D box grids in one strategy."""
+    nx, ny, nz = mesh.shape
+    gy = max(g for g in range(1, min(gy, ny) + 1) if n_shards % g == 0)
+    rem = n_shards // gy
+    gz = max(g for g in range(1, min(gz, nz) + 1) if rem % g == 0)
+    gx = rem // gz
+    if (gy == 1 and gz == 1) or gx > nx:
+        return None
+    return (gx, gy, gz)
+
+
 def _shard_rounds(part, t):
     """Shard t's NeighbourRound list, built by the REAL table-slicing path
     (`gs.neighbour_rounds` over the flattened operand layout the solver
@@ -112,19 +129,10 @@ def _emulated_exchange(part, y_dofs_all):
 # ------------------------------------------------------ property layer ----
 
 
-@settings(max_examples=10, deadline=None)
-@given(nx=st.integers(1, 4), ny=st.integers(1, 3), nz=st.integers(1, 2),
-       order=st.integers(1, 3), n_shards=st.integers(2, 6),
-       seed=st.integers(0, 2**31 - 1))
-def test_neighbour_tables_cover_interfaces(nx, ny, nz, order, n_shards,
-                                           seed):
-    """Property: the pair tables enumerate exactly the pairwise-shared dofs,
-    in the same order on both sides, and the interface-element
-    classification is precisely 'touches a shared dof'."""
-    rng = np.random.default_rng(seed)
-    mesh = _random_mesh(rng, nx, ny, nz, order)
-    n_shards = min(n_shards, len(mesh.verts))
-    part = mesh_gen.partition_elements(mesh, n_shards)
+def _check_pair_tables(mesh, part):
+    """The pair tables enumerate exactly the pairwise-shared dofs, in the
+    same order on both sides, and the interface-element classification is
+    precisely 'touches a shared dof' — on ANY shard grid."""
     s = part.n_shards
 
     # per-shard global dof sets, from the partition's own map
@@ -175,19 +183,28 @@ def test_neighbour_tables_cover_interfaces(nx, ny, nz, order, n_shards,
 
 @settings(max_examples=10, deadline=None)
 @given(nx=st.integers(1, 4), ny=st.integers(1, 3), nz=st.integers(1, 2),
-       order=st.integers(1, 3), n_shards=st.integers(2, 8),
-       nrhs=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
-def test_neighbour_exchange_matches_psum_and_dense(nx, ny, nz, order,
-                                                   n_shards, nrhs, seed):
-    """Property: the pairwise neighbour exchange leaves every valid local
-    slot holding the full global sum — equal (exact arithmetic) to both the
-    psum-style exchange and the dense single-device gather, on random
-    meshes, shard counts, and RHS-batch widths."""
+       order=st.integers(1, 3), n_shards=st.integers(2, 6),
+       gy=st.integers(1, 3), gz=st.integers(1, 2),
+       seed=st.integers(0, 2**31 - 1))
+def test_neighbour_tables_cover_interfaces(nx, ny, nz, order, n_shards,
+                                           gy, gz, seed):
+    """Property: the pair-table contract holds verbatim on 1-D slab AND
+    2-D/3-D box shard grids (drawn via `_grid_for`), including dofs shared
+    by 4 shards at sub-box edges and 8 at corners."""
     rng = np.random.default_rng(seed)
     mesh = _random_mesh(rng, nx, ny, nz, order)
+    n_shards = min(n_shards, len(mesh.verts))
+    grid = _grid_for(mesh, n_shards, gy, gz)
+    part = mesh_gen.partition_elements(mesh, n_shards, grid=grid)
+    _check_pair_tables(mesh, part)
+
+
+def _check_exchange_matches(mesh, part, rng, nrhs):
+    """The pairwise neighbour exchange leaves every valid local slot
+    holding the full global sum — equal (exact arithmetic) to both the
+    psum-style exchange and the dense single-device gather."""
     e = len(mesh.verts)
-    n_shards = min(n_shards, e)
-    part = mesh_gen.partition_elements(mesh, n_shards)
+    n_shards = part.n_shards
     n1 = mesh.order + 1
     bshape = (nrhs,) if nrhs > 1 else ()
 
@@ -228,20 +245,30 @@ def test_neighbour_exchange_matches_psum_and_dense(nx, ny, nz, order,
 
 
 @settings(max_examples=10, deadline=None)
-@given(nx=st.integers(2, 4), ny=st.integers(1, 3), nz=st.integers(1, 2),
-       order=st.integers(1, 3), n_shards=st.integers(2, 6),
-       seed=st.integers(0, 2**31 - 1))
-def test_neighbour_dssum_projection_and_adjointness(nx, ny, nz, order,
-                                                    n_shards, seed):
-    """Property: with the neighbour-exchanged gather standing in for Q^T,
-    adjointness <Q x, y> == <x, Q^T y> holds, and multiplicity-averaged
-    dssum built on it is a projection — the same identities the psum
-    exchange satisfies (test_gather_scatter), now on the pairwise path."""
+@given(nx=st.integers(1, 4), ny=st.integers(1, 3), nz=st.integers(1, 2),
+       order=st.integers(1, 3), n_shards=st.integers(2, 8),
+       gy=st.integers(1, 3), gz=st.integers(1, 2),
+       nrhs=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_neighbour_exchange_matches_psum_and_dense(nx, ny, nz, order,
+                                                   n_shards, gy, gz, nrhs,
+                                                   seed):
+    """Property: exchange == psum == dense on random meshes, shard counts,
+    RHS-batch widths, and shard grids (slab and 2-D/3-D boxes)."""
     rng = np.random.default_rng(seed)
     mesh = _random_mesh(rng, nx, ny, nz, order)
+    n_shards = min(n_shards, len(mesh.verts))
+    grid = _grid_for(mesh, n_shards, gy, gz)
+    part = mesh_gen.partition_elements(mesh, n_shards, grid=grid)
+    _check_exchange_matches(mesh, part, rng, nrhs)
+
+
+def _check_dssum_adjoint(mesh, part, rng):
+    """With the neighbour-exchanged gather standing in for Q^T, adjointness
+    <Q x, y> == <x, Q^T y> holds, and multiplicity-averaged dssum built on
+    it is a projection — the same identities the psum exchange satisfies
+    (test_gather_scatter), now on the pairwise path."""
     e = len(mesh.verts)
-    n_shards = min(n_shards, e)
-    part = mesh_gen.partition_elements(mesh, n_shards)
+    n_shards = part.n_shards
     n1 = mesh.order + 1
 
     def gather_neighbour_global(y_blocks):
@@ -289,6 +316,48 @@ def test_neighbour_dssum_projection_and_adjointness(nx, ny, nz, order,
         once = average(y)
         twice = average(once)
     np.testing.assert_allclose(twice, once, rtol=1e-10, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(nx=st.integers(2, 4), ny=st.integers(1, 3), nz=st.integers(1, 2),
+       order=st.integers(1, 3), n_shards=st.integers(2, 6),
+       gy=st.integers(1, 3), gz=st.integers(1, 2),
+       seed=st.integers(0, 2**31 - 1))
+def test_neighbour_dssum_projection_and_adjointness(nx, ny, nz, order,
+                                                    n_shards, gy, gz, seed):
+    """Property: adjointness + dssum projection hold through the neighbour
+    path on slab AND box shard grids."""
+    rng = np.random.default_rng(seed)
+    mesh = _random_mesh(rng, nx, ny, nz, order)
+    n_shards = min(n_shards, len(mesh.verts))
+    grid = _grid_for(mesh, n_shards, gy, gz)
+    part = mesh_gen.partition_elements(mesh, n_shards, grid=grid)
+    _check_dssum_adjoint(mesh, part, rng)
+
+
+def test_box_grid_properties_fixed_configs():
+    """Deterministic box-grid coverage the random draws cannot guarantee:
+    2-D and 3-D grids with dofs shared by exactly 4 shards (sub-box edges)
+    and 8 shards (corners), plus non-divisible per-axis extents.  Runs the
+    SAME check bodies as the hypothesis properties above."""
+    rng = np.random.default_rng(7)
+    configs = [
+        ((4, 4, 2), 1, (2, 2, 1), 4),   # 2-D grid: 4-shard edge dofs
+        ((2, 2, 2), 2, (2, 2, 2), 8),   # 3-D grid: 8-shard corner dof
+        ((5, 3, 2), 1, (2, 3, 1), 4),   # non-divisible extents (5/2, 3/3)
+        ((3, 4, 2), 2, (3, 2), 4),      # 2-axis spec, padded with 1
+    ]
+    for shape, order, grid, want_sharers in configs:
+        mesh = _random_mesh(rng, *shape, order)
+        n_shards = int(np.prod(grid))
+        part = mesh_gen.partition_elements(mesh, n_shards, grid=grid)
+        assert part.grid == tuple(grid) + (1,) * (3 - len(grid))
+        # the advertised worst-case sharing multiplicity really occurs
+        sharers = part.shared_present.sum(axis=0).max()
+        assert sharers == want_sharers, (shape, grid, sharers)
+        _check_pair_tables(mesh, part)
+        _check_exchange_matches(mesh, part, rng, nrhs=2)
+        _check_dssum_adjoint(mesh, part, rng)
 
 
 # ----------------------------------------------------- collective layer ----

@@ -173,9 +173,12 @@ def test_partition_rejects_more_shards_than_elements():
         mesh_gen.partition_elements(mesh, 3)
 
 
-def test_sharded_setup_rejects_field_lambdas():
-    """Per-element lambda fields are single-device only for now: the sharded
-    setup must fail up front, not deep inside shard_map tracing."""
+def test_sharded_setup_accepts_field_lambdas_validates_shape():
+    """Per-element lambda FIELDS are supported under shard_ctx (partition +
+    pad into elem_ops); a correctly-shaped field now reaches the fake
+    device mesh like scalars do, while a mis-shaped one still fails up
+    front with the mesh-layout message, not deep inside shard_map
+    tracing.  (End-to-end field parity: tests/test_nekbone_box.py.)"""
     import numpy as np
 
     from repro.core import mesh_gen, nekbone
@@ -186,11 +189,15 @@ def test_sharded_setup_rejects_field_lambdas():
 
     mesh = mesh_gen.box_mesh(2, 1, 1, 2)
     lam_field = np.ones((2, 3, 3, 3), np.float32)
-    with pytest.raises(NotImplementedError, match="lam0"):
+    # a well-shaped field passes lambda partitioning and fails only on the
+    # fake device mesh — exactly where the scalar setup fails
+    with pytest.raises(Exception, match="(?i)mesh|axis|device"):
         nekbone.setup_problem(mesh, variant="trilinear", helmholtz=True,
                               lam0=lam_field, shard_ctx=_StubCtx())
-    # scalar lambdas (incl. the helmholtz defaults) must still pass: this
-    # reaches partition_elements and fails only on the fake device mesh
+    with pytest.raises(ValueError, match="unpartitioned mesh layout"):
+        nekbone.setup_problem(mesh, variant="trilinear", helmholtz=True,
+                              lam0=np.ones((2, 2, 2, 2), np.float32),
+                              shard_ctx=_StubCtx())
     with pytest.raises(Exception, match="(?i)mesh|axis|device"):
         nekbone.setup_problem(mesh, variant="trilinear", helmholtz=True,
                               shard_ctx=_StubCtx())

@@ -1,5 +1,7 @@
 """PCG + Nekbone problem: manufactured solutions, the paper's Table 6
-iteration-invariance claim, preconditioner effect, dense-assembly oracle."""
+iteration-invariance claim, preconditioner effect, dense-assembly oracle,
+and the Lanczos breakdown guard (rank-deficient directions freeze + flag
+instead of silently dividing by a substituted denominator)."""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +10,7 @@ import pytest
 
 from repro.core import mesh_gen, nekbone
 from repro.core.nekbone import rhs_from_solution, setup_problem, solve
-from repro.core.pcg import pcg
+from repro.core.pcg import pcg, pcg_block
 
 
 @pytest.fixture(scope="module", autouse=True)
@@ -99,6 +101,100 @@ def test_global_operator_matches_dense_assembly(rng):
     res = solve(prob, jnp.asarray(b), precond="jacobi", tol=1e-12,
                 max_iter=2000)
     np.testing.assert_allclose(res.x, x_true, rtol=1e-7, atol=1e-9)
+
+
+def _semidefinite_op(diag):
+    """A = diag(diag) — positive SEMI-definite when diag has zeros, so a
+    RHS with mass on a null direction drives p.Ap to exactly 0."""
+    d = jnp.asarray(diag)
+
+    def a_op(x):
+        return d.reshape(d.shape + (1,) * (x.ndim - 1)) * x
+
+    return a_op
+
+
+def test_pcg_breakdown_flags_and_freezes():
+    """A rank-deficient direction must FLAG breakdown and freeze the
+    iterate — the result carries no NaN/inf and reports the stall."""
+    a_op = _semidefinite_op([1.0, 2.0, 0.0])
+    b = jnp.array([0.0, 0.0, 1.0])            # pure null-space RHS
+    res = pcg(a_op, b, tol=1e-12, max_iter=50)
+    assert bool(res.breakdown)
+    assert int(res.iterations) == 0           # never advanced
+    assert np.isfinite(np.asarray(res.x)).all()
+    np.testing.assert_array_equal(np.asarray(res.x), 0.0)
+    assert float(res.residual) > 0            # honest: it did NOT converge
+
+
+def test_pcg_no_breakdown_on_spd(rng):
+    """Healthy SPD solves must report breakdown=False and identical results
+    to before the guard existed."""
+    n = 30
+    a = rng.standard_normal((n, n))
+    a = a @ a.T + n * np.eye(n)
+    b = jnp.asarray(a @ rng.standard_normal(n))
+    res = pcg(lambda v: jnp.asarray(a) @ v, b, tol=1e-12, max_iter=200)
+    assert not bool(res.breakdown)
+    assert float(res.residual) <= 1e-12 * float(res.initial_residual) * 10
+
+
+def test_pcg_block_breakdown_isolates_column(rng):
+    """Regression for the silent `alpha = rz/1.0` guard: a breakdown column
+    must freeze and flag WITHOUT perturbing the healthy columns, which keep
+    iterating to convergence."""
+    diag = [1.0, 3.0, 0.0, 2.0]
+    a_op = _semidefinite_op(diag)
+    # column 0: solvable; column 1: rank-deficient direction; column 2:
+    # solvable with a different spectrum slice
+    b = jnp.asarray(np.array([[1.0, 0.0, 2.0],
+                              [3.0, 0.0, 0.0],
+                              [0.0, 1.0, 0.0],
+                              [2.0, 0.0, 4.0]]))
+    res = pcg_block(a_op, b, tol=1e-12, max_iter=50)
+    brk = np.asarray(res.breakdown)
+    np.testing.assert_array_equal(brk, [False, True, False])
+    x = np.asarray(res.x)
+    assert np.isfinite(x).all()
+    # healthy columns solved exactly (diagonal system)
+    np.testing.assert_allclose(x[:, 0], [1.0, 1.0, 0.0, 1.0], atol=1e-8)
+    np.testing.assert_allclose(x[:, 2], [2.0, 0.0, 0.0, 2.0], atol=1e-8)
+    # broken column frozen at its initial iterate, counted 0 iterations
+    np.testing.assert_array_equal(x[:, 1], 0.0)
+    assert int(np.asarray(res.iterations)[1]) == 0
+    assert float(np.asarray(res.residual)[1]) > 0
+
+
+def test_pcg_block_breakdown_negative_curvature(rng):
+    """The guard also catches p.Ap < 0 (an INDEFINITE operator — the old
+    `pap != 0` guard happily took a negative step): the column flags and
+    freezes while its sibling converges."""
+    a_op = _semidefinite_op([1.0, 2.0, -1.0])
+    b = jnp.asarray(np.array([[1.0, 0.0],
+                              [2.0, 0.0],
+                              [0.0, 1.0]]))   # col 1 rides the -1 direction
+    res = pcg_block(a_op, b, tol=1e-12, max_iter=50)
+    brk = np.asarray(res.breakdown)
+    assert not bool(brk[0]) and bool(brk[1]), brk
+    x = np.asarray(res.x)
+    assert np.isfinite(x).all()
+    np.testing.assert_allclose(x[:, 0], [1.0, 1.0, 0.0], atol=1e-8)
+    np.testing.assert_array_equal(x[:, 1], 0.0)
+
+
+def test_solve_surfaces_breakdown_flag(rng):
+    """The nekbone solve path carries PCGResult.breakdown (False on the
+    healthy problems, shaped per column when batched)."""
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 1, 3), seed=3)
+    prob = setup_problem(mesh, variant="trilinear", dtype=jnp.float64)
+    x_true = jnp.asarray(rng.standard_normal((mesh.n_global, 3)))
+    b = rhs_from_solution(prob, x_true)
+    res = solve(prob, b, tol=1e-10, max_iter=400)
+    assert res.breakdown.shape == (3,)
+    assert not np.asarray(res.breakdown).any()
+    res1 = solve(prob, b[:, 0], tol=1e-10, max_iter=400)
+    assert res1.breakdown.shape == ()
+    assert not bool(res1.breakdown)
 
 
 def test_flop_count_accounting():
