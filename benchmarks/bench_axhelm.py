@@ -23,13 +23,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+import benchio
 
 from repro.core import axhelm as ax, mesh_gen
 from repro.core.paper_roofline import PLATFORMS, axhelm_cost, roofline
@@ -156,6 +157,11 @@ def main():
             f"{row[c]:.3f}" if isinstance(row[c], float) else str(row[c])
             for c in COLUMNS))
 
+    # stamp each row with the problem size it was measured at, so a
+    # --quick smoke run merges in BESIDE the full-size rows instead of
+    # replacing them (benchio merges by the full configuration key)
+    for row in r:
+        row.update({"n": info["n"], "e": info["e"], "d": info["d"]})
     payload = {
         "bench": "axhelm",
         "jax_backend": jax.default_backend(),
@@ -164,8 +170,8 @@ def main():
         "rows": r,
     }
     out = os.path.abspath(args.out)
-    with open(out, "w") as f:
-        json.dump(payload, f, indent=1)
+    benchio.merge_payload(out, payload, row_keys={
+        "rows": ("equation", "variant", "backend", "nrhs", "n", "e", "d")})
     print(f"# wrote {out}")
 
 

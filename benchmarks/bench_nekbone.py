@@ -41,9 +41,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import benchio
 from repro.core import mesh_gen, nekbone
 
 OUT_JSON = "BENCH_nekbone.json"
+
+# merge-don't-clobber keys: a subset run (--smoke, --no-*) re-measures only
+# its own configurations; rows of other configurations (including other
+# mesh sizes — elements/dofs are part of the identity) must survive
+ROW_KEYS = {
+    "table6": ("equation", "variant"),
+    "scaling": ("mode", "devices", "variant", "exchange", "grid_spec",
+                "elements", "dofs"),
+    "surface": ("grid_spec", "exchange", "devices", "variant", "order"),
+    "multirhs": ("nrhs", "variant", "equation"),
+}
 
 
 def _timed_solve(prob, b, tol, max_iter=400):
@@ -431,8 +443,7 @@ def main():
         if not args.no_surface:
             payload["surface"] = _surface()
             _check_surface(payload["surface"])
-        with open(OUT_JSON, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
+        benchio.merge_payload(OUT_JSON, payload, row_keys=ROW_KEYS)
         print(f"# smoke: wrote {OUT_JSON} ({len(sc)} scaling rows, "
               f"exchanges: {sorted({r['exchange'] for r in sc})}, "
               f"grids: {sorted({r['grid_spec'] for r in sc})})")
@@ -489,8 +500,7 @@ def main():
             assert max(its) - min(its) <= 1, (j, its)
         print("# multi-RHS bytes/RHS decreasing + per-column iteration "
               "parity: OK")
-    with open(OUT_JSON, "w") as f:
-        json.dump(payload, f, indent=1, sort_keys=True)
+    benchio.merge_payload(OUT_JSON, payload, row_keys=ROW_KEYS)
     print(f"# wrote {OUT_JSON}")
 
 

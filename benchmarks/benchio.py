@@ -1,0 +1,84 @@
+"""Atomic, merge-don't-clobber persistence for BENCH_*.json results.
+
+Two failure modes this module exists to close:
+
+- **Torn writes**: a benchmark killed mid-`json.dump` used to leave a
+  truncated file that crashed the NEXT run's reader.  `write_atomic`
+  publishes via a pid-unique sibling tmp + `os.replace`, so readers see
+  the old payload or the new one, never a half-write; `load` treats a
+  corrupt file as empty (with a warning) instead of raising.
+- **Subset clobbering**: a `--smoke`/`--quick` run measures a few
+  configurations but used to rewrite the whole file, silently dropping
+  every full-run row.  `merge_payload` folds the new sections into the
+  stored ones: row-list sections merge by a per-section key tuple (a
+  re-measured configuration replaces its old row, everything else
+  survives), scalar sections are replaced.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import warnings
+
+__all__ = ["load", "write_atomic", "merge_payload"]
+
+
+def load(path: str) -> dict:
+    """Stored results, or {} for a missing/corrupt/non-dict file."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError) as e:
+        warnings.warn(
+            f"bench results {path} are unreadable or corrupt ({e}); "
+            f"starting fresh — the next write replaces them atomically",
+            RuntimeWarning, stacklevel=2)
+        return {}
+    if not isinstance(data, dict):
+        warnings.warn(
+            f"bench results {path} hold {type(data).__name__}, not a "
+            f"section mapping; starting fresh", RuntimeWarning,
+            stacklevel=2)
+        return {}
+    return data
+
+
+def write_atomic(path: str, payload: dict) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def merge_payload(path: str, payload: dict, row_keys=None) -> dict:
+    """Merge `payload` into the results at `path`; returns what was written.
+
+    `row_keys` maps a section name to the tuple of row fields identifying
+    a configuration (e.g. ``{"scaling": ("mode", "devices", "exchange")}``).
+    For those sections old and new row lists are merged by key — a new row
+    REPLACES the old row of the same configuration, old rows of untouched
+    configurations are kept (insertion order: old first).  Sections not
+    named in `row_keys`, and anything that isn't a list-of-dicts on both
+    sides, are replaced wholesale (metadata like "config" describes the
+    LAST run by design).
+    """
+    base = load(path)
+    out = dict(base)
+    for section, new in payload.items():
+        keys = (row_keys or {}).get(section)
+        old = base.get(section)
+        if keys and isinstance(old, list) and isinstance(new, list) \
+                and all(isinstance(r, dict) for r in old + new):
+            def kf(row):
+                return tuple(json.dumps(row.get(k), sort_keys=True,
+                                        default=str) for k in keys)
+            merged = {kf(r): r for r in old}
+            merged.update((kf(r), r) for r in new)
+            out[section] = list(merged.values())
+        else:
+            out[section] = new
+    write_atomic(path, out)
+    return out

@@ -8,6 +8,7 @@ Run:  PYTHONPATH=src python examples/nekbone_solve.py \
           [--equation poisson] [--d 1] [--precision float32] \
           [--backend auto] [--block-elems N|auto] [--devices N] [--nrhs R] \
           [--exchange psum|neighbour] [--grid slab|auto|PXxPYxPZ]
+          [--stagnation-window W] [--inject MODE@ITER] [--resilient]
 
 --backend auto drives the Pallas axhelm kernel inside the PCG while_loop
 (interpret mode off-TPU) for fp32/bf16 and the jnp reference for fp64;
@@ -72,6 +73,21 @@ def _parse_args():
                          "(1 = the exact single-RHS path)")
     ap.add_argument("--tol", type=float, default=1e-8)
     ap.add_argument("--max-iter", type=int, default=400)
+    ap.add_argument("--stagnation-window", type=int, default=0,
+                    help="flag the solve STAGNATED when the residual makes "
+                         "no new minimum for this many iterations (0 = "
+                         "off)")
+    ap.add_argument("--resilient", action="store_true",
+                    help="run through resilience.retry.solve_resilient: "
+                         "true-residual verification plus the restart -> "
+                         "backend -> precision escalation ladder; prints "
+                         "the per-attempt audit trail")
+    ap.add_argument("--inject", default=None, metavar="MODE@ITER",
+                    help="fault-injection demo: corrupt one operator "
+                         "application, e.g. 'nan@3', 'bitflip@2', "
+                         "'drop_exchange@5' (sharded only).  Watch the "
+                         "status turn non-CONVERGED — and recovery happen "
+                         "with --resilient")
     return ap.parse_args()
 
 
@@ -99,6 +115,13 @@ def main():
 
     from repro.core import mesh_gen, nekbone
     from repro.distributed.context import make_solver_ctx, parse_grid_arg
+    from repro.resilience import SolveStatus
+    from repro.resilience.inject import FaultSpec
+
+    fault = None
+    if args.inject is not None:
+        mode, _, it = args.inject.partition("@")
+        fault = FaultSpec(mode=mode, iteration=int(it) if it else 3)
 
     nx, ny, nz = args.elements
     mesh = mesh_gen.box_mesh(nx, ny, nz, args.order)
@@ -140,14 +163,35 @@ def main():
     x_true = jnp.asarray(rng.standard_normal(shape), dtype)
     b = nekbone.rhs_from_solution(prob, x_true)
 
-    solve = jax.jit(lambda bb: nekbone.solve(prob, bb, tol=args.tol,
-                                             max_iter=args.max_iter))
-    res = solve(b)
-    jax.block_until_ready(res.x)
-    t0 = time.perf_counter()
-    res = solve(b)
-    jax.block_until_ready(res.x)
-    dt = time.perf_counter() - t0
+    if args.resilient:
+        from repro.resilience.retry import RetryPolicy, solve_resilient
+
+        policy = RetryPolicy(stagnation_window=args.stagnation_window)
+        t0 = time.perf_counter()
+        report = solve_resilient(prob, b, policy, tol=args.tol,
+                                 max_iter=args.max_iter, fault=fault)
+        jax.block_until_ready(report.x)
+        dt = time.perf_counter() - t0
+        for a in report.attempts:
+            sts = [SolveStatus(int(s)).name
+                   for s in np.atleast_1d(np.asarray(a.status))]
+            print(f"attempt rung={a.rung} "
+                  f"columns={[int(c) for c in a.columns]} "
+                  f"status={sts} true_residual="
+                  f"{np.array2string(np.atleast_1d(a.true_residual), precision=2)}")
+        print(f"resilient: converged={report.converged} "
+              f"rung={list(report.rung)}")
+        res = report
+    else:
+        solve = jax.jit(lambda bb: nekbone.solve(
+            prob, bb, tol=args.tol, max_iter=args.max_iter,
+            stagnation_window=args.stagnation_window, fault=fault))
+        res = solve(b)
+        jax.block_until_ready(res.x)
+        t0 = time.perf_counter()
+        res = solve(b)
+        jax.block_until_ready(res.x)
+        dt = time.perf_counter() - t0
 
     iters_all = [int(i) for i in np.atleast_1d(np.asarray(res.iterations))]
     iters = max(iters_all)
@@ -158,7 +202,10 @@ def main():
     # useful FLOPs: each column pays for the iterations it actually ran
     flops = sum(nekbone.flop_count(mesh, args.d, helm, it)
                 for it in iters_all)
-    msg = (f"iters={iters} error={err:.2e} wall={dt:.3f}s "
+    status = [SolveStatus(int(s)).name
+              for s in np.atleast_1d(np.asarray(res.status))]
+    msg = (f"status={status if len(status) > 1 else status[0]} "
+           f"iters={iters} error={err:.2e} wall={dt:.3f}s "
            f"GFLOPS={flops / dt / 1e9:.2f} "
            f"GDOFS={mesh.n_global * args.d * sum(iters_all) / dt / 1e9:.4f}")
     if args.nrhs > 1:

@@ -33,6 +33,7 @@ from repro.distributed.context import shard_map_compat
 from repro.core.mesh_gen import BoxMesh, MeshPartition, partition_elements
 from repro.core.pcg import PCGResult, owned_dot, pcg, pcg_block
 from repro.core.spectral import SpectralBasis, basis as make_basis
+from repro.resilience import inject as fault_inject
 
 __all__ = ["NekboneProblem", "ShardedNekboneProblem", "setup_problem",
            "solve", "flop_count"]
@@ -396,7 +397,8 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
             yb = jnp.moveaxis(yb, 1, -1)
         return gs.gather(yb, lid[lo:hi], nl)
 
-    def a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr):
+    def a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr,
+                   it=None, fault=None, fdof=None):
         """Per-shard A(x): scatter -> axhelm -> sharded gather (+ mask).
 
         Shape-polymorphic like `_global_op`: trailing batch axes (d, nrhs,
@@ -408,6 +410,16 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         gather completes every shared-dof partial, the ppermute rounds
         launch, and the interior elements (which by construction touch no
         shared dof) compute while the permutes are in flight.
+
+        `fault` (a static `resilience.inject.FaultSpec`, threaded from
+        `run_pcg`) corrupts THIS shard pipeline when the traced iteration
+        counter `it` hits its key: point faults (nan/bitflip) poison the
+        precomputed local dof `fdof` after all masking, a drop_exchange
+        fault makes the flagged shard keep its pre-exchange local partials
+        (shared dofs lose every remote contribution for that application,
+        exactly a lost neighbour message).  `fault=None` — the default and
+        the `apply_global` path — traces the identical computation as
+        before.
         """
         x_in = x
         bshape = x.shape[1:]
@@ -417,23 +429,34 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         xl = xf[lid]                                  # (EP, N1,N1,N1[, c])
         if bshape:
             xl = jnp.moveaxis(xl, -1, 1)
+        fire = None
+        if fault is not None:
+            fire = jnp.logical_and(
+                jnp.asarray(it, jnp.int32) == fault.iteration,
+                jax.lax.axis_index(axis) == fault.shard)
         if neighbour:
             rounds = gs.neighbour_rounds(part.nbr_offsets, s, nbr)
             y = _elem_batch(xl, eo, lid, 0, cut, bshape)
             recvs = gs.neighbour_start(y, rounds, axis)  # permutes in flight
             if split:
                 y = y + _elem_batch(xl, eo, lid, cut, ep, bshape)
+            y_pre = y
             y = gs.neighbour_finish(y, rounds, recvs)
         else:
-            y = gs.exchange_shared(_elem_batch(xl, eo, lid, 0, ep, bshape),
-                                   sidx, spres, axis)
+            y_pre = _elem_batch(xl, eo, lid, 0, ep, bshape)
+            y = gs.exchange_shared(y_pre, sidx, spres, axis)
+        if fault is not None and fault.mode == "drop_exchange":
+            y = jnp.where(fire, y_pre, y)
         if bshape:
             y = y.reshape((nl,) + bshape)
         if has_mask:
             y = jnp.where(expand(m, y), x_in, y)
         # dead-element and padding slots must stay exactly zero: anything
         # accumulating there would feed inf/nan into later iterations
-        return jnp.where(expand(val, y), y, 0)
+        y = jnp.where(expand(val, y), y, 0)
+        if fault is not None and fault.mode != "drop_exchange":
+            y = fault_inject.poison(y, fdof, fire, fault)
+        return y
 
     smap = functools.partial(shard_map_compat, mesh=ctx.mesh)
 
@@ -443,10 +466,20 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
                     out_specs=pe)
         return globalize(body(localize(xg), elem_ops, *idx_args))
 
-    def pcg_body(b_loc, dg, tol, max_iter, eo, lid, sidx, spres, own, val,
-                 m, *nbr, use_jacobi, batched):
-        def a_op(x):
-            return a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr)
+    def pcg_body(b_loc, dg, tol, max_iter, x0_loc, eo, lid, sidx, spres, own,
+                 val, m, *nbr, use_jacobi, batched, window, fault, fdof):
+        if fault is None:
+            def a_op(x):
+                return a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr)
+        else:
+            # iteration-aware operator: pcg threads its loop counter so the
+            # fault fires on exactly one application (it == -1 on the
+            # initial residual, which is never corrupted)
+            def a_op(x, it):
+                return a_op_local(x, eo, lid, sidx, spres, own, val, m,
+                                  *nbr, it=it, fault=fault, fdof=fdof)
+
+            a_op.takes_iteration = True
 
         pre = None
         if use_jacobi:
@@ -456,31 +489,56 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
                 # the diagonal has no RHS axis; broadcast it over the batch
                 return (inv_diag[..., None] if batched else inv_diag) * r
         if batched:
-            res = pcg_block(a_op, b_loc, precond=pre, tol=tol,
+            res = pcg_block(a_op, b_loc, x0=x0_loc, precond=pre, tol=tol,
                             max_iter=max_iter,
-                            dot=owned_dot(own, axis, batched=True))
+                            dot=owned_dot(own, axis, batched=True),
+                            stagnation_window=window)
         else:
-            res = pcg(a_op, b_loc, precond=pre, tol=tol, max_iter=max_iter,
-                      dot=owned_dot(own, axis))
+            res = pcg(a_op, b_loc, x0=x0_loc, precond=pre, tol=tol,
+                      max_iter=max_iter, dot=owned_dot(own, axis),
+                      stagnation_window=window)
         # scalars (per-column vectors in the batched case) are replicated
         # across shards; emit one leading slot per shard so out_specs=
         # P(axis) reassembles them into an (S,)/(S, nrhs) array
         return (res.x, res.iterations[None], res.residual[None],
-                res.initial_residual[None], res.breakdown[None])
+                res.initial_residual[None], res.breakdown[None],
+                res.status[None])
 
-    @functools.partial(jax.jit, static_argnames=("precond",))
-    def run_pcg(b_global, tol, max_iter, precond="jacobi"):
+    @functools.partial(jax.jit, static_argnames=("precond",
+                                                 "stagnation_window",
+                                                 "fault"))
+    def run_pcg(b_global, tol, max_iter, precond="jacobi", x0=None,
+                stagnation_window=0, fault=None):
         # trailing axes beyond the (Ng[, d]) base layout are the RHS batch
         batched = b_global.ndim > (2 if d > 1 else 1)
+        fdof = None
+        if fault is not None:
+            if not 0 <= fault.shard < s:
+                raise ValueError(
+                    f"fault.shard {fault.shard} out of range for {s} shards")
+            if fault.mode != "drop_exchange":
+                if part.elem_perm[fault.shard, fault.element] < 0:
+                    raise ValueError(
+                        f"fault.element {fault.element} is a dead padding "
+                        f"slot on shard {fault.shard}: pick a live element")
+                fdof = fault_inject.fault_dof(part.local_ids[fault.shard],
+                                             fault)
+        b_loc = localize(b_global)
+        # pcg treats a zero x0 identically to x0=None (the initial
+        # residual applies A either way), so the restart path can always
+        # thread an explicit iterate without a second trace shape
+        x0_loc = localize(x0) if x0 is not None else jnp.zeros_like(b_loc)
         body = smap(
             functools.partial(pcg_body, use_jacobi=precond == "jacobi",
-                              batched=batched),
-            in_specs=(pe, pe, P(), P(), ops_specs) + idx_specs,
-            out_specs=(pe, pe, pe, pe, pe))
-        x_loc, it, rr, r0, brk = body(
-            localize(b_global), diag_loc, jnp.asarray(tol),
-            jnp.asarray(max_iter, jnp.int32), elem_ops, *idx_args)
-        return PCGResult(globalize(x_loc), it[0], rr[0], r0[0], brk[0])
+                              batched=batched, window=stagnation_window,
+                              fault=fault, fdof=fdof),
+            in_specs=(pe, pe, P(), P(), pe, ops_specs) + idx_specs,
+            out_specs=(pe, pe, pe, pe, pe, pe))
+        x_loc, it, rr, r0, brk, st = body(
+            b_loc, diag_loc, jnp.asarray(tol),
+            jnp.asarray(max_iter, jnp.int32), x0_loc, elem_ops, *idx_args)
+        return PCGResult(globalize(x_loc), it[0], rr[0], r0[0], brk[0],
+                         st[0])
 
     return apply_global, run_pcg
 
@@ -498,7 +556,9 @@ def rhs_from_solution(problem: NekboneProblem, x_true: jnp.ndarray) -> jnp.ndarr
 
 
 def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
-          tol: float = 1e-8, max_iter: int = 200) -> PCGResult:
+          tol: float = 1e-8, max_iter: int = 200,
+          x0: Optional[jnp.ndarray] = None, stagnation_window: int = 0,
+          fault=None) -> PCGResult:
     """Solve A x = b (PCG).
 
     `b_rhs` is (Ng,) for d=1 or (Ng, d) for vector problems; ONE extra
@@ -510,6 +570,15 @@ def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
     the same trailing axis.  A trailing axis of size 1 dispatches to the
     single-RHS path, so the degenerate batch is bit-identical to the
     unbatched solve.
+
+    The result's ``status`` reports WHY each solve/column stopped (a
+    `resilience.status.SolveStatus` code; detection runs inside the loop —
+    see `core.pcg`).  `x0` warm-starts the iteration (the restart rung of
+    `resilience.retry.solve_resilient` passes the frozen last-finite
+    iterate); `stagnation_window` > 0 enables the stall detector.  `fault`
+    (a `resilience.inject.FaultSpec`, static) deterministically corrupts
+    one operator application — the fault-injection harness used by the
+    resilience tests; leave None in production.
     """
     if precond not in ("jacobi", "copy"):
         raise ValueError(f"unknown preconditioner {precond!r}")
@@ -523,12 +592,20 @@ def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
     if batched and b_rhs.shape[-1] == 1:
         # nrhs=1 degenerates to the exact single-RHS code path
         res = solve(problem, b_rhs[..., 0], precond=precond, tol=tol,
-                    max_iter=max_iter)
+                    max_iter=max_iter,
+                    x0=None if x0 is None else x0[..., 0],
+                    stagnation_window=stagnation_window, fault=fault)
         return PCGResult(res.x[..., None], res.iterations[None],
                          res.residual[None], res.initial_residual[None],
-                         res.breakdown[None])
+                         res.breakdown[None], res.status[None])
     if isinstance(problem, ShardedNekboneProblem):
-        return problem.run_pcg(b_rhs, tol, max_iter, precond=precond)
+        return problem.run_pcg(b_rhs, tol, max_iter, precond=precond, x0=x0,
+                               stagnation_window=stagnation_window,
+                               fault=fault)
+    a_op = problem.op
+    if fault is not None:
+        a_op = fault_inject.wrap_operator(a_op, fault,
+                                          problem.mesh.global_ids)
     pre = None
     if precond == "jacobi":
         inv_diag = 1.0 / problem.diag
@@ -536,7 +613,8 @@ def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
         def pre(r):
             return (inv_diag[..., None] if batched else inv_diag) * r
     runner = pcg_block if batched else pcg
-    return runner(problem.op, b_rhs, precond=pre, tol=tol, max_iter=max_iter)
+    return runner(a_op, b_rhs, x0=x0, precond=pre, tol=tol,
+                  max_iter=max_iter, stagnation_window=stagnation_window)
 
 
 def flop_count(mesh: BoxMesh, d: int, helmholtz: bool, iterations: int) -> float:

@@ -10,6 +10,16 @@ through one batched iteration with per-column alpha/beta (each column runs
 its own mathematically independent CG — the operator is RHS-independent, so
 batching changes reduction order only) and a converged-column mask that
 freezes finished columns while the rest keep iterating.
+
+Health monitoring lives INSIDE the loop: every iteration checks the carried
+``rr`` for NaN/Inf (a poisoned operator/field stops a column within one
+iteration instead of spinning to ``max_iter``), an optional stagnation
+window (no new residual minimum for N counted iterations), and the Lanczos
+breakdown guard.  All three piggyback on the ``rr``/``p.Ap`` scalars the
+iteration already reduces, so on the sharded solve they add ZERO extra
+collectives (HLO-gated in tests/test_resilience_sharded.py).  The outcome
+is reported as a `resilience.status.SolveStatus` code in
+``PCGResult.status``.
 """
 
 from __future__ import annotations
@@ -18,6 +28,9 @@ from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.resilience.status import SolveStatus, classify
 
 __all__ = ["PCGResult", "pcg", "pcg_block", "owned_dot"]
 
@@ -55,19 +68,60 @@ def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None,
 
 
 class PCGResult(NamedTuple):
-    """`breakdown` flags a Lanczos breakdown: the iteration hit
-    ``p.Ap <= 0`` while the (column's) residual was still above tolerance —
-    the operator is not SPD on the Krylov space (rank-deficient direction),
-    so CG cannot advance.  The affected solve/column is FROZEN at its last
-    iterate (scalar bool for :func:`pcg`, per-column (nrhs,) bools for
-    :func:`pcg_block`); its `residual` then reports where it stalled, not
-    convergence."""
+    """Outcome of a PCG solve.
+
+    ``status`` is a `resilience.status.SolveStatus` code (int32 scalar for
+    :func:`pcg`, per-column (nrhs,) for :func:`pcg_block`) saying WHY the
+    solve stopped; ``breakdown`` is kept as the boolean view of the
+    BREAKDOWN case for existing callers.
+
+    `breakdown` flags a Lanczos breakdown: the iteration hit ``p.Ap <= 0``
+    while the (column's) residual was still above tolerance — the operator
+    is not SPD on the Krylov space (rank-deficient direction), so CG cannot
+    advance.  A column whose carried ``rr`` turns NaN/Inf is DIVERGED, and
+    one that makes no new residual minimum for ``stagnation_window``
+    counted iterations is STAGNATED.  In every non-CONVERGED case the
+    affected solve/column is FROZEN at its last *finite* iterate — a
+    diverged step is rolled back before the poison reaches ``x`` — so
+    `x` is always a valid restart point and ``residual`` reports where it
+    stalled, not convergence.
+
+    Both flag fields are ALWAYS boolean/int arrays (never Python None):
+    `pcg`/`pcg_block`/the sharded runner all populate them, and the
+    defaults below are concrete zero-dim numpy scalars so even a manually
+    constructed result has a uniform field presence between the
+    single-device and sharded paths.
+    """
 
     x: jnp.ndarray
     iterations: jnp.ndarray
-    residual: jnp.ndarray          # final sqrt(r.r)
+    residual: jnp.ndarray          # final sqrt(r.r) (last finite iterate)
     initial_residual: jnp.ndarray
-    breakdown: jnp.ndarray = None  # bool / (nrhs,) bool; see class docstring
+    breakdown: jnp.ndarray = np.bool_(False)   # bool / (nrhs,) bool
+    status: jnp.ndarray = np.int32(SolveStatus.MAXITER)  # SolveStatus codes
+
+
+def _iter_op(a_op):
+    """Adapt `a_op` to the (x, iteration) calling convention.
+
+    The fault-injection harness (`resilience.inject`) needs to know WHICH
+    operator application it is corrupting, so operators built with a
+    `FaultSpec` advertise ``takes_iteration = True`` and receive the
+    carried iteration counter (-1 for the initial-residual application).
+    Plain operators are wrapped to ignore it — the counter is already in
+    the loop state, so threading it is free.
+    """
+    if getattr(a_op, "takes_iteration", False):
+        return a_op
+
+    def wrapped(x, it):
+        del it
+        return a_op(x)
+
+    return wrapped
+
+
+_INIT_ITER = -1  # iteration index of the initial-residual application
 
 
 def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
@@ -77,11 +131,19 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         tol: float = 1e-8,
         max_iter: int = 200,
         dot: Optional[Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]] = None,
+        stagnation_window: int = 0,
         ) -> PCGResult:
     """Solve A x = b with (preconditioned) CG.
 
     `dot` may be overridden (e.g. with a mesh-weighted/psum'd inner product on
     a sharded solve); defaults to the plain full contraction.
+
+    `stagnation_window` > 0 additionally stops the solve with
+    ``SolveStatus.STAGNATED`` when ``rr`` makes no new minimum for that many
+    counted iterations (0 — the default — disables the check, keeping the
+    iteration trace bit-identical to the unmonitored loop; the NaN/Inf and
+    breakdown checks are always on and only fire on already-poisoned
+    solves).
     """
     if dot is None:
         def dot(u, v):
@@ -89,28 +151,34 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     if precond is None:
         def precond(r):
             return r
+    a2 = _iter_op(a_op)
 
     x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - a_op(x)
+    r = b - a2(x, jnp.asarray(_INIT_ITER, jnp.int32))
     z = precond(r)
     p = z
     rz = dot(r, z)
     rr = dot(r, r)
     r0 = jnp.sqrt(rr)
     tol2 = (tol * tol)
+    window = jnp.asarray(stagnation_window, jnp.int32)
+    win_on = window > 0
 
     # rr = dot(r, r) is carried in the state: the reduction happens in the
     # body where r is produced, and cond reads the carried scalar — cond is
     # free of cross-element communication (and the trailing evaluation at
     # loop exit costs nothing), instead of re-reducing r on every check.
+    # The health flags (div/stag) read the same carried scalar, so the
+    # checks add no reductions at all.
     def cond(state):
-        _, _, _, _, _, rr, it, brk = state
+        _, _, _, _, _, rr, it, brk, div, stag, _, _ = state
+        healthy = ~brk & ~div & ~stag
         return jnp.logical_and(it < max_iter,
-                               jnp.logical_and(rr > tol2, ~brk))
+                               jnp.logical_and(rr > tol2, healthy))
 
     def body(state):
-        x, r, z, p, rz, rr, it, _ = state
-        ap = a_op(p)
+        x, r, z, p, rz, rr, it, brk, div, stag, stall, best = state
+        ap = a2(p, it)
         pap = dot(p, ap)
         # Lanczos breakdown guard: p.Ap <= 0 with the residual still above
         # tolerance means A is not SPD along p (rank-deficient direction) —
@@ -119,21 +187,43 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         # denominator would keep "converging" to a wrong answer.
         bad = pap <= 0.0
         alpha = jnp.where(bad, 0.0, rz / jnp.where(bad, 1.0, pap))
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = precond(r)
-        rz_new = dot(r, z)
-        rr_new = dot(r, r)
-        beta = jnp.where(bad, 0.0, rz_new / jnp.where(rz != 0, rz, 1.0))
-        p = jnp.where(bad, p, z + beta * p)
-        # a frozen iteration did not advance the solve: don't count it
-        return (x, r, z, p, rz_new, rr_new,
-                it + jnp.where(bad, 0, 1).astype(jnp.int32), bad)
+        x_new = x + alpha * p
+        r_new = r - alpha * ap
+        z_new = precond(r_new)
+        rz_new = dot(r_new, z_new)
+        rr_new = dot(r_new, r_new)
+        # divergence: the carried rr went non-finite THIS iteration (a NaN
+        # anywhere in A(p) reaches rr through the dots) — roll the whole
+        # step back so x stays the last finite iterate, flag, and exit.
+        hurt = ~jnp.isfinite(rr_new)
+        div = div | hurt
+        x = jnp.where(hurt, x, x_new)
+        r = jnp.where(hurt, r, r_new)
+        z = jnp.where(hurt, z, z_new)
+        rz2 = jnp.where(hurt, rz, rz_new)
+        rr2 = jnp.where(hurt, rr, rr_new)
+        beta = jnp.where(bad | hurt, 0.0,
+                         rz_new / jnp.where(rz != 0, rz, 1.0))
+        p = jnp.where(bad | hurt, p, z + beta * p)
+        advanced = ~bad & ~hurt
+        # stagnation: count iterations since the last new rr minimum
+        improved = rr2 < best
+        stall = jnp.where(improved, 0,
+                          stall + jnp.where(advanced, 1, 0).astype(jnp.int32))
+        best = jnp.minimum(best, rr2)
+        stag = stag | (win_on & advanced & (stall >= window) & (rr2 > tol2))
+        # a frozen/rolled-back iteration did not advance: don't count it
+        return (x, r, z, p, rz2, rr2,
+                it + jnp.where(advanced, 1, 0).astype(jnp.int32), bad, div,
+                stag, stall, best)
 
     state = (x, r, z, p, rz, rr, jnp.array(0, dtype=jnp.int32),
-             jnp.array(False))
-    x, r, _, _, _, rr, it, brk = jax.lax.while_loop(cond, body, state)
-    return PCGResult(x, it, jnp.sqrt(rr), r0, brk)
+             jnp.array(False), jnp.array(False), jnp.array(False),
+             jnp.array(0, jnp.int32), rr)
+    (x, r, _, _, _, rr, it, brk, div, stag, _, _) = \
+        jax.lax.while_loop(cond, body, state)
+    status = classify(rr, tol2, brk, div, stag)
+    return PCGResult(x, it, jnp.sqrt(rr), r0, brk, status)
 
 
 def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
@@ -144,6 +234,7 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
               max_iter: int = 200,
               dot: Optional[Callable[[jnp.ndarray, jnp.ndarray],
                                      jnp.ndarray]] = None,
+              stagnation_window: int = 0,
               ) -> PCGResult:
     """Solve A X = B for nrhs stacked right-hand sides (trailing axis).
 
@@ -153,18 +244,21 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     geometry loads are amortized over every column.  A column whose carried
     ``rr`` has met the tolerance is *frozen* (its alpha is masked to zero
     and its search direction stops updating), so late-converging columns
-    cannot perturb finished ones; a column that hits a Lanczos breakdown
-    (``p.Ap <= 0`` while still active — a rank-deficient direction) is
-    frozen the same way and flagged in ``PCGResult.breakdown``, while the
-    healthy columns keep iterating; the loop runs until every column is
-    converged, broken down, or ``max_iter``.
+    cannot perturb finished ones.  The same freeze applies to the
+    unhealthy cases, each with its own `SolveStatus` code per column: a
+    Lanczos breakdown (``p.Ap <= 0`` while active), a DIVERGED column
+    (carried ``rr`` NaN/Inf — its step is rolled back so ``x`` keeps the
+    last finite iterate), and — when ``stagnation_window`` > 0 — a
+    STAGNATED column (no new rr minimum for that many counted iterations).
+    Healthy columns keep iterating; the loop runs until every column is
+    converged, flagged, or ``max_iter``.
 
     `dot(u, v)` must reduce to per-column values of shape (nrhs,) — the
     default contracts every axis except the last; on a sharded solve pass
     ``owned_dot(weight, axis, batched=True)``.  Returns a `PCGResult` whose
-    ``iterations``/``residual``/``initial_residual`` are per-column
-    (nrhs,) arrays; ``iterations`` counts the iterations each column
-    actually advanced before its freeze.
+    ``iterations``/``residual``/``initial_residual``/``status`` are
+    per-column (nrhs,) arrays; ``iterations`` counts the iterations each
+    column actually advanced before its freeze.
     """
     if dot is None:
         def dot(u, v):
@@ -172,9 +266,10 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     if precond is None:
         def precond(r):
             return r
+    a2 = _iter_op(a_op)
 
     x = jnp.zeros_like(b) if x0 is None else x0
-    r = b - a_op(x)
+    r = b - a2(x, jnp.asarray(_INIT_ITER, jnp.int32))
     z = precond(r)
     p = z
     rz = dot(r, z)
@@ -182,16 +277,18 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     r0 = jnp.sqrt(rr)
     tol2 = (tol * tol)
     nrhs = b.shape[-1]
+    window = jnp.asarray(stagnation_window, jnp.int32)
+    win_on = window > 0
 
     def cond(state):
-        _, _, _, _, _, rr, it, brk = state
-        return jnp.logical_and(it[-1] < max_iter,
-                               jnp.any(jnp.logical_and(rr > tol2, ~brk)))
+        _, _, _, _, _, rr, it, brk, div, stag, _, _ = state
+        live = (rr > tol2) & ~brk & ~div & ~stag
+        return jnp.logical_and(it[-1] < max_iter, jnp.any(live))
 
     def body(state):
-        x, r, z, p, rz, rr, it, brk = state
-        active = (rr > tol2) & ~brk            # (nrhs,) live-column mask
-        ap = a_op(p)
+        x, r, z, p, rz, rr, it, brk, div, stag, stall, best = state
+        active = (rr > tol2) & ~brk & ~div & ~stag  # (nrhs,) live columns
+        ap = a2(p, it[-1])
         pap = dot(p, ap)
         # Lanczos breakdown on an ACTIVE column: p.Ap <= 0 while its
         # residual is still above tolerance means A is not SPD along that
@@ -206,19 +303,43 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         # converged/broke (the where-guards keep 0/0 NaNs out of dead
         # columns)
         alpha = jnp.where(active, rz / jnp.where(pap > 0, pap, 1.0), 0.0)
-        x = x + alpha * p
-        r = r - alpha * ap
-        z = precond(r)
-        rz_new = dot(r, z)
-        rr_new = dot(r, r)
-        beta = jnp.where(active, rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
-        p = jnp.where(active, z + beta * p, p)
+        x_new = x + alpha * p
+        r_new = r - alpha * ap
+        z_new = precond(r_new)
+        rz_new = dot(r_new, z_new)
+        rr_new = dot(r_new, r_new)
+        # divergence: an active column's rr went non-finite this iteration
+        # (a NaN in its slice of A(p) reaches its per-column dot).  Roll
+        # THAT column's step back — x keeps its last finite iterate for
+        # the recovery restart — and flag it; siblings are untouched
+        # because alpha/beta are per-column.
+        hurt = active & ~jnp.isfinite(rr_new)
+        div = div | hurt
+        x = jnp.where(hurt, x, x_new)
+        r = jnp.where(hurt, r, r_new)
+        z = jnp.where(hurt, z, z_new)
+        rz2 = jnp.where(hurt, rz, rz_new)
+        rr2 = jnp.where(hurt, rr, rr_new)
+        beta = jnp.where(active & ~hurt,
+                         rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
+        p = jnp.where(active & ~hurt, z + beta * p, p)
+        advanced = active & ~hurt
+        # stagnation: per-column count of iterations since a new rr minimum
+        improved = rr2 < best
+        stall = jnp.where(improved, 0, stall + advanced.astype(jnp.int32))
+        best = jnp.minimum(best, rr2)
+        stag = stag | (win_on & advanced & (stall >= window) & (rr2 > tol2))
         it = it.at[-1].add(1)
-        return (x, r, z, p, rz_new, rr_new,
-                it.at[:nrhs].add(active.astype(jnp.int32)), brk)
+        return (x, r, z, p, rz2, rr2,
+                it.at[:nrhs].add(advanced.astype(jnp.int32)), brk, div,
+                stag, stall, best)
 
     # it carries (nrhs,) per-column counts plus one trailing global counter
     it0 = jnp.zeros((nrhs + 1,), jnp.int32)
-    state = (x, r, z, p, rz, rr, it0, jnp.zeros((nrhs,), bool))
-    x, r, _, _, _, rr, it, brk = jax.lax.while_loop(cond, body, state)
-    return PCGResult(x, it[:nrhs], jnp.sqrt(rr), r0, brk)
+    state = (x, r, z, p, rz, rr, it0, jnp.zeros((nrhs,), bool),
+             jnp.zeros((nrhs,), bool), jnp.zeros((nrhs,), bool),
+             jnp.zeros((nrhs,), jnp.int32), rr)
+    (x, r, _, _, _, rr, it, brk, div, stag, _, _) = \
+        jax.lax.while_loop(cond, body, state)
+    status = classify(rr, tol2, brk, div, stag)
+    return PCGResult(x, it[:nrhs], jnp.sqrt(rr), r0, brk, status)

@@ -23,6 +23,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import warnings
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -138,11 +139,47 @@ def cache_path() -> str:
 
 
 def _load_json() -> dict:
+    """Read the JSON cache; a missing, truncated, or otherwise corrupt file
+    (a process killed mid-write before atomic replace existed, a stray
+    editor save) degrades to an EMPTY cache with a warning — the caller
+    re-tunes and the next `_save_json` overwrites the wreck atomically.
+    The cache is an accelerator, never a correctness input, so it must not
+    be able to raise into a solve."""
+    path = cache_path()
     try:
-        with open(cache_path()) as f:
-            return json.load(f)
-    except (OSError, ValueError):
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
         return {}
+    except (OSError, ValueError) as e:
+        warnings.warn(
+            f"autotune cache {path} is unreadable or corrupt ({e}); "
+            f"ignoring it — the next tuning run rewrites it atomically",
+            RuntimeWarning, stacklevel=2)
+        return {}
+    if not isinstance(data, dict):
+        warnings.warn(
+            f"autotune cache {path} holds {type(data).__name__}, not the "
+            f"expected backend->config mapping; ignoring it",
+            RuntimeWarning, stacklevel=2)
+        return {}
+    return data
+
+
+def _cache_entry(backend: str, key: str):
+    """Look up one cache entry, treating any malformed level of a corrupt-
+    but-valid-JSON file (wrong nesting, missing/garbage block_elems) as a
+    miss."""
+    level = _load_json().get(backend)
+    entry = level.get(key) if isinstance(level, dict) else None
+    try:
+        return int(entry["block_elems"]) if entry is not None else None
+    except (TypeError, KeyError, ValueError):
+        warnings.warn(
+            f"autotune cache entry {backend}/{key} is malformed "
+            f"({entry!r}); treating it as a miss", RuntimeWarning,
+            stacklevel=2)
+        return None
 
 
 def _save_json(backend: str, key: str, entry: dict) -> None:
@@ -151,7 +188,11 @@ def _save_json(backend: str, key: str, entry: dict) -> None:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         data = _load_json()
         data.setdefault(backend, {})[key] = entry
-        tmp = path + ".tmp"
+        # atomic publish: write a sibling tmp (pid-unique, so concurrent
+        # tuners never interleave writes into one file) and os.replace it
+        # over the cache — readers see the old file or the new one, never
+        # a torn half-write
+        tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
             json.dump(data, f, indent=1, sort_keys=True)
         os.replace(tmp, path)
@@ -199,9 +240,8 @@ def get_block_elems(variant: str, n1: int, d: int, dtype,
         hit = _MEM_CACHE.get((backend, key))
     if hit is not None:
         return _clamp_to_elems(hit, e_total)
-    entry = _load_json().get(backend, {}).get(key)
-    if entry is not None:
-        eb = int(entry["block_elems"])
+    eb = _cache_entry(backend, key)
+    if eb is not None:
         with _LOCK:
             _MEM_CACHE[(backend, key)] = eb
         return _clamp_to_elems(eb, e_total)

@@ -1,0 +1,32 @@
+"""Resilient-solve subsystem: structured statuses, fault injection, retry.
+
+- `status`  — the SolveStatus lattice `core.pcg` threads through PCGResult.
+- `inject`  — deterministic solver-level fault injection (FaultSpec): NaNs,
+  bit-flip-like perturbations, dropped neighbour-exchange contributions at
+  a chosen PCG iteration; shares its failure vocabulary with
+  `training.fault_tolerance`.
+- `retry`   — `solve_resilient`: true-residual verification plus the
+  escalation chain restart -> backend fallback -> precision fallback, with
+  a structured SolveReport.
+
+Only `status` is imported eagerly: `core.pcg` depends on it, so this
+package __init__ must not import `retry` (which imports `core.nekbone`
+-> `core.pcg` and would cycle).  `inject`/`retry` resolve lazily.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.resilience.status import SolveStatus, classify, is_failure
+
+__all__ = ["SolveStatus", "classify", "is_failure", "status", "inject",
+           "retry"]
+
+_LAZY = ("inject", "retry", "status")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        return importlib.import_module(f"repro.resilience.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,170 @@
+"""Deterministic solver-level fault injection.
+
+A `FaultSpec` pins every coordinate of a fault — what kind, which PCG
+iteration, which element, which shard, which RHS column — so a fire is
+exactly reproducible run-to-run and jit-safe: the spec is a frozen
+(hashable) dataclass that travels as a STATIC argument, the only traced
+inputs to the gate are the loop's iteration counter and
+`lax.axis_index`, and the poisoned dof index is computed statically at
+setup.  Three modes:
+
+- ``"nan"``      — overwrite one dof of the operator output with NaN: the
+  model of a kernel reading garbage memory.
+- ``"bitflip"``  — multiply one dof of A(p) by finfo(dtype).max ** 0.75:
+  a high-exponent-bit flip.  Deliberately NOT a NaN: CG's own step-size
+  normalization absorbs the spike (``alpha = rz / p.Ap`` shrinks by the
+  same factor the struck dof grew), so the iterate stays finite while the
+  search-direction conjugacy is silently destroyed.  Depending on the
+  sign of the struck term it surfaces as a same-iteration BREAKDOWN
+  (``p.Ap <= 0``) or as a stall the stagnation window / MAXITER
+  detectors catch — the "silent data corruption" case the structured
+  statuses exist for.
+- ``"drop_exchange"`` — one shard skips the interface exchange for one
+  application and keeps only its local partial sums on shared dofs: the
+  model of a lost neighbour message.  Only meaningful on sharded solves.
+  NOTE: this fault does NOT make ``rr`` non-finite — the solve keeps
+  iterating on a subtly wrong operator and may even "converge" on the
+  recursive residual; it is the reason `resilience.retry.solve_resilient`
+  re-verifies the TRUE residual before accepting an answer.
+
+The poisoned node is the CENTER node of the chosen element, which for
+order >= 2 is element-interior: never Dirichlet-masked, never a
+shared/interface dof (so psum and neighbour exchanges see the identical
+fault), never a padding slot — the corruption cannot be silently erased
+by any of the solver's masking `where`s.
+
+Faults fire only on loop iterations (``it >= 0``); the initial-residual
+application and out-of-loop uses of the operator (RHS manufacture,
+true-residual verification) pass ``it = -1`` and are never corrupted.
+
+`SimulatedFailure` lives here so the training-side
+`training.fault_tolerance.FailureInjector` (host-level, step-keyed) and
+this solver-side injector (trace-level, iteration-keyed) share one
+failure vocabulary; the training module re-exports it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultSpec", "SimulatedFailure", "FAULT_MODES", "bitflip_scale",
+           "fault_dof", "poison", "wrap_operator"]
+
+FAULT_MODES = ("nan", "bitflip", "drop_exchange")
+
+
+def bitflip_scale(dtype) -> float:
+    """The bitflip multiplier for `dtype`: far beyond any physical field
+    magnitude (it dominates every inner product it enters) while the
+    product itself stays representable, so the fault corrupts the
+    ITERATION — not the arithmetic — and exercises the non-NaN detectors
+    (breakdown / stagnation / true-residual verification)."""
+    return float(jnp.finfo(dtype).max) ** 0.75
+
+
+class SimulatedFailure(RuntimeError):
+    """A scheduled, injected failure fired (host-level injectors raise it)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Where/when/how to corrupt a solve.  Frozen + hashable: pass it as a
+    static (jit/closure) argument, never as a traced value.
+
+    ``iteration`` is the PCG loop iteration to fire at (>= 0; the
+    initial-residual application is iteration -1 and is never faulted).
+    ``element`` is the element slot LOCAL to ``shard`` on sharded solves
+    (an index into that shard's element batch), a global element index
+    otherwise.  ``column`` selects one RHS column of a block solve (None =
+    poison every column); ignored for single-RHS solves.
+    """
+
+    mode: str = "nan"
+    iteration: int = 3
+    element: int = 0
+    shard: int = 0
+    column: Optional[int] = None
+
+    def __post_init__(self):
+        if self.mode not in FAULT_MODES:
+            raise ValueError(
+                f"unknown fault mode {self.mode!r}: expected one of "
+                f"{FAULT_MODES}")
+        if self.iteration < 0:
+            raise ValueError(
+                "fault.iteration must be >= 0: faults fire on PCG loop "
+                "iterations; the initial-residual application (iteration "
+                "-1) is never corrupted")
+
+
+def fault_dof(ids, spec: FaultSpec) -> int:
+    """Static dof index of the poisoned node.
+
+    `ids` maps element nodes to dof indices — `mesh.global_ids`
+    (E, N1, N1, N1) for an unsharded solve, one shard's
+    `part.local_ids[shard]` for a sharded one.  Picks the CENTER node of
+    `spec.element`, which for order >= 2 is element-interior (see module
+    docstring).  Computed with numpy at setup time, outside any trace.
+    """
+    ids = np.asarray(ids)
+    n1 = ids.shape[-1]
+    if n1 < 3:
+        raise ValueError(
+            f"fault injection needs order >= 2 (got {n1 - 1}): on order-1 "
+            f"elements every node is a vertex, so the poisoned node would "
+            f"be a shared/boundary dof and the masking paths could erase "
+            f"or double-count the corruption")
+    if not 0 <= spec.element < ids.shape[0]:
+        raise ValueError(
+            f"fault.element {spec.element} out of range for {ids.shape[0]} "
+            f"element slots")
+    c = n1 // 2
+    return int(ids[spec.element, c, c, c])
+
+
+def poison(y, dof: int, fire, spec: FaultSpec):
+    """Corrupt `y[dof]` (one dof row across any trailing batch axes) where
+    the traced boolean `fire` is True; `y` passes through untouched
+    otherwise.  `spec.column` restricts the corruption to one slice of the
+    trailing (RHS) axis when the row has one."""
+    row = y[dof]
+    if spec.mode == "nan":
+        bad = jnp.full_like(row, jnp.nan)
+    else:
+        bad = row * jnp.asarray(bitflip_scale(y.dtype), y.dtype)
+    if spec.column is not None and row.ndim >= 1:
+        bad = row.at[..., spec.column].set(bad[..., spec.column])
+    return y.at[dof].set(jnp.where(fire, bad, row))
+
+
+def wrap_operator(a_op, spec: FaultSpec, global_ids):
+    """Wrap an unsharded global operator `A(x)` with the fault.
+
+    Returns an iteration-aware operator (``takes_iteration = True``) that
+    `core.pcg` calls as ``A(x, it)``; the fault fires exactly when
+    ``it == spec.iteration``.  Sharded solves do NOT use this wrapper —
+    the corruption happens inside the per-shard pipeline (see
+    `core.nekbone._build_sharded_runner`) so it composes with both
+    exchange paths.
+    """
+    if spec.mode == "drop_exchange":
+        raise ValueError(
+            "mode='drop_exchange' needs a sharded solve — there is no "
+            "interface exchange to drop on one device; use 'nan' or "
+            "'bitflip'")
+    if spec.shard != 0:
+        raise ValueError(
+            f"fault.shard {spec.shard} on an unsharded solve (only shard 0 "
+            f"exists)")
+    dof = fault_dof(global_ids, spec)
+
+    def apply(x, it):
+        fire = jnp.asarray(it, jnp.int32) == spec.iteration
+        return poison(a_op(x), dof, fire, spec)
+
+    apply.takes_iteration = True
+    return apply

@@ -1,0 +1,271 @@
+"""Recovery policy: `solve_resilient` and the escalation ladder.
+
+A solve that comes back non-CONVERGED (or that "converged" on a lying
+recursive residual — a dropped exchange decouples the carried ``rr`` from
+``||b - A x||``, so every answer is re-verified against the TRUE residual
+through the original problem's clean operator) is retried for its failed
+columns only, climbing a bounded escalation ladder:
+
+1. **restart**   — re-run the SAME problem from the frozen last-finite
+   iterate (`core.pcg` rolls a diverged step back before the poison
+   reaches ``x``, so the iterate is always a valid warm start).  Cures
+   transient faults; a persistent fault refires and the ladder climbs.
+2. **backend:reference** — rebuild the problem with the reference element
+   kernel (only when the failing problem ran ``backend="pallas"``): a
+   kernel-level bug disappears with the kernel.
+3. **precision:float32** — rebuild in f32 (only when the problem ran a
+   reduced precision like bf16): the jax analog of the paper's Tensor
+   Core lever needs exactly this net under it (ROADMAP: mixed-precision
+   MXU solve).
+
+Rebuild rungs run CLEAN (no injected fault): an injected fault models a
+backend/precision-bound defect, which switching backend/precision
+removes.  Rebuilds use `setup_problem` with arguments recovered from the
+problem itself; per-node lambda FIELDS are not recoverable from a built
+problem, so pass a custom ``rebuild`` callable for those.
+
+Everything here is host-level control flow around jitted solves — the
+per-attempt bookkeeping is numpy, the solves are the usual
+`core.nekbone.solve` dispatches, and nothing below changes a solve's
+compiled computation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nekbone as _nek
+from repro.resilience.status import SolveStatus
+
+__all__ = ["RetryPolicy", "AttemptRecord", "SolveReport", "solve_resilient"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Knobs for `solve_resilient`'s escalation ladder.
+
+    ``verify_factor`` scales the true-residual acceptance threshold:
+    a column is accepted when
+    ``||b - A x|| <= verify_factor * max(tol, eps * ||b||)``
+    (`tol` is ABSOLUTE, matching the solver's ``rr > tol^2`` stop) — the
+    slack covers the recursive-vs-true residual drift of a healthy CG,
+    and the ``eps * ||b||`` floor keeps a tol below the problem dtype's
+    attainable true-residual floor (one fp32 operator apply already
+    rounds at that scale) from demoting every honest answer.
+    ``warm_start`` carries the best iterate into REBUILD rungs too (the
+    restart rung always warm-starts — that is its whole point); off by
+    default so a clean rung's iteration count matches a from-scratch
+    reference solve.
+    """
+
+    max_attempts: int = 4
+    restart: bool = True
+    backend_fallback: bool = True
+    precision_fallback: bool = True
+    warm_start: bool = False
+    verify_factor: float = 10.0
+    stagnation_window: int = 0
+
+
+@dataclasses.dataclass
+class AttemptRecord:
+    """One rung's outcome (arrays are per-ATTEMPTED-column, see `columns`)."""
+
+    rung: str
+    columns: Tuple[int, ...]       # global column indices this rung ran
+    status: np.ndarray
+    iterations: np.ndarray
+    residual: np.ndarray           # recursive residual the solver reported
+    true_residual: np.ndarray      # ||b - A x|| through the clean operator
+    failed_columns: Tuple[int, ...]  # columns still failed after this rung
+
+
+@dataclasses.dataclass
+class SolveReport:
+    """Structured outcome of a resilient solve.
+
+    Per-column arrays are length nrhs (length 1 for a single-RHS solve);
+    ``rung[j]`` names the ladder rung whose answer column j carries.
+    """
+
+    x: jnp.ndarray
+    converged: bool
+    status: np.ndarray
+    iterations: np.ndarray
+    residual: np.ndarray
+    true_residual: np.ndarray
+    rung: Tuple[str, ...]
+    attempts: List[AttemptRecord]
+
+    @property
+    def ok(self) -> bool:
+        return self.converged
+
+
+_LOW_PRECISION = ("bfloat16", "float16")
+
+
+def _default_rebuild(problem, nrhs):
+    """Rebuild factory recovering `setup_problem` arguments from a built
+    problem.  Scalar lambda defaults are re-derived by `setup_problem`
+    itself; per-node lambda fields cannot be recovered — callers with
+    fields must pass their own ``rebuild``."""
+
+    def rebuild(backend=None, dtype=None):
+        return _nek.setup_problem(
+            problem.mesh, variant=problem.variant, d=problem.d,
+            helmholtz=problem.helmholtz,
+            dirichlet=problem.mask is not None,
+            dtype=dtype if dtype is not None else problem.diag.dtype,
+            backend=backend if backend is not None else problem.backend,
+            shard_ctx=getattr(problem, "shard_ctx", None), nrhs=nrhs)
+
+    return rebuild
+
+
+def solve_resilient(problem, b, policy: Optional[RetryPolicy] = None, *,
+                    precond: str = "jacobi", tol: float = 1e-8,
+                    max_iter: int = 200, fault=None, persistent: bool = True,
+                    rebuild: Optional[Callable] = None) -> SolveReport:
+    """Solve A x = b, detecting and recovering from failed columns.
+
+    `fault` (a `resilience.inject.FaultSpec`) is the test harness's
+    injection key: it corrupts the initial attempt, refires on the restart
+    rung when ``persistent=True`` (a deterministic kernel defect) and is
+    dropped there when ``persistent=False`` (a transient upset); rebuild
+    rungs always run clean.  Verification always runs through the ORIGINAL
+    problem's un-faulted operator.
+
+    Returns a `SolveReport`; ``report.converged`` is the overall verdict
+    and ``report.attempts`` the full per-rung audit trail.
+    """
+    policy = policy or RetryPolicy()
+    base = 1 if problem.d == 1 else 2
+    batched = b.ndim == base + 1
+    nrhs = b.shape[-1] if batched else 1
+    b64 = np.asarray(b, np.float64)
+    bnorm = np.sqrt(np.sum(
+        b64 * b64, axis=tuple(range(b64.ndim - 1)))) if batched \
+        else np.sqrt(np.sum(b64 * b64))[None]
+    eps = float(jnp.finfo(problem.diag.dtype).eps)
+    thresh = policy.verify_factor * np.maximum(tol, eps * bnorm)
+    if rebuild is None:
+        rebuild = _default_rebuild(problem, nrhs)
+
+    def run(prob, b_arr, x0, flt):
+        return _nek.solve(prob, jnp.asarray(b_arr, prob.diag.dtype),
+                          precond=precond, tol=tol, max_iter=max_iter,
+                          x0=None if x0 is None
+                          else jnp.asarray(x0, prob.diag.dtype),
+                          stagnation_window=policy.stagnation_window,
+                          fault=flt)
+
+    def true_residual(x_full):
+        # the clean operator of the ORIGINAL problem is the ground truth —
+        # it never carries the injected fault, and using one fixed
+        # operator keeps the acceptance bar identical across rungs
+        r = np.asarray(b, np.float64) - np.asarray(
+            problem.op(jnp.asarray(x_full, problem.diag.dtype)), np.float64)
+        if batched:
+            return np.sqrt(np.sum(r * r, axis=tuple(range(r.ndim - 1))))
+        return np.sqrt(np.sum(r * r))[None]
+
+    def per_column(res):
+        st = np.atleast_1d(np.asarray(res.status)).astype(np.int64)
+        it = np.atleast_1d(np.asarray(res.iterations)).astype(np.int64)
+        rr = np.atleast_1d(np.asarray(res.residual)).astype(np.float64)
+        return st, it, rr
+
+    def audit(name, cols, res, x_full):
+        """Verify one rung: true residual + lying-convergence demotion."""
+        st, it, rr = per_column(res)
+        tr = true_residual(x_full)[np.asarray(cols)]
+        # a column whose solver status says CONVERGED but whose true
+        # residual disagrees "converged" on a decoupled recursive residual
+        # (the drop_exchange signature): demote it to STAGNATED so the
+        # ladder keeps climbing
+        lying = (st == int(SolveStatus.CONVERGED)) \
+            & (tr > thresh[np.asarray(cols)])
+        st = np.where(lying, int(SolveStatus.STAGNATED), st)
+        ok = st == int(SolveStatus.CONVERGED)
+        rec = AttemptRecord(name, tuple(cols), st, it, rr, tr,
+                            tuple(np.asarray(cols)[~ok]))
+        return rec, ok
+
+    # --- attempt 0: the caller's problem, fault and all -----------------
+    res = run(problem, b, None, fault)
+    x = np.array(res.x, np.float64)  # a WRITABLE copy, not a device view
+    rec, ok = audit("initial", tuple(range(nrhs)), res, x)
+    status, iters, resid = rec.status.copy(), rec.iterations.copy(), \
+        rec.residual.copy()
+    true_res = rec.true_residual.copy()
+    rung_of = np.array(["initial"] * nrhs, dtype=object)
+    attempts = [rec]
+    failed = ~ok
+
+    # --- the escalation ladder ------------------------------------------
+    ladder = []
+    if policy.restart:
+        ladder.append(("restart", lambda: problem,
+                       fault if persistent else None, True))
+    if policy.backend_fallback and problem.backend == "pallas":
+        ladder.append(("backend:reference",
+                       lambda: rebuild(backend="reference"), None,
+                       policy.warm_start))
+    if policy.precision_fallback and \
+            problem.diag.dtype.name in _LOW_PRECISION:
+        ladder.append(("precision:float32",
+                       lambda: rebuild(dtype=jnp.float32), None,
+                       policy.warm_start))
+
+    for name, build, flt, warm in ladder:
+        if not failed.any() or len(attempts) >= policy.max_attempts:
+            break
+        cols = np.nonzero(failed)[0]
+        prob2 = build()
+        # a warm start is only warm if the iterate actually beats x0 = 0:
+        # a fault that never trips the in-loop checks (drop_exchange) lets
+        # the iterate drift arbitrarily far before verification catches
+        # it, and restarting FROM the drifted point both wastes the rung
+        # and caps the attainable true residual (fp32 cancellation scales
+        # with ||x||) — such columns restart cold
+        warm_x = x.copy()
+        useless = true_res >= bnorm
+        if batched:
+            warm_x[..., useless] = 0.0
+        elif useless[0]:
+            warm_x = np.zeros_like(x)
+        if batched:
+            b_sub = jnp.asarray(b)[..., cols]
+            x0_sub = warm_x[..., cols] if warm else None
+        else:
+            b_sub, x0_sub = b, (warm_x if warm else None)
+        res2 = run(prob2, b_sub, x0_sub, flt)
+        x_try = x.copy()
+        if batched:
+            x_try[..., cols] = np.asarray(res2.x, np.float64)
+        else:
+            x_try = np.array(res2.x, np.float64)
+        rec, ok2 = audit(name, tuple(cols), res2, x_try)
+        attempts.append(rec)
+        # adopt every attempted column's latest state; only verified
+        # columns advance x and settle their rung
+        status[cols], iters[cols] = rec.status, rec.iterations
+        resid[cols], true_res[cols] = rec.residual, rec.true_residual
+        good = cols[ok2]
+        if batched:
+            x[..., good] = x_try[..., good]
+        elif ok2[0]:
+            x = x_try
+        rung_of[good] = name
+        failed = status != int(SolveStatus.CONVERGED)
+
+    x_out = jnp.asarray(x, problem.diag.dtype)
+    return SolveReport(x=x_out, converged=not bool(failed.any()),
+                       status=status, iterations=iters, residual=resid,
+                       true_residual=true_res, rung=tuple(rung_of),
+                       attempts=attempts)

@@ -1,0 +1,59 @@
+"""Structured solver outcomes: the SolveStatus lattice.
+
+Every PCG solve (single-RHS, block, sharded) reports WHY it stopped, not
+just how many iterations it ran — `PCGResult.status` carries one of these
+codes per solve/column, computed inside the while_loop from scalars the
+iteration already reduces (`rr`, `p.Ap`), so detection adds zero
+collectives on the sharded path (machine-checked in
+tests/test_resilience_sharded.py).
+
+The codes form a severity lattice (see DESIGN.md "Robustness & failure
+model"): DIVERGED > BREAKDOWN > STAGNATED > CONVERGED > MAXITER.  A column
+that hits several conditions reports the most severe one; CONVERGED always
+wins over STAGNATED (a stall counter that fills in the same iteration the
+residual crosses the tolerance is a success, not a failure).
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+__all__ = ["SolveStatus", "classify", "is_failure"]
+
+
+class SolveStatus(enum.IntEnum):
+    """Why a PCG solve (or one column of a block solve) stopped."""
+
+    CONVERGED = 0   # residual met the tolerance
+    MAXITER = 1     # ran out of iterations while still healthy
+    DIVERGED = 2    # carried rr went NaN/Inf — a poisoned operator/field
+    STAGNATED = 3   # rr made no new minimum for `stagnation_window` iters
+    BREAKDOWN = 4   # Lanczos breakdown: p.Ap <= 0 while still active
+
+    @property
+    def ok(self) -> bool:
+        return self is SolveStatus.CONVERGED
+
+
+def classify(rr, tol2, breakdown, diverged, stagnated) -> jnp.ndarray:
+    """Fold the per-column health flags into int32 SolveStatus codes.
+
+    Works on scalars (``pcg``) and (nrhs,) arrays (``pcg_block``) alike.
+    A non-finite final ``rr`` counts as DIVERGED even when the in-loop flag
+    never fired (e.g. a NaN already in b poisons the *initial* residual, so
+    the loop never enters).
+    """
+    diverged = diverged | ~jnp.isfinite(rr)
+    converged = rr <= tol2
+    status = jnp.where(converged, SolveStatus.CONVERGED, SolveStatus.MAXITER)
+    status = jnp.where(stagnated & ~converged, SolveStatus.STAGNATED, status)
+    status = jnp.where(breakdown, SolveStatus.BREAKDOWN, status)
+    status = jnp.where(diverged, SolveStatus.DIVERGED, status)
+    return status.astype(jnp.int32)
+
+
+def is_failure(status) -> jnp.ndarray:
+    """True where a status code needs recovery (anything but CONVERGED)."""
+    return jnp.asarray(status) != SolveStatus.CONVERGED

@@ -1,0 +1,105 @@
+"""Solve-as-a-service skeleton: batched resilient solves behind a queue.
+
+The solver-side sibling of `serving.engine`: clients submit right-hand
+sides, the service packs up to `max_batch` of them into ONE block-PCG
+solve (amortizing the operator application / gather exchange across the
+batch, exactly the multi-RHS lever of `core.pcg.pcg_block`), runs it
+through `resilience.retry.solve_resilient`, and hands every request back
+a structured `SolveReport` — never a raw array: a service cannot assume
+its caller will remember to check convergence, so the status, the
+verified true residual, and the recovery audit trail travel WITH the
+answer (a caller who wants the field reads ``report.x``).
+
+This is the ROADMAP "solve-as-a-service" direction's minimal core: the
+batching policy is greedy FIFO and the loop is synchronous; scheduling
+sophistication can grow around the same submit/step surface the token
+engine uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.resilience.retry import (RetryPolicy, SolveReport,
+                                    solve_resilient)
+from repro.resilience.status import SolveStatus
+
+__all__ = ["SolveRequest", "SolveService"]
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One RHS to solve: `b` is (Ng,) for d=1 problems, (Ng, d) otherwise.
+
+    After service, ``report`` holds THIS request's single-column
+    `SolveReport` (length-1 per-column arrays; ``report.x`` has b's
+    shape) and ``done`` is True even when the solve FAILED — failure is
+    a structured answer here, not a hang; check ``report.converged``.
+    """
+
+    uid: int
+    b: jnp.ndarray
+    report: Optional[SolveReport] = None
+    done: bool = False
+
+
+class SolveService:
+    """Greedy-FIFO batching of resilient solves on one fixed problem."""
+
+    def __init__(self, problem, policy: Optional[RetryPolicy] = None,
+                 max_batch: int = 4, precond: str = "jacobi",
+                 tol: float = 1e-8, max_iter: int = 200):
+        self.problem = problem
+        self.policy = policy or RetryPolicy()
+        self.max_batch = max_batch
+        self.precond = precond
+        self.tol = tol
+        self.max_iter = max_iter
+        self.queue: List[SolveRequest] = []
+
+    def submit(self, req: SolveRequest):
+        base = 1 if self.problem.d == 1 else 2
+        if np.ndim(req.b) != base:
+            raise ValueError(
+                f"SolveRequest.b must be a single rank-{base} RHS for a "
+                f"d={self.problem.d} problem (the service does the "
+                f"batching), got shape {np.shape(req.b)}")
+        self.queue.append(req)
+
+    def step(self) -> int:
+        """Solve one batch of queued requests; returns #requests served."""
+        batch = self.queue[:self.max_batch]
+        if not batch:
+            return 0
+        del self.queue[:len(batch)]
+        b_blk = jnp.stack([jnp.asarray(r.b) for r in batch], axis=-1)
+        rep = solve_resilient(self.problem, b_blk, self.policy,
+                              precond=self.precond, tol=self.tol,
+                              max_iter=self.max_iter)
+        for j, req in enumerate(batch):
+            req.report = SolveReport(
+                x=rep.x[..., j],
+                converged=bool(rep.status[j] == SolveStatus.CONVERGED),
+                status=rep.status[j:j + 1],
+                iterations=rep.iterations[j:j + 1],
+                residual=rep.residual[j:j + 1],
+                true_residual=rep.true_residual[j:j + 1],
+                rung=rep.rung[j:j + 1],
+                # the audit trail is batch-global: attempts record which
+                # columns they ran, so sharing it keeps the provenance
+                attempts=rep.attempts)
+            req.done = True
+        return len(batch)
+
+    def run_until_drained(self, max_steps: int = 100) -> int:
+        """Serve batches until the queue is empty (or `max_steps` spent);
+        returns the number of steps taken."""
+        steps = 0
+        while self.queue and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

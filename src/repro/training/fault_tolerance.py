@@ -8,23 +8,27 @@ that aborts a stalled step, (3) automatic restart from the latest checkpoint
 
 The harness here drives exactly that loop in-process; `FailureInjector`
 simulates chip failures / stragglers for the tests and examples.
+
+Train and solve share ONE failure vocabulary: `SimulatedFailure` is
+defined in `resilience.inject` (re-exported here for existing callers)
+next to the solver-side `FaultSpec`, and `FailureInjector.from_specs`
+builds the host-level step injector from the same specs the solver-level
+harness keys its trace-level corruptions on — the step/iteration index
+means "the k-th repetition of the unit of work" in both worlds.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, Optional
 
 import jax
 
+from repro.resilience.inject import SimulatedFailure
 from repro.training import checkpoint
 
 __all__ = ["SimulatedFailure", "FailureInjector", "run_resilient"]
-
-
-class SimulatedFailure(RuntimeError):
-    """Stands in for a lost chip / preempted slice."""
 
 
 @dataclass
@@ -35,6 +39,23 @@ class FailureInjector:
     straggle_at: tuple = ()
     straggle_seconds: float = 0.0
     _fired: set = field(default_factory=set)
+
+    @classmethod
+    def from_specs(cls, specs: Iterable, straggle_seconds: float = 0.0):
+        """Build the step injector from `resilience.inject.FaultSpec`s.
+
+        Point corruptions (nan/bitflip) become hard step failures — at
+        training granularity a poisoned chip output kills the step — and
+        `drop_exchange` (a lost message, i.e. a slow/absent peer) becomes
+        a straggler at that step.
+        """
+        specs = tuple(specs)
+        return cls(
+            fail_at=tuple(s.iteration for s in specs
+                          if s.mode != "drop_exchange"),
+            straggle_at=tuple(s.iteration for s in specs
+                              if s.mode == "drop_exchange"),
+            straggle_seconds=straggle_seconds)
 
     def check(self, step: int):
         if step in self.straggle_at and ("s", step) not in self._fired:

@@ -96,3 +96,35 @@ def test_block_elems_auto_entry_point(isolated_cache, rng):
     assert (backend, key) in tune._MEM_CACHE
     with pytest.raises(ValueError):
         kops.axhelm(x, b, "trilinear", verts, block_elems="fastest")
+
+
+def test_corrupt_cache_file_warns_and_degrades_to_miss(isolated_cache):
+    """A truncated cache (a process killed mid-write before the atomic
+    publish existed) must warn + fall through to the heuristic — never
+    raise into a solve."""
+    isolated_cache.write_text('{"pallas": {"tri')
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        eb = tune.get_block_elems("trilinear", 4, 1, jnp.float32)
+    assert eb in tune.feasible_block_elems("trilinear", 4, 1, jnp.float32)
+
+
+def test_non_mapping_cache_warns_and_is_ignored(isolated_cache):
+    isolated_cache.write_text("[1, 2, 3]")
+    with pytest.warns(RuntimeWarning, match="mapping"):
+        assert tune._load_json() == {}
+
+
+def test_malformed_entry_is_a_miss_and_retune_heals(isolated_cache):
+    """Valid JSON with a garbage entry: the lookup treats it as a miss and
+    the next tuning run overwrites the wreck atomically (no tmp litter)."""
+    backend = tune._backend_tag(None)
+    key = tune._config_key("trilinear", 3, 1, jnp.float32, False)
+    isolated_cache.write_text(json.dumps(
+        {backend: {key: {"block_elems": "garbage"}}}))
+    with pytest.warns(RuntimeWarning, match="malformed"):
+        assert tune._cache_entry(backend, key) is None
+    winner, _ = tune.autotune("trilinear", 2, d=1, dtype=jnp.float32,
+                              e=8, iters=1, candidates=[1, 2])
+    data = json.loads(isolated_cache.read_text())
+    assert data[backend][key]["block_elems"] == winner
+    assert not list(isolated_cache.parent.glob("*.tmp.*"))

@@ -1,0 +1,72 @@
+"""benchmarks/benchio.py: atomic publish + merge-don't-clobber semantics
+for the BENCH_*.json trajectory files."""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+import benchio  # noqa: E402
+
+
+def test_load_missing_and_corrupt(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    assert benchio.load(path) == {}
+    with open(path, "w") as f:
+        f.write('{"rows": [tru')       # torn write
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        assert benchio.load(path) == {}
+    with open(path, "w") as f:
+        json.dump([1, 2], f)           # valid JSON, wrong shape
+    with pytest.warns(RuntimeWarning, match="mapping"):
+        assert benchio.load(path) == {}
+
+
+def test_write_atomic_replaces_and_leaves_no_tmp(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    benchio.write_atomic(path, {"a": 1})
+    benchio.write_atomic(path, {"a": 2})
+    assert json.load(open(path)) == {"a": 2}
+    assert [p.name for p in tmp_path.iterdir()] == ["BENCH_x.json"]
+
+
+def test_merge_keeps_untouched_rows(tmp_path):
+    """The --quick/--smoke clobber regression: a subset re-measurement must
+    replace only its own configurations and keep every other row."""
+    path = str(tmp_path / "BENCH_x.json")
+    keys = {"rows": ("variant", "nrhs")}
+    full = {"config": {"quick": False},
+            "rows": [{"variant": "a", "nrhs": 1, "gflops": 10.0},
+                     {"variant": "a", "nrhs": 4, "gflops": 30.0},
+                     {"variant": "b", "nrhs": 1, "gflops": 20.0}]}
+    benchio.merge_payload(path, full, row_keys=keys)
+    smoke = {"config": {"quick": True},
+             "rows": [{"variant": "a", "nrhs": 1, "gflops": 11.5}]}
+    out = benchio.merge_payload(path, smoke, row_keys=keys)
+    assert out == json.load(open(path))
+    rows = {(r["variant"], r["nrhs"]): r["gflops"] for r in out["rows"]}
+    assert rows == {("a", 1): 11.5, ("a", 4): 30.0, ("b", 1): 20.0}
+    # scalar sections describe the LAST run and are replaced wholesale
+    assert out["config"] == {"quick": True}
+
+
+def test_merge_without_keys_replaces_section(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    benchio.merge_payload(path, {"rows": [{"a": 1}]})
+    out = benchio.merge_payload(path, {"rows": [{"b": 2}]})
+    assert out["rows"] == [{"b": 2}]
+
+
+def test_merge_survives_corrupt_base(tmp_path):
+    path = str(tmp_path / "BENCH_x.json")
+    with open(path, "w") as f:
+        f.write("no json here")
+    with pytest.warns(RuntimeWarning, match="corrupt"):
+        out = benchio.merge_payload(path, {"rows": [{"a": 1}]},
+                                    row_keys={"rows": ("a",)})
+    assert out == {"rows": [{"a": 1}]}
+    assert json.load(open(path)) == out

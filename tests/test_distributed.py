@@ -157,3 +157,23 @@ def test_miniature_dryrun_cell():
     assert res["flops"] > 1e6
     assert res["coll"] > 0
     assert "all-to-all" in res["kinds"], res  # the EP dispatch is visible
+
+
+def test_make_solver_ctx_single_device_warn_paths():
+    """devices=1 collapses to the unsharded path; non-default exchange/grid
+    flags cannot apply there and must WARN (a silently-dropped flag would
+    let a bench row mislabel the exchange it ran), while the all-defaults
+    collapse stays silent."""
+    import warnings
+
+    import pytest
+
+    from repro.distributed.context import make_solver_ctx
+
+    with pytest.warns(UserWarning, match="ignored"):
+        assert make_solver_ctx(devices=1, exchange="neighbour") is None
+    with pytest.warns(UserWarning, match="grid"):
+        assert make_solver_ctx(devices=1, grid=(2, 1, 1)) is None
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert make_solver_ctx(devices=1) is None

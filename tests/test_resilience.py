@@ -1,0 +1,436 @@
+"""Resilient-solve layer: structured statuses, in-loop health detection
+(NaN/Inf within one iteration, stagnation window, breakdown), deterministic
+fault injection, the `solve_resilient` escalation ladder, the unified
+training-side failure vocabulary, and the solve-as-a-service wrapper.
+
+Single-device coverage; the sharded detection/HLO gates live in
+tests/test_resilience_sharded.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mesh_gen, nekbone
+from repro.core.pcg import pcg, pcg_block
+from repro.resilience import SolveStatus, classify, is_failure
+from repro.resilience.inject import (FaultSpec, SimulatedFailure,
+                                     bitflip_scale, fault_dof,
+                                     wrap_operator)
+from repro.resilience.retry import RetryPolicy, SolveReport, solve_resilient
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+# --------------------------------------------------------------------------
+# status lattice
+# --------------------------------------------------------------------------
+
+def test_status_enum_and_predicates():
+    assert SolveStatus.CONVERGED.ok
+    for s in (SolveStatus.MAXITER, SolveStatus.DIVERGED,
+              SolveStatus.STAGNATED, SolveStatus.BREAKDOWN):
+        assert not s.ok
+        assert is_failure(int(s))
+    assert not is_failure(int(SolveStatus.CONVERGED))
+
+
+def test_classify_severity_lattice():
+    f = jnp.asarray(False)
+    t = jnp.asarray(True)
+    rr_ok = jnp.asarray(1e-20)
+    rr_bad = jnp.asarray(1.0)
+    tol2 = 1e-12
+    assert int(classify(rr_ok, tol2, f, f, f)) == SolveStatus.CONVERGED
+    assert int(classify(rr_bad, tol2, f, f, f)) == SolveStatus.MAXITER
+    assert int(classify(rr_bad, tol2, f, f, t)) == SolveStatus.STAGNATED
+    # a converged column is NOT stagnated even if the window tripped late
+    assert int(classify(rr_ok, tol2, f, f, t)) == SolveStatus.CONVERGED
+    # severity: DIVERGED > BREAKDOWN > STAGNATED
+    assert int(classify(rr_bad, tol2, t, f, t)) == SolveStatus.BREAKDOWN
+    assert int(classify(rr_bad, tol2, t, t, t)) == SolveStatus.DIVERGED
+    # non-finite rr classifies DIVERGED even without the flag (NaN in b)
+    assert int(classify(jnp.asarray(jnp.nan), tol2, f, f, f)) \
+        == SolveStatus.DIVERGED
+
+
+def test_classify_is_vectorised():
+    rr = jnp.asarray([1e-20, 1.0, jnp.nan])
+    st = np.asarray(classify(rr, 1e-12, jnp.zeros(3, bool),
+                             jnp.zeros(3, bool), jnp.zeros(3, bool)))
+    np.testing.assert_array_equal(
+        st, [SolveStatus.CONVERGED, SolveStatus.MAXITER,
+             SolveStatus.DIVERGED])
+
+
+# --------------------------------------------------------------------------
+# in-loop detection at the pcg level
+# --------------------------------------------------------------------------
+
+def _spd(rng, n=24):
+    a = rng.standard_normal((n, n))
+    return a @ a.T + n * np.eye(n)
+
+
+def _poisoned_op(a, at_iteration):
+    """SPD matvec that returns all-NaN at one chosen iteration."""
+    am = jnp.asarray(a)
+
+    def apply(x, it):
+        y = am @ x
+        return jnp.where(it == at_iteration, jnp.nan, y)
+
+    apply.takes_iteration = True
+    return apply
+
+
+def test_pcg_detects_nan_within_one_iteration(rng):
+    a = _spd(rng)
+    b = jnp.asarray(a @ rng.standard_normal(a.shape[0]))
+    res = pcg(_poisoned_op(a, 3), b, tol=1e-12, max_iter=100)
+    assert int(res.status) == SolveStatus.DIVERGED
+    # the poisoned step is rolled back: 3 counted iterations, finite x
+    assert int(res.iterations) == 3
+    assert np.isfinite(np.asarray(res.x)).all()
+    assert np.isfinite(float(res.residual))
+
+
+def test_pcg_healthy_solve_reports_converged(rng):
+    a = _spd(rng)
+    b = jnp.asarray(a @ rng.standard_normal(a.shape[0]))
+    res = pcg(lambda v: jnp.asarray(a) @ v, b, tol=1e-12, max_iter=200)
+    assert int(res.status) == SolveStatus.CONVERGED
+    assert not bool(res.breakdown)
+
+
+def test_pcg_maxiter_status(rng):
+    a = _spd(rng)
+    b = jnp.asarray(a @ rng.standard_normal(a.shape[0]))
+    res = pcg(lambda v: jnp.asarray(a) @ v, b, tol=1e-12, max_iter=2)
+    assert int(res.status) == SolveStatus.MAXITER
+
+
+def test_pcg_stagnation_window(rng):
+    """An ill-conditioned system at an unattainable tol makes no rr
+    progress; the window flags STAGNATED instead of spinning to max_iter.
+    (A WELL-conditioned system must not trip it: underflow-to-zero rr
+    counts as convergence, tested in test_pcg_healthy_solve.)"""
+    d = jnp.asarray(np.logspace(-10, 0, 40))
+    b = jnp.asarray(rng.standard_normal(40))
+    res = pcg(lambda v: d * v, b, tol=1e-30, max_iter=500,
+              stagnation_window=10)
+    assert int(res.status) == SolveStatus.STAGNATED
+    assert int(res.iterations) < 500
+    # window=0 keeps the old behavior: runs to max_iter
+    res0 = pcg(lambda v: d * v, b, tol=1e-30, max_iter=60)
+    assert int(res0.status) == SolveStatus.MAXITER
+    assert int(res0.iterations) == 60
+
+
+def test_pcg_breakdown_status():
+    d = jnp.asarray([1.0, 2.0, 0.0])
+    res = pcg(lambda x: d * x, jnp.array([0.0, 0.0, 1.0]), tol=1e-12,
+              max_iter=50)
+    assert bool(res.breakdown)
+    assert int(res.status) == SolveStatus.BREAKDOWN
+
+
+def test_pcg_block_poisoned_column_isolated(rng):
+    """A NaN strike on one column freezes THAT column within one iteration;
+    siblings converge with untouched iteration counts."""
+    a = _spd(rng, n=16)
+    am = jnp.asarray(a)
+    bs = jnp.asarray(a @ rng.standard_normal((a.shape[0], 4)))
+
+    def apply(x, it):
+        y = am @ x
+        bad = jnp.where(it == 2, jnp.nan, y[..., 1])
+        return y.at[..., 1].set(bad)
+
+    apply.takes_iteration = True
+    res = pcg_block(apply, bs, tol=1e-12, max_iter=100)
+    st = np.asarray(res.status)
+    np.testing.assert_array_equal(
+        st, [SolveStatus.CONVERGED, SolveStatus.DIVERGED,
+             SolveStatus.CONVERGED, SolveStatus.CONVERGED])
+    it = np.asarray(res.iterations)
+    assert it[1] == 2
+    ref = pcg_block(lambda v: am @ v, bs, tol=1e-12, max_iter=100)
+    np.testing.assert_array_equal(it[[0, 2, 3]],
+                                  np.asarray(ref.iterations)[[0, 2, 3]])
+    assert np.isfinite(np.asarray(res.x)).all()
+
+
+# --------------------------------------------------------------------------
+# fault injection keys
+# --------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="mode"):
+        FaultSpec(mode="gamma_ray")
+    with pytest.raises(ValueError, match="iteration"):
+        FaultSpec(iteration=-1)
+    # hashable -> usable as a jit static argument
+    assert hash(FaultSpec()) == hash(FaultSpec())
+
+
+def test_fault_dof_targets_interior_node():
+    mesh = mesh_gen.box_mesh(2, 2, 1, 3)
+    dof = fault_dof(mesh.global_ids, FaultSpec(element=1))
+    assert isinstance(dof, int)
+    # the struck node is interior to element 1: it appears in exactly one
+    # element (never a shared/boundary/padding dof)
+    assert (np.asarray(mesh.global_ids).reshape(len(mesh.verts), -1)
+            == dof).sum() == 1
+    with pytest.raises(ValueError, match="element"):
+        fault_dof(mesh.global_ids, FaultSpec(element=99))
+
+
+def test_fault_dof_rejects_low_order():
+    mesh = mesh_gen.box_mesh(2, 1, 1, 1)
+    with pytest.raises(ValueError, match="order"):
+        fault_dof(mesh.global_ids, FaultSpec())
+
+
+def test_wrap_operator_rejects_exchange_mode_unsharded():
+    mesh = mesh_gen.box_mesh(2, 1, 1, 3)
+    with pytest.raises(ValueError, match="drop_exchange"):
+        wrap_operator(lambda x: x, FaultSpec(mode="drop_exchange"),
+                      mesh.global_ids)
+
+
+def test_bitflip_scale_is_dtype_aware():
+    assert bitflip_scale(jnp.float32) < bitflip_scale(jnp.float64)
+    assert np.isfinite(bitflip_scale(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# injection through the nekbone solve (unsharded path)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def poisson64(request):
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 2, 4), seed=3)
+    prob = nekbone.setup_problem(mesh, variant="trilinear",
+                                 dtype=jnp.float64)
+    rng = np.random.default_rng(0)
+    x_true = jnp.asarray(rng.standard_normal(mesh.n_global))
+    b = nekbone.rhs_from_solution(prob, x_true)
+    return mesh, prob, b
+
+
+def test_solve_nan_injection_detected_within_one_iteration(poisson64):
+    _, prob, b = poisson64
+    spec = FaultSpec(mode="nan", iteration=3)
+    res = nekbone.solve(prob, b, tol=1e-10, max_iter=300, fault=spec)
+    assert int(res.status) == SolveStatus.DIVERGED
+    assert int(res.iterations) == spec.iteration
+    assert np.isfinite(np.asarray(res.x)).all()
+    # and the clean solve is untouched by the machinery
+    ref = nekbone.solve(prob, b, tol=1e-10, max_iter=300)
+    assert int(ref.status) == SolveStatus.CONVERGED
+
+
+def test_solve_bitflip_injection_is_detected(poisson64):
+    """The bitflip strike corrupts conjugacy rather than producing NaN —
+    CG's alpha normalisation cancels multiplicative spikes — so the net
+    that catches it is breakdown/stagnation, not the NaN check.  Either
+    way the solve must NOT report CONVERGED at the poisoned answer."""
+    _, prob, b = poisson64
+    spec = FaultSpec(mode="bitflip", iteration=2)
+    res = nekbone.solve(prob, b, tol=1e-10, max_iter=120, fault=spec,
+                        stagnation_window=15)
+    assert is_failure(int(res.status)), SolveStatus(int(res.status)).name
+
+
+def test_solve_batched_injection_isolates_column(poisson64):
+    mesh, prob, _ = poisson64
+    ctx_free = nekbone.setup_problem(mesh, variant="trilinear",
+                                     dtype=jnp.float64, nrhs=4)
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.standard_normal((mesh.n_global, 4)))
+    bs = nekbone.rhs_from_solution(ctx_free, xs)
+    spec = FaultSpec(mode="nan", iteration=2, column=1)
+    res = nekbone.solve(ctx_free, bs, tol=1e-10, max_iter=300, fault=spec)
+    st = np.asarray(res.status)
+    np.testing.assert_array_equal(
+        st, [SolveStatus.CONVERGED, SolveStatus.DIVERGED,
+             SolveStatus.CONVERGED, SolveStatus.CONVERGED])
+    assert int(np.asarray(res.iterations)[1]) == 2
+    ref = nekbone.solve(ctx_free, bs, tol=1e-10, max_iter=300)
+    np.testing.assert_array_equal(
+        np.asarray(res.iterations)[[0, 2, 3]],
+        np.asarray(ref.iterations)[[0, 2, 3]])
+
+
+# --------------------------------------------------------------------------
+# solve_resilient escalation ladder
+# --------------------------------------------------------------------------
+
+def test_resilient_clean_solve_single_attempt(poisson64):
+    _, prob, b = poisson64
+    rep = solve_resilient(prob, b, tol=1e-10, max_iter=300)
+    assert isinstance(rep, SolveReport)
+    assert rep.ok and rep.converged
+    assert rep.rung == ("initial",)
+    assert len(rep.attempts) == 1
+    assert int(rep.status[0]) == SolveStatus.CONVERGED
+
+
+def test_resilient_transient_fault_restart_recovers(poisson64):
+    """A transient upset (persistent=False) dies on the restart rung: the
+    warm restart from the frozen last-finite iterate converges and the
+    combined iteration budget beats two cold solves."""
+    _, prob, b = poisson64
+    ref = nekbone.solve(prob, b, tol=1e-10, max_iter=300)
+    rep = solve_resilient(prob, b, tol=1e-10, max_iter=300,
+                          fault=FaultSpec(mode="nan", iteration=5),
+                          persistent=False)
+    assert rep.converged
+    assert rep.rung == ("restart",)
+    assert [a.rung for a in rep.attempts] == ["initial", "restart"]
+    assert int(rep.attempts[0].status[0]) == SolveStatus.DIVERGED
+    # warm restart resumes rather than restarts: its iterations stay under
+    # the cold count
+    assert int(rep.iterations[0]) <= int(ref.iterations)
+    dx = float(jnp.max(jnp.abs(rep.x - ref.x)))
+    assert dx < 1e-6, dx
+
+
+def test_resilient_persistent_fault_backend_fallback():
+    """A persistent fault on a pallas problem refires through the restart
+    and is cured by the backend:reference rung, which must match the
+    uninjected reference solve to +-1 iteration and in the answer."""
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 1, 4), seed=3)
+    prob = nekbone.setup_problem(mesh, variant="partial",
+                                 dtype=jnp.float32, backend="pallas")
+    assert prob.backend == "pallas"
+    rng = np.random.default_rng(0)
+    x_true = jnp.asarray(rng.standard_normal(mesh.n_global), jnp.float32)
+    b = nekbone.rhs_from_solution(prob, x_true)
+    ref_prob = nekbone.setup_problem(mesh, variant="partial",
+                                     dtype=jnp.float32,
+                                     backend="reference")
+    ref = nekbone.solve(ref_prob, b, tol=1e-6, max_iter=300)
+    rep = solve_resilient(prob, b, tol=1e-6, max_iter=300,
+                          fault=FaultSpec(mode="nan", iteration=3),
+                          persistent=True)
+    assert rep.converged
+    assert rep.rung == ("backend:reference",)
+    assert [a.rung for a in rep.attempts] == \
+        ["initial", "restart", "backend:reference"]
+    assert abs(int(rep.iterations[0]) - int(ref.iterations)) <= 1
+    dx = float(jnp.max(jnp.abs(rep.x - ref.x)))
+    assert dx < 1e-4, dx
+
+
+def test_resilient_honest_failure_when_ladder_exhausted(poisson64):
+    """reference backend + fp64 leaves only the restart rung; a persistent
+    fault must surface as converged=False with the full audit trail."""
+    _, prob, b = poisson64
+    rep = solve_resilient(prob, b, tol=1e-10, max_iter=300,
+                          fault=FaultSpec(mode="nan", iteration=3),
+                          persistent=True)
+    assert not rep.converged and not rep.ok
+    assert [a.rung for a in rep.attempts] == ["initial", "restart"]
+    assert all(int(a.status[0]) == SolveStatus.DIVERGED
+               for a in rep.attempts)
+    assert np.isfinite(np.asarray(rep.x)).all()
+
+
+def test_resilient_batched_retries_only_failed_columns(poisson64):
+    """nrhs=4 with a transient strike on column 2: only that column re-runs
+    on the restart rung; sibling answers and rungs are untouched."""
+    mesh, _, _ = poisson64
+    prob = nekbone.setup_problem(mesh, variant="trilinear",
+                                 dtype=jnp.float64, nrhs=4)
+    rng = np.random.default_rng(2)
+    xs = jnp.asarray(rng.standard_normal((mesh.n_global, 4)))
+    bs = nekbone.rhs_from_solution(prob, xs)
+    rep = solve_resilient(prob, bs, tol=1e-10, max_iter=300,
+                          fault=FaultSpec(mode="nan", iteration=2,
+                                          column=2),
+                          persistent=False)
+    assert rep.converged
+    assert rep.rung == ("initial", "initial", "restart", "initial")
+    assert rep.attempts[1].columns == (2,)
+    ref = nekbone.solve(prob, bs, tol=1e-10, max_iter=300)
+    dx = float(jnp.max(jnp.abs(rep.x - ref.x)))
+    assert dx < 1e-6, dx
+
+
+def test_resilient_policy_can_disable_rungs(poisson64):
+    _, prob, b = poisson64
+    rep = solve_resilient(prob, b,
+                          RetryPolicy(restart=False,
+                                      backend_fallback=False,
+                                      precision_fallback=False),
+                          tol=1e-10, max_iter=300,
+                          fault=FaultSpec(mode="nan", iteration=3))
+    assert not rep.converged
+    assert [a.rung for a in rep.attempts] == ["initial"]
+
+
+# --------------------------------------------------------------------------
+# unified failure vocabulary with training/fault_tolerance
+# --------------------------------------------------------------------------
+
+def test_failure_injector_from_specs():
+    from repro.training.fault_tolerance import (FailureInjector,
+                                                SimulatedFailure as SF)
+
+    assert SF is SimulatedFailure  # one canonical class, re-exported
+    inj = FailureInjector.from_specs([
+        FaultSpec(mode="nan", iteration=2),
+        FaultSpec(mode="bitflip", iteration=5),
+        FaultSpec(mode="drop_exchange", iteration=7),
+    ], straggle_seconds=0.0)
+    assert inj.fail_at == (2, 5)     # point corruptions -> hard failures
+    assert inj.straggle_at == (7,)   # lost exchange -> straggler
+    with pytest.raises(SimulatedFailure):
+        for step in range(4):
+            inj.check(step)
+    inj.check(2)                     # fires once, then the step is clean
+
+
+# --------------------------------------------------------------------------
+# solve-as-a-service skeleton
+# --------------------------------------------------------------------------
+
+def test_solve_service_drains_and_reports(poisson64):
+    from repro.serving.solve_service import SolveRequest, SolveService
+
+    mesh, prob, _ = poisson64
+    svc = SolveService(prob, max_batch=2, tol=1e-10, max_iter=300)
+    rng = np.random.default_rng(3)
+    bs = [nekbone.rhs_from_solution(
+        prob, jnp.asarray(rng.standard_normal(mesh.n_global)))
+        for _ in range(3)]
+    reqs = [SolveRequest(uid=i, b=b) for i, b in enumerate(bs)]
+    for req in reqs:
+        svc.submit(req)
+    steps = svc.run_until_drained()
+    assert steps == 2                 # 3 requests / max_batch=2
+    assert not svc.queue
+    for req, b in zip(reqs, bs):
+        assert req.done
+        assert req.report.converged
+        assert req.report.x.shape == b.shape
+        r = np.asarray(b, np.float64) - np.asarray(
+            prob.op(req.report.x), np.float64)
+        assert float(np.sqrt((r * r).sum())) < 1e-8
+
+
+def test_solve_service_rejects_batched_rhs(poisson64):
+    from repro.serving.solve_service import SolveRequest, SolveService
+
+    mesh, prob, _ = poisson64
+    svc = SolveService(prob)
+    with pytest.raises(ValueError, match="single"):
+        svc.submit(SolveRequest(uid=0, b=jnp.zeros((mesh.n_global, 2))))

@@ -1,0 +1,221 @@
+"""Sharded resilience gates (subprocess device-parity pattern).
+
+Covers the multi-device half of the resilient-solve acceptance:
+
+- an injected NaN is detected within ONE iteration on 2 and 4 devices,
+  through BOTH exchange paths (interface psum and neighbour ppermute),
+  for nrhs 1 and 4, with healthy columns isolated;
+- `drop_exchange` — the fault that does NOT trip the in-loop NaN check —
+  is caught by `solve_resilient`'s true-residual verification and cured
+  by the restart rung;
+- the HLO collective census: the in-loop health machinery adds ZERO
+  cross-shard collectives — enabling the stagnation window or compiling
+  with a fault key leaves the all-reduce/collective-permute counts of
+  the compiled solve IDENTICAL, and the PR3/PR4 gates (one interface
+  psum per apply / 2x neighbour-round permutes per solve) still hold on
+  the detection-enabled build.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str, devices: int) -> list:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return [json.loads(line) for line in out.stdout.strip().splitlines()
+            if line.startswith("{")]
+
+
+_DETECT_SCRIPT = """
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import mesh_gen, nekbone
+from repro.distributed.context import make_solver_ctx
+from repro.resilience.inject import FaultSpec
+
+devices = %(devices)d
+assert jax.device_count() == devices
+mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3), seed=3)
+rng = np.random.default_rng(0)
+for exchange in ("psum", "neighbour"):
+    for nrhs in (1, 4):
+        ctx = make_solver_ctx(devices=devices, nrhs=nrhs,
+                              exchange=exchange)
+        sh = nekbone.setup_problem(mesh, variant="trilinear",
+                                   dtype=jnp.float32, shard_ctx=ctx,
+                                   nrhs=nrhs)
+        shape = (mesh.n_global,) if nrhs == 1 else (mesh.n_global, nrhs)
+        x_true = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        b = nekbone.rhs_from_solution(sh, x_true)
+        col = None if nrhs == 1 else 2
+        spec = FaultSpec(mode="nan", iteration=3, shard=devices - 1,
+                         column=col)
+        res = nekbone.solve(sh, b, tol=1e-6, max_iter=300, fault=spec)
+        clean = nekbone.solve(sh, b, tol=1e-6, max_iter=300)
+        print(json.dumps({
+            "exchange": exchange, "nrhs": nrhs, "col": col,
+            "status": [int(s) for s in np.atleast_1d(res.status)],
+            "iters": [int(i) for i in np.atleast_1d(res.iterations)],
+            "clean_status": [int(s)
+                             for s in np.atleast_1d(clean.status)],
+            "clean_iters": [int(i)
+                            for i in np.atleast_1d(clean.iterations)],
+            "finite": bool(jnp.isfinite(res.x).all())}))
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_sharded_nan_detected_within_one_iteration(devices):
+    from repro.resilience import SolveStatus
+
+    rows = _run(_DETECT_SCRIPT % {"devices": devices}, devices)
+    assert len(rows) == 4   # {psum, neighbour} x {nrhs 1, 4}
+    for r in rows:
+        assert r["finite"], r
+        assert all(s == SolveStatus.CONVERGED for s in r["clean_status"])
+        if r["col"] is None:
+            assert all(s == SolveStatus.DIVERGED for s in r["status"]), r
+            assert all(i == 3 for i in r["iters"]), r
+        else:
+            # only the struck column diverges, at the fault iteration;
+            # siblings match the clean solve exactly
+            for j, (s, i) in enumerate(zip(r["status"], r["iters"])):
+                if j == r["col"]:
+                    assert s == SolveStatus.DIVERGED and i == 3, r
+                else:
+                    assert s == SolveStatus.CONVERGED, r
+                    assert i == r["clean_iters"][j], r
+
+
+def test_drop_exchange_caught_by_verification_and_restart():
+    """The lost-message fault never makes rr non-finite — the solver may
+    even 'converge' on the decoupled recursive residual.  solve_resilient
+    must refuse the answer (true-residual audit) and recover via a clean
+    restart."""
+    rows = _run(textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from repro.core import mesh_gen, nekbone
+        from repro.distributed.context import make_solver_ctx
+        from repro.resilience.inject import FaultSpec
+        from repro.resilience.retry import solve_resilient
+
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
+                                         seed=3)
+        rng = np.random.default_rng(0)
+        x_true = jnp.asarray(rng.standard_normal(mesh.n_global),
+                             jnp.float32)
+        for exchange in ("psum", "neighbour"):
+            ctx = make_solver_ctx(devices=2, exchange=exchange)
+            sh = nekbone.setup_problem(mesh, variant="trilinear",
+                                       dtype=jnp.float32, shard_ctx=ctx)
+            b = nekbone.rhs_from_solution(sh, x_true)
+            spec = FaultSpec(mode="drop_exchange", iteration=2, shard=1)
+            rep = solve_resilient(sh, b, tol=1e-6, max_iter=300,
+                                  fault=spec, persistent=False)
+            ref = nekbone.solve(sh, b, tol=1e-6, max_iter=300)
+            print(json.dumps({
+                "exchange": exchange,
+                "converged": rep.converged,
+                "rungs": [a.rung for a in rep.attempts],
+                "initial_failed": [int(c) for c in
+                                   rep.attempts[0].failed_columns],
+                "initial_status": int(rep.attempts[0].status[0]),
+                "true_residual": float(rep.true_residual[0]),
+                "dx": float(jnp.max(jnp.abs(
+                    rep.x - ref.x.astype(rep.x.dtype))))}))
+    """), devices=2)
+    from repro.resilience import SolveStatus, is_failure
+
+    assert len(rows) == 2
+    for r in rows:
+        # the corrupted attempt must NOT be accepted, whatever status the
+        # solver reported (BREAKDOWN, MAXITER, or a demoted lying
+        # CONVERGED)
+        assert r["initial_failed"] == [0], r
+        assert is_failure(r["initial_status"]) or \
+            r["initial_status"] == SolveStatus.CONVERGED, r
+        assert r["converged"], r
+        assert r["rungs"] == ["initial", "restart"], r
+        assert r["true_residual"] < 1e-4, r
+        assert r["dx"] < 5e-3, r
+
+
+def test_hlo_census_detection_adds_zero_collectives():
+    """Acceptance gate: compiling the solve with the stagnation window on,
+    or with a fault key, changes NO collective counts — the health checks
+    ride entirely on scalars the iteration already reduces.  The PR3
+    (one interface psum per apply, two per solve) and PR4 (2x
+    neighbour-round permutes, zero interface psums) censuses hold on the
+    detection-enabled build, and nrhs=4 pays exactly the nrhs=1 counts."""
+    rows = _run(textwrap.dedent("""
+        import json, re
+        import jax, jax.numpy as jnp
+        from repro.core import mesh_gen, nekbone
+        from repro.distributed.context import make_solver_ctx
+        from repro.resilience.inject import FaultSpec
+
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
+                                         seed=3)
+        allred = re.compile(r" all-reduce(?:-start)?\\(")
+        cperm = re.compile(r" collective-permute(?:-start)?\\(")
+        for exchange in ("psum", "neighbour"):
+            for nrhs in (1, 4):
+                ctx = make_solver_ctx(devices=4, nrhs=nrhs,
+                                      exchange=exchange)
+                sh = nekbone.setup_problem(mesh, variant="trilinear",
+                                           dtype=jnp.float32,
+                                           shard_ctx=ctx, nrhs=nrhs)
+                ns = int(sh.partition.n_shared)
+                dims = str(ns) + (r",%d" % nrhs if nrhs > 1 else "")
+                iface = re.compile(r"= f32\\[" + dims
+                                   + r"\\]\\S* all-reduce(?:-start)?\\(")
+                shape = (mesh.n_global, nrhs) if nrhs > 1 \
+                    else (mesh.n_global,)
+                B = jnp.zeros(shape, jnp.float32)
+                spec = FaultSpec(mode="nan", iteration=3)
+
+                def census(**kw):
+                    txt = jax.jit(lambda b: sh.run_pcg(
+                        b, 1e-6, 300, **kw)).lower(B).compile().as_text()
+                    return {"ar": len(allred.findall(txt)),
+                            "cp": len(cperm.findall(txt)),
+                            "iface": len(iface.findall(txt))}
+                base = census()
+                windowed = census(stagnation_window=8)
+                faulted = census(fault=spec)
+                rounds = 2 * len(sh.partition.nbr_offsets)
+                print(json.dumps({
+                    "exchange": exchange, "nrhs": nrhs,
+                    "rounds": rounds, "base": base,
+                    "windowed": windowed, "faulted": faulted}))
+    """), devices=4)
+    assert len(rows) == 4
+    by_exchange = {}
+    for r in rows:
+        assert r["windowed"] == r["base"], r
+        assert r["faulted"] == r["base"], r
+        if r["exchange"] == "psum":
+            assert r["base"]["iface"] == 2, r   # PR3 gate
+            assert r["base"]["cp"] == 0, r
+        else:
+            assert r["base"]["iface"] == 0, r   # PR4 gate
+            assert r["base"]["cp"] == 2 * r["rounds"], r
+        by_exchange.setdefault(r["exchange"], []).append(r["base"])
+    for exchange, counts in by_exchange.items():
+        # the RHS batch rides the same collectives: equal totals at nrhs=4
+        assert counts[0] == counts[1], (exchange, counts)

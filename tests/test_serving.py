@@ -62,3 +62,22 @@ def test_engine_continuous_batching(setup, rng):
     # 1st token comes from prefill, so 2 decode steps/request;
     # 5 requests over 2 slots -> at least ceil(5/2)*2 = 6 lock-step waves
     assert steps >= 6
+
+
+def test_run_until_drained_respects_max_steps(setup, rng):
+    """max_steps bounds the drain loop (a stuck/slow backlog cannot spin
+    forever) and a later call resumes the same queue to completion."""
+    cfg, model, params = setup
+    engine = ServeEngine(model, params, max_len=32, slots=1, eos_id=-1)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        1, cfg.vocab_size, size=4).astype(np.int32), max_new_tokens=6)
+        for i in range(2)]
+    for r in reqs:
+        engine.submit(r)
+    steps = engine.run_until_drained(max_steps=2)
+    assert steps == 2
+    assert not all(r.done for r in reqs)
+    steps2 = engine.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) == 6 for r in reqs)
+    assert steps2 > 0
