@@ -36,7 +36,7 @@ from repro.core.spectral import SpectralBasis, basis as make_basis
 from repro.resilience import inject as fault_inject
 
 __all__ = ["NekboneProblem", "ShardedNekboneProblem", "setup_problem",
-           "solve", "flop_count"]
+           "solve", "make_block_solver", "flop_count"]
 
 
 class NekboneProblem(NamedTuple):
@@ -615,6 +615,41 @@ def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
     runner = pcg_block if batched else pcg
     return runner(a_op, b_rhs, x0=x0, precond=pre, tol=tol,
                   max_iter=max_iter, stagnation_window=stagnation_window)
+
+
+def make_block_solver(problem, *, precond: str = "jacobi", tol: float = 1e-8,
+                      max_iter: int = 200, stagnation_window: int = 0,
+                      on_trace=None):
+    """A jit-wrapped, nrhs-polymorphic solve entry for padded RHS blocks.
+
+    Returns ``solve_block(b_blk, x0_blk) -> PCGResult`` with the solver
+    knobs closed over, jitted ONCE: jax keys its compilation cache on the
+    abstract shapes, so each distinct nrhs (bucket) traces exactly once and
+    every later call of that width replays the compiled executable.  `x0`
+    is a required ARRAY argument (pass zeros for a cold start — `pcg`
+    treats a zero ``x0`` identically to ``x0=None``): materializing it
+    keeps one trace shape per bucket instead of a with/without-x0 pair.
+
+    Zero-padded trailing columns are solve-neutral by construction: a zero
+    RHS column has ``r0 = 0``, converges at iteration 0, and block-PCG's
+    converged-column freeze (alpha masked to zero) keeps it from ever
+    perturbing a live column — so callers may pad a block up to a bucket
+    width and slice the result, which is what
+    `serving.bucket_cache.BucketedSolveCache` does.
+
+    ``on_trace(shape)``, if given, is called at TRACE time only (a Python
+    side effect inside the traced function runs once per compilation, not
+    per call) — the hook the serving layer's trace-count gate counts.
+    """
+
+    def solve_block(b_blk, x0_blk):
+        if on_trace is not None:
+            on_trace(tuple(b_blk.shape))
+        return solve(problem, b_blk, precond=precond, tol=tol,
+                     max_iter=max_iter, x0=x0_blk,
+                     stagnation_window=stagnation_window)
+
+    return jax.jit(solve_block)
 
 
 def flop_count(mesh: BoxMesh, d: int, helmholtz: bool, iterations: int) -> float:

@@ -33,6 +33,7 @@ compiled computation.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -109,28 +110,61 @@ class SolveReport:
 _LOW_PRECISION = ("bfloat16", "float16")
 
 
-def _default_rebuild(problem, nrhs):
+def _default_rebuild(problem, full_nrhs):
     """Rebuild factory recovering `setup_problem` arguments from a built
     problem.  Scalar lambda defaults are re-derived by `setup_problem`
     itself; per-node lambda fields cannot be recovered — callers with
-    fields must pass their own ``rebuild``."""
+    fields must pass their own ``rebuild``.
 
-    def rebuild(backend=None, dtype=None):
+    ``nrhs`` is the RHS-batch width the rebuilt problem will actually
+    solve — the ladder passes the ATTEMPTED column count per rung, since
+    fallback rungs re-run only the failed-column subset.  Baking the full
+    batch's width here (the old behaviour) handed `setup_problem` the
+    wrong shape declaration: its eagerly autotuned block size was
+    tuned/keyed for an nrhs the rung never runs.  ``nrhs=None`` falls
+    back to the full batch width.
+    """
+
+    def rebuild(backend=None, dtype=None, nrhs=None):
         return _nek.setup_problem(
             problem.mesh, variant=problem.variant, d=problem.d,
             helmholtz=problem.helmholtz,
             dirichlet=problem.mask is not None,
             dtype=dtype if dtype is not None else problem.diag.dtype,
             backend=backend if backend is not None else problem.backend,
-            shard_ctx=getattr(problem, "shard_ctx", None), nrhs=nrhs)
+            shard_ctx=getattr(problem, "shard_ctx", None),
+            nrhs=full_nrhs if nrhs is None else nrhs)
 
     return rebuild
+
+
+def _rebuild_caller(rebuild):
+    """Adapt a ``rebuild`` callable to the per-rung calling convention.
+
+    The ladder passes ``nrhs=<attempted column count>``; custom rebuilds
+    written against the original two-kwarg surface keep working — the
+    kwarg is only forwarded when the callable can accept it.
+    """
+    try:
+        params = inspect.signature(rebuild).parameters
+        takes_nrhs = "nrhs" in params or any(
+            p.kind == p.VAR_KEYWORD for p in params.values())
+    except (TypeError, ValueError):  # builtins/partials without signatures
+        takes_nrhs = True
+
+    def call(nrhs, **kwargs):
+        if takes_nrhs:
+            kwargs["nrhs"] = nrhs
+        return rebuild(**kwargs)
+
+    return call
 
 
 def solve_resilient(problem, b, policy: Optional[RetryPolicy] = None, *,
                     precond: str = "jacobi", tol: float = 1e-8,
                     max_iter: int = 200, fault=None, persistent: bool = True,
-                    rebuild: Optional[Callable] = None) -> SolveReport:
+                    rebuild: Optional[Callable] = None,
+                    solve_fn: Optional[Callable] = None) -> SolveReport:
     """Solve A x = b, detecting and recovering from failed columns.
 
     `fault` (a `resilience.inject.FaultSpec`) is the test harness's
@@ -139,6 +173,19 @@ def solve_resilient(problem, b, policy: Optional[RetryPolicy] = None, *,
     dropped there when ``persistent=False`` (a transient upset); rebuild
     rungs always run clean.  Verification always runs through the ORIGINAL
     problem's un-faulted operator.
+
+    `rebuild(backend=None, dtype=None, nrhs=None)` builds the fallback
+    rungs' problems; the ladder passes ``nrhs=<attempted column count>``
+    (failed-column subsets, not the full batch) so an eagerly autotuned
+    rebuild is tuned for the shape it actually solves.  Rebuilds that do
+    not accept ``nrhs`` are called without it.
+
+    `solve_fn(prob, b, x0, fault) -> PCGResult` overrides how each rung's
+    solve is dispatched; the default is a direct `core.nekbone.solve`
+    with this call's knobs.  The serving layer passes
+    `serving.bucket_cache.BucketedSolveCache.solve` here so every rung —
+    including failed-column subset retries — reuses the bucketed jit
+    cache instead of tracing per queue depth.
 
     Returns a `SolveReport`; ``report.converged`` is the overall verdict
     and ``report.attempts`` the full per-rung audit trail.
@@ -153,16 +200,18 @@ def solve_resilient(problem, b, policy: Optional[RetryPolicy] = None, *,
         else np.sqrt(np.sum(b64 * b64))[None]
     eps = float(jnp.finfo(problem.diag.dtype).eps)
     thresh = policy.verify_factor * np.maximum(tol, eps * bnorm)
-    if rebuild is None:
-        rebuild = _default_rebuild(problem, nrhs)
+    rebuild = _rebuild_caller(rebuild if rebuild is not None
+                              else _default_rebuild(problem, nrhs))
 
-    def run(prob, b_arr, x0, flt):
-        return _nek.solve(prob, jnp.asarray(b_arr, prob.diag.dtype),
-                          precond=precond, tol=tol, max_iter=max_iter,
-                          x0=None if x0 is None
-                          else jnp.asarray(x0, prob.diag.dtype),
-                          stagnation_window=policy.stagnation_window,
-                          fault=flt)
+    if solve_fn is None:
+        def solve_fn(prob, b_arr, x0, flt):
+            return _nek.solve(prob, jnp.asarray(b_arr, prob.diag.dtype),
+                              precond=precond, tol=tol, max_iter=max_iter,
+                              x0=None if x0 is None
+                              else jnp.asarray(x0, prob.diag.dtype),
+                              stagnation_window=policy.stagnation_window,
+                              fault=flt)
+    run = solve_fn
 
     def true_residual(x_full):
         # the clean operator of the ORIGINAL problem is the ground truth —
@@ -208,25 +257,28 @@ def solve_resilient(problem, b, policy: Optional[RetryPolicy] = None, *,
     failed = ~ok
 
     # --- the escalation ladder ------------------------------------------
+    # builders take the ATTEMPTED column count: fallback rungs solve only
+    # the failed-column subset, so a rebuilt problem must be declared (and
+    # autotuned) for the subset's width, not the full batch's
     ladder = []
     if policy.restart:
-        ladder.append(("restart", lambda: problem,
+        ladder.append(("restart", lambda n: problem,
                        fault if persistent else None, True))
     if policy.backend_fallback and problem.backend == "pallas":
         ladder.append(("backend:reference",
-                       lambda: rebuild(backend="reference"), None,
+                       lambda n: rebuild(n, backend="reference"), None,
                        policy.warm_start))
     if policy.precision_fallback and \
             problem.diag.dtype.name in _LOW_PRECISION:
         ladder.append(("precision:float32",
-                       lambda: rebuild(dtype=jnp.float32), None,
+                       lambda n: rebuild(n, dtype=jnp.float32), None,
                        policy.warm_start))
 
     for name, build, flt, warm in ladder:
         if not failed.any() or len(attempts) >= policy.max_attempts:
             break
         cols = np.nonzero(failed)[0]
-        prob2 = build()
+        prob2 = build(len(cols))
         # a warm start is only warm if the iterate actually beats x0 = 0:
         # a fault that never trips the in-loop checks (drop_exchange) lets
         # the iterate drift arbitrarily far before verification catches

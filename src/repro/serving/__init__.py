@@ -1,1 +1,3 @@
-"""Serving: continuous-batching decode engine over fixed slots."""
+"""Serving: continuous-batching decode engine over fixed slots
+(`serving.engine`) and the bucketed solve-as-a-service loop
+(`serving.solve_service` + `serving.bucket_cache`)."""

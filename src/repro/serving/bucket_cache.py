@@ -1,0 +1,216 @@
+"""Bucketed compilation cache for block resilient solves.
+
+The serving problem: `jnp.stack(..., axis=-1)` makes the queue depth a
+SHAPE, and jax re-traces a jitted solve for every distinct shape — so a
+greedy batcher pays a fresh compile on nearly every request pattern (a
+queue of 3, then 5, then 2, ... each traces its own while_loop).  The fix
+is the pre-planned wrapper-per-batch-size split: quantize the batch axis
+to a small ladder of bucket widths (powers of two up to ``max_batch``),
+zero-pad every packed block up to its bucket, and keep one jitted solve
+per bucket.  After a one-time warmup of the ladder, NO request pattern
+pays a trace — machine-checked by the trace counter this module carries.
+
+Padding is solve-neutral and invisible to callers: a zero RHS column has
+``r0 = 0``, converges at iteration 0, and block-PCG's converged-column
+freeze keeps it from perturbing live columns (its per-column alpha/beta
+are masked to zero; per-column dots contract only that column's slice),
+so padded columns cannot flip a real column's status.  `solve` slices
+the padded columns back off before returning — they are masked out of
+convergence accounting and never reach a caller (or a `SolveReport`).
+
+Cache entries are keyed by ``(mesh-id, equation, variant, d, backend,
+dtype, nrhs-bucket)`` — everything that selects a distinct compiled
+computation for a fixed (tol, max_iter, precond) cache.  The rebuilt
+problems of `resilience.retry.solve_resilient`'s fallback rungs
+(backend:reference, precision:float32) key their own entries, and a
+failed-column SUBSET solve re-enters through the same ladder (a 3-of-8
+retry pads to bucket 4), so retries reuse warm compilations too.
+
+Per-node lambda FIELDS are not part of the key (they are not recoverable
+from a built problem); a service serving multiple field-coefficient
+problems on one mesh must use one cache per problem.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nekbone as _nek
+from repro.core.pcg import PCGResult
+
+__all__ = ["bucket_sizes", "problem_key", "BucketedSolveCache"]
+
+
+def bucket_sizes(max_batch: int) -> tuple:
+    """The bucket ladder: powers of two up to ``max_batch``, plus
+    ``max_batch`` itself when it is not a power of two (so a full queue
+    never pads past the service's own batch cap)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    out = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+def problem_key(problem) -> tuple:
+    """The bucket-free part of a problem's cache key.
+
+    ``id(mesh)`` is the in-process mesh identity: the fallback rungs
+    rebuild AROUND the same mesh object, so their entries share it while
+    differing in backend/dtype exactly as their compilations do.
+    """
+    return (id(problem.mesh), "helmholtz" if problem.helmholtz else
+            "poisson", problem.variant, problem.d, problem.backend,
+            problem.diag.dtype.name)
+
+
+def _pad_cols(x, pad: int):
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+
+
+class BucketedSolveCache:
+    """One jit cache of block solves per (problem-key, nrhs-bucket).
+
+    ``traces`` counts every compilation the cache performs — solver AND
+    verification-operator traces; the serving trace gate asserts it stays
+    flat across a warm request stream.  The solver knobs (precond, tol,
+    max_iter, stagnation_window) are fixed per cache: they are part of
+    the compiled computation, so a service with different knobs needs its
+    own cache.
+    """
+
+    def __init__(self, *, max_batch: int, precond: str = "jacobi",
+                 tol: float = 1e-8, max_iter: int = 200,
+                 stagnation_window: int = 0):
+        self.buckets = bucket_sizes(max_batch)
+        self.precond = precond
+        self.tol = tol
+        self.max_iter = max_iter
+        self.stagnation_window = stagnation_window
+        self.traces = 0
+        self._solvers = {}    # problem_key + (bucket,) -> jitted solver
+        self._verify = {}     # problem_key -> jitted clean operator
+        self._pristine = {}   # problem_key -> first-registered problem
+
+    def register(self, problem) -> tuple:
+        """Pin `problem` as the canonical build for its key.
+
+        The service verifies through a problem whose ``op`` is replaced
+        by :meth:`verify_op`; registering the ORIGINAL problem first
+        makes sure cache-created solvers close over the clean build, not
+        the op-wrapped clone (their keys are identical by construction).
+        """
+        key = problem_key(problem)
+        self._pristine.setdefault(key, problem)
+        return key
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest ladder bucket >= n (n itself beyond the ladder: an
+        oversized block solves unbucketed rather than failing, it just
+        pays its own trace)."""
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return n
+
+    def _count(self, _shape):
+        self.traces += 1
+
+    def _solver(self, problem, bucket: int):
+        key = self.register(problem) + (bucket,)
+        fn = self._solvers.get(key)
+        if fn is None:
+            fn = _nek.make_block_solver(
+                self._pristine[key[:-1]], precond=self.precond,
+                tol=self.tol, max_iter=self.max_iter,
+                stagnation_window=self.stagnation_window,
+                on_trace=self._count)
+            self._solvers[key] = fn
+        return fn
+
+    def solve(self, problem, b, x0=None) -> PCGResult:
+        """Solve through the bucket ladder; pads up, slices back.
+
+        `b` is a stacked block (trailing RHS axis) or a single RHS; the
+        result matches `core.nekbone.solve`'s shape contract for the
+        UNPADDED input — padded columns never leave this method.
+        """
+        dtype = problem.diag.dtype
+        b = jnp.asarray(b, dtype)
+        base = 1 if problem.d == 1 else 2
+        squeeze = b.ndim == base
+        if squeeze:
+            b = b[..., None]
+            x0 = None if x0 is None else jnp.asarray(x0, dtype)[..., None]
+        k = b.shape[-1]
+        pad = self.bucket_for(k) - k
+        bp = _pad_cols(b, pad)
+        x0p = jnp.zeros_like(bp) if x0 is None else _pad_cols(
+            jnp.asarray(x0, dtype), pad)
+        res = self._solver(problem, bp.shape[-1])(bp, x0p)
+        res = PCGResult(res.x[..., :k], res.iterations[:k],
+                        res.residual[:k], res.initial_residual[:k],
+                        res.breakdown[:k], res.status[:k])
+        if squeeze:
+            res = PCGResult(res.x[..., 0], res.iterations[0],
+                            res.residual[0], res.initial_residual[0],
+                            res.breakdown[0], res.status[0])
+        return res
+
+    def verify_op(self, problem):
+        """A bucket-shaped clean operator for true-residual verification.
+
+        `resilience.retry.solve_resilient` re-applies ``problem.op`` to
+        every candidate answer; on the raw problem that call traces per
+        queue depth (and on a sharded problem re-traces the whole
+        shard_map pipeline).  This wrapper pads the column axis up to the
+        block's bucket, applies ONE jitted operator per (key, bucket)
+        shape, and slices back — warmed alongside the solver ladder, so
+        verification never traces on the serving path either.
+        """
+        key = self.register(problem)
+        base = 1 if problem.d == 1 else 2
+
+        def raw(x):
+            fn = self._verify.get(key)
+            if fn is None:
+                prob = self._pristine[key]
+
+                def traced(xx):
+                    self._count(tuple(xx.shape))
+                    return prob.op(xx)
+
+                fn = jax.jit(traced)
+                self._verify[key] = fn
+            return fn(x)
+
+        def apply(x):
+            if x.ndim == base:
+                return raw(x[..., None])[..., 0]
+            k = x.shape[-1]
+            return raw(_pad_cols(x, self.bucket_for(k) - k))[..., :k]
+
+        return apply
+
+    def warmup(self, problem) -> int:
+        """Trace + compile the full bucket ladder (solver and verify op)
+        on zero blocks; returns the number of traces performed.  A zero
+        RHS converges at iteration 0, so warmup costs compilations, not
+        solve work."""
+        before = self.traces
+        vop = self.verify_op(problem)
+        shape = (problem.mesh.n_global,) if problem.d == 1 else \
+            (problem.mesh.n_global, problem.d)
+        for bucket in self.buckets:
+            z = jnp.zeros(shape + (bucket,), problem.diag.dtype)
+            jax.block_until_ready(self.solve(problem, z).x)
+            jax.block_until_ready(vop(z))
+        return self.traces - before

@@ -1,4 +1,4 @@
-"""Solve-as-a-service skeleton: batched resilient solves behind a queue.
+"""Solve-as-a-service: bucketed, batched resilient solves behind a queue.
 
 The solver-side sibling of `serving.engine`: clients submit right-hand
 sides, the service packs up to `max_batch` of them into ONE block-PCG
@@ -10,28 +10,56 @@ its caller will remember to check convergence, so the status, the
 verified true residual, and the recovery audit trail travel WITH the
 answer (a caller who wants the field reads ``report.x``).
 
-This is the ROADMAP "solve-as-a-service" direction's minimal core: the
-batching policy is greedy FIFO and the loop is synchronous; scheduling
-sophistication can grow around the same submit/step surface the token
-engine uses.
+This is the production loop over the PR 6 skeleton:
+
+- **No request pays a trace after warmup.**  Packed blocks are
+  zero-padded up to a bucket ladder of widths (powers of two up to
+  `max_batch`) and solved through a
+  `serving.bucket_cache.BucketedSolveCache` of jitted solves — one
+  compilation per bucket, warmed once by :meth:`SolveService.warmup`,
+  replayed for every later request pattern.  Padded columns converge at
+  iteration 0, are frozen by block-PCG, and are sliced off before any
+  report is built; `trace_count` exposes the cache's trace counter for
+  the machine-checked zero-trace gate (benchmarks/bench_serve.py).
+- **Requests are validated at the door.**  `submit` checks the RHS shape
+  against the problem's dof layout and that the payload casts to the
+  problem dtype, so a malformed request is rejected at submit time
+  instead of throwing mid-`step` and taking down its batch-mates.
+- **A poisoned request cannot lose its batch.**  `step` pops requests
+  from the queue only AFTER a successful solve; if the batched solve
+  raises, each request re-runs alone and only the offending one is
+  failed — with the exception recorded on ``request.error`` as a
+  structured answer (``done`` is True either way).
+- **Per-request latency, not per-block latency.**  Each served request
+  carries ``queue_s`` (submit -> solve start), ``solve_s`` (its share of
+  the block solve, attributed by its OWN column's iteration count — the
+  per-column early-return contract: a request's latency is its column's
+  convergence, not the block's), and ``wall_s`` (their sum).
+
+The batching policy is greedy FIFO and the loop is synchronous; async
+scheduling / admission control can grow around the same submit/step
+surface the token engine uses.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+import time
+from typing import Callable, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import nekbone as _nek
 from repro.resilience.retry import (RetryPolicy, SolveReport,
                                     solve_resilient)
 from repro.resilience.status import SolveStatus
+from repro.serving.bucket_cache import BucketedSolveCache
 
 __all__ = ["SolveRequest", "SolveService"]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class SolveRequest:
     """One RHS to solve: `b` is (Ng,) for d=1 problems, (Ng, d) otherwise.
 
@@ -39,47 +67,140 @@ class SolveRequest:
     `SolveReport` (length-1 per-column arrays; ``report.x`` has b's
     shape) and ``done`` is True even when the solve FAILED — failure is
     a structured answer here, not a hang; check ``report.converged``.
+    A request whose solve RAISED (rather than returning a structured
+    failure) has ``report is None`` and the exception summarized in
+    ``error``.
+
+    The latency fields are filled by the service: ``queue_s`` is the
+    time from submit to its block's solve start, ``solve_s`` its
+    attributed share of the block solve (see module docstring), and
+    ``wall_s`` their sum.  (``eq=False``: requests are identities, not
+    value tuples — the queue compares them with ``is``.)
     """
 
     uid: int
     b: jnp.ndarray
     report: Optional[SolveReport] = None
     done: bool = False
+    error: Optional[str] = None
+    submitted_at: Optional[float] = None
+    queue_s: Optional[float] = None
+    solve_s: Optional[float] = None
+    wall_s: Optional[float] = None
 
 
 class SolveService:
-    """Greedy-FIFO batching of resilient solves on one fixed problem."""
+    """Greedy-FIFO batching of resilient solves on one fixed problem.
+
+    ``rebuild`` is forwarded to `solve_resilient` (problems with
+    per-node lambda fields need it — see `resilience.retry`).  The
+    bucket ladder is derived from ``max_batch``; call :meth:`warmup`
+    once before serving to pre-compile it (otherwise the first request
+    of each bucket width pays the trace instead).
+    """
 
     def __init__(self, problem, policy: Optional[RetryPolicy] = None,
                  max_batch: int = 4, precond: str = "jacobi",
-                 tol: float = 1e-8, max_iter: int = 200):
+                 tol: float = 1e-8, max_iter: int = 200,
+                 rebuild: Optional[Callable] = None):
         self.problem = problem
         self.policy = policy or RetryPolicy()
         self.max_batch = max_batch
         self.precond = precond
         self.tol = tol
         self.max_iter = max_iter
+        self.rebuild = rebuild
         self.queue: List[SolveRequest] = []
+        self.served = 0
+        self.errors = 0
+        self.cache = BucketedSolveCache(
+            max_batch=max_batch, precond=precond, tol=tol,
+            max_iter=max_iter,
+            stagnation_window=self.policy.stagnation_window)
+        self.cache.register(problem)
+        # verification runs through the SAME bucket ladder: the clean
+        # operator is re-applied per audit, and on the raw problem that
+        # call would trace per queue depth (NamedTuple _replace keeps
+        # every other field — rebuild defaults, dtype, mesh — intact)
+        self._verify_problem = problem._replace(
+            op=self.cache.verify_op(problem))
+
+    @property
+    def trace_count(self) -> int:
+        """Compilations performed so far (solver + verification op) —
+        the quantity the zero-trace-after-warmup gate watches."""
+        return self.cache.traces
+
+    def warmup(self) -> int:
+        """Pre-compile the bucket ladder; returns the trace count paid.
+        After this, serving any mix of queue depths 1..max_batch
+        compiles nothing new (machine-checked in bench_serve.py)."""
+        return self.cache.warmup(self.problem)
 
     def submit(self, req: SolveRequest):
+        """Validate and enqueue one request.
+
+        Rejection happens AT THE DOOR: a wrong-shape or uncastable `b`
+        raises here, where only the offender is affected — not inside
+        `step`, where a bad `jnp.stack` operand used to take down the
+        whole batch it was packed with.
+        """
         base = 1 if self.problem.d == 1 else 2
-        if np.ndim(req.b) != base:
+        expect = (self.problem.mesh.n_global,) if base == 1 else \
+            (self.problem.mesh.n_global, self.problem.d)
+        shape = tuple(np.shape(req.b))
+        if len(shape) != base:
             raise ValueError(
                 f"SolveRequest.b must be a single rank-{base} RHS for a "
                 f"d={self.problem.d} problem (the service does the "
-                f"batching), got shape {np.shape(req.b)}")
+                f"batching), got shape {shape}")
+        if shape != expect:
+            raise ValueError(
+                f"SolveRequest.b has shape {shape} but this problem has "
+                f"{self.problem.mesh.n_global} dofs"
+                + ("" if base == 1 else f" x d={self.problem.d}")
+                + f" — expected {expect}")
+        try:
+            req.b = jnp.asarray(req.b, self.problem.diag.dtype)
+        except (TypeError, ValueError) as e:
+            raise TypeError(
+                f"SolveRequest.b does not cast to the problem dtype "
+                f"{self.problem.diag.dtype.name}: {e}") from e
+        req.submitted_at = time.perf_counter()
         self.queue.append(req)
 
-    def step(self) -> int:
-        """Solve one batch of queued requests; returns #requests served."""
-        batch = self.queue[:self.max_batch]
-        if not batch:
-            return 0
-        del self.queue[:len(batch)]
-        b_blk = jnp.stack([jnp.asarray(r.b) for r in batch], axis=-1)
-        rep = solve_resilient(self.problem, b_blk, self.policy,
+    def _solve_fn(self, prob, b, x0, fault):
+        """Rung dispatch for `solve_resilient`: bucketed jit cache on the
+        clean path; a fault key is jit-static anyway (every spec is its
+        own compilation), so injection harness runs bypass the cache."""
+        if fault is not None:
+            return _nek.solve(prob, jnp.asarray(b, prob.diag.dtype),
                               precond=self.precond, tol=self.tol,
-                              max_iter=self.max_iter)
+                              max_iter=self.max_iter,
+                              x0=None if x0 is None
+                              else jnp.asarray(x0, prob.diag.dtype),
+                              stagnation_window=self.policy
+                              .stagnation_window, fault=fault)
+        return self.cache.solve(prob, b, x0)
+
+    def _serve(self, batch: List[SolveRequest]):
+        """Solve one packed batch and distribute per-request reports.
+        Does NOT touch the queue — popping is the caller's job, after
+        success."""
+        t0 = time.perf_counter()
+        b_blk = jnp.stack([r.b for r in batch], axis=-1)
+        rep = solve_resilient(self._verify_problem, b_blk, self.policy,
+                              precond=self.precond, tol=self.tol,
+                              max_iter=self.max_iter, rebuild=self.rebuild,
+                              solve_fn=self._solve_fn)
+        block_wall = time.perf_counter() - t0
+        # per-column early return: request j's solve latency is its own
+        # column's convergence point, attributed from the per-column
+        # iteration counts (+1 for the initial-residual application each
+        # column shares), not the block's completion
+        iters = np.maximum(
+            np.asarray(rep.iterations, np.int64), 0) + 1
+        frac = iters / iters.max()
         for j, req in enumerate(batch):
             req.report = SolveReport(
                 x=rep.x[..., j],
@@ -92,7 +213,50 @@ class SolveService:
                 # the audit trail is batch-global: attempts record which
                 # columns they ran, so sharing it keeps the provenance
                 attempts=rep.attempts)
+            req.error = None
+            req.queue_s = t0 - req.submitted_at
+            req.solve_s = block_wall * float(frac[j])
+            req.wall_s = req.queue_s + req.solve_s
             req.done = True
+        self.served += len(batch)
+
+    def _fail(self, req: SolveRequest, exc: BaseException, t0: float):
+        """A solve that RAISED (not a structured failure): record the
+        exception on the offending request and return it, done."""
+        req.report = None
+        req.error = f"{type(exc).__name__}: {exc}"
+        req.queue_s = t0 - req.submitted_at
+        req.solve_s = time.perf_counter() - t0
+        req.wall_s = req.queue_s + req.solve_s
+        req.done = True
+        self.errors += 1
+
+    def step(self) -> int:
+        """Serve one batch of queued requests; returns #requests handled.
+
+        Requests are popped AFTER a successful solve — an exception in
+        the batched solve no longer loses the batch.  On a batch
+        exception every member re-runs alone: the offending request(s)
+        come back ``done`` with a structured ``error``, their batch-mates
+        get their answers.
+        """
+        batch = list(self.queue[:self.max_batch])
+        if not batch:
+            return 0
+        try:
+            self._serve(batch)
+        except Exception:
+            # isolate the offender: one poisoned request must not take
+            # down (or retain in-queue forever) its batch-mates
+            for req in batch:
+                t0 = time.perf_counter()
+                try:
+                    self._serve([req])
+                except Exception as exc:
+                    self._fail(req, exc, t0)
+                self.queue = [r for r in self.queue if r is not req]
+            return len(batch)
+        del self.queue[:len(batch)]
         return len(batch)
 
     def run_until_drained(self, max_steps: int = 100) -> int:

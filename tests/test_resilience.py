@@ -365,6 +365,63 @@ def test_resilient_batched_retries_only_failed_columns(poisson64):
     assert dx < 1e-6, dx
 
 
+def test_resilient_rebuild_gets_subset_nrhs():
+    """Regression: fallback rungs solve only the failed-column SUBSET, but
+    the rebuild used to bake the FULL batch width — a 1-of-8 retry handed
+    `setup_problem` nrhs=8, autotuning the rebuilt problem for a shape it
+    never runs.  The ladder now passes the attempted column count: a
+    persistent strike on 1 column of an nrhs=8 pallas block must rebuild
+    with nrhs=1 (and still match the clean reference answer)."""
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 1, 4), seed=3)
+    prob = nekbone.setup_problem(mesh, variant="partial",
+                                 dtype=jnp.float32, backend="pallas",
+                                 nrhs=8)
+    rng = np.random.default_rng(5)
+    xs = jnp.asarray(rng.standard_normal((mesh.n_global, 8)), jnp.float32)
+    bs = nekbone.rhs_from_solution(prob, xs)
+    nrhs_seen = []
+
+    def spy_rebuild(backend=None, dtype=None, nrhs=None):
+        nrhs_seen.append(nrhs)
+        return nekbone.setup_problem(
+            mesh, variant="partial", dtype=jnp.float32,
+            backend=backend or "pallas", nrhs=nrhs)
+
+    rep = solve_resilient(prob, bs, tol=1e-6, max_iter=300,
+                          fault=FaultSpec(mode="nan", iteration=2,
+                                          column=2),
+                          persistent=True, rebuild=spy_rebuild)
+    assert rep.converged
+    assert nrhs_seen == [1]          # the subset width, not the batch's
+    assert rep.rung[2] == "backend:reference"
+    assert rep.attempts[2].columns == (2,)
+
+
+def test_resilient_rebuild_without_nrhs_kwarg_still_works(poisson64):
+    """A custom rebuild written against the old (backend, dtype) surface
+    must keep working: the ladder only forwards ``nrhs`` to callables
+    that can accept it."""
+    mesh, _, _ = poisson64
+    prob = nekbone.setup_problem(mesh, variant="trilinear",
+                                 dtype=jnp.bfloat16)
+    calls = []
+
+    def old_style_rebuild(backend=None, dtype=None):
+        calls.append((backend, dtype))
+        return nekbone.setup_problem(mesh, variant="trilinear",
+                                     dtype=dtype or jnp.bfloat16)
+
+    rng = np.random.default_rng(6)
+    x_true = jnp.asarray(rng.standard_normal(mesh.n_global), jnp.bfloat16)
+    b = nekbone.rhs_from_solution(prob, x_true)
+    rep = solve_resilient(prob, b, tol=1e-2, max_iter=300,
+                          fault=FaultSpec(mode="nan", iteration=2),
+                          persistent=True, rebuild=old_style_rebuild)
+    assert rep.converged
+    assert rep.rung == ("precision:float32",)
+    assert calls == [(None, jnp.float32)]
+
+
 def test_resilient_policy_can_disable_rungs(poisson64):
     _, prob, b = poisson64
     rep = solve_resilient(prob, b,
