@@ -20,11 +20,14 @@ from typing import NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.compression import halo_compress, halo_decompress
+
 __all__ = [
     "scatter", "gather", "dssum", "multiplicity",
     "shared_contrib", "apply_shared", "exchange_shared", "gather_sharded",
     "NeighbourRound", "neighbour_rounds", "neighbour_start",
-    "neighbour_finish", "exchange_neighbour", "gather_sharded_neighbour",
+    "neighbour_finish", "halo_self_round", "exchange_neighbour",
+    "gather_sharded_neighbour",
 ]
 
 
@@ -210,7 +213,7 @@ def neighbour_rounds(offsets: Sequence[int], n_shards: int,
 
 
 def neighbour_start(y_dofs: jnp.ndarray, rounds: Sequence[NeighbourRound],
-                    axis_name: str):
+                    axis_name: str, compress: Optional[str] = None):
     """Launch every ppermute of the exchange; returns the in-flight recvs.
 
     All sends read from `y_dofs` — this shard's OWN partial sums — so the
@@ -218,56 +221,155 @@ def neighbour_start(y_dofs: jnp.ndarray, rounds: Sequence[NeighbourRound],
     compute issued between `neighbour_start` and `neighbour_finish` (the
     interior elements) is dataflow-independent of the permutes and can
     overlap them.
+
+    `compress` (a `distributed.context.HALO_COMPRESS` method) encodes the
+    send buffers with `distributed.compression.halo_compress` BEFORE the
+    permutes, so the wire carries bf16 (or int8 + per-dof scale) instead
+    of the solve dtype — `shared_contrib` has already zeroed trash-padded
+    lanes, so the codec's per-row scales never see garbage.  Every part
+    of the codec rides its own ppermute with the same static perm tables;
+    `neighbour_finish` must be called with the same `compress`.
     """
     recvs = []
     for r in rounds:
         send_lo = shared_contrib(y_dofs, r.lo_idx, r.lo_mask)
         send_hi = shared_contrib(y_dofs, r.hi_idx, r.hi_mask)
-        recv_hi = jax.lax.ppermute(send_lo, axis_name, r.fwd_perm)
-        recv_lo = jax.lax.ppermute(send_hi, axis_name, r.bwd_perm)
+        if compress is not None:
+            # each codec part (payload, scales, ...) rides its own permute
+            recv_hi = tuple(jax.lax.ppermute(p, axis_name, r.fwd_perm)
+                            for p in halo_compress(send_lo, compress))
+            recv_lo = tuple(jax.lax.ppermute(p, axis_name, r.bwd_perm)
+                            for p in halo_compress(send_hi, compress))
+        else:
+            recv_hi = jax.lax.ppermute(send_lo, axis_name, r.fwd_perm)
+            recv_lo = jax.lax.ppermute(send_hi, axis_name, r.bwd_perm)
         recvs.append((recv_hi, recv_lo))
     return recvs
 
 
 def neighbour_finish(y_dofs: jnp.ndarray,
-                     rounds: Sequence[NeighbourRound], recvs) -> jnp.ndarray:
+                     rounds: Sequence[NeighbourRound], recvs,
+                     compress: Optional[str] = None) -> jnp.ndarray:
     """Accumulate the received neighbour partials into the local dofs.
 
     Each neighbour's partial is added exactly once, so a dof shared by m
     shards ends as own + (m - 1) received partials = the full global sum on
     every sharer (non-receiving shards got ppermute's zeros; padding lands
-    masked in the trash slot).
+    masked in the trash slot).  With `compress` the received wire parts
+    are decoded back to the `y_dofs` dtype first (the decode is arithmetic
+    on the already-received buffers — no further communication).
+
+    The accumulation runs at >= fp32 in CANONICAL SOURCE ORDER — round-k
+    hi-side recvs (sources s-k) by descending k, then this shard's own
+    partials (source s), then lo-side recvs (sources s+k) by ascending k
+    — so every sharer of a dof sums the identical value sequence and
+    lands on the bit-identical total, which one final cast rounds to the
+    `y_dofs` dtype.  That order contract is what makes a reduced-
+    precision exchange usable at all: the old own-partials-first order
+    differs per shard, and for a dof with >= 3 sharers the sharers'
+    independently-rounded bf16 sums drift by O(eps_bf16) per operator
+    application — the sharded bf16 inner sweeps of a ``bf16_x32`` refined
+    solve then converge on per-shard systems whose owner-wins assembly
+    satisfies none of them (caught by
+    ``tests/test_mixed_precision.py::test_sharded_refined_solve_every_wire``
+    on 4 devices, where the block element partition shares corner dofs
+    between up to 4 shards).  At fp32 the same reordering is the usual
+    harmless 1-ulp-level associativity noise.
     """
-    for r, (recv_hi, recv_lo) in zip(rounds, recvs):
-        y_dofs = y_dofs.at[r.hi_idx].add(
-            jnp.where(_expand_mask(r.hi_mask, recv_hi), recv_hi, 0.0))
-        y_dofs = y_dofs.at[r.lo_idx].add(
-            jnp.where(_expand_mask(r.lo_mask, recv_lo), recv_lo, 0.0))
-    return y_dofs
+    acc_dt = jnp.promote_types(y_dofs.dtype, jnp.float32)
+    decoded = []
+    for recv_hi, recv_lo in recvs:
+        if compress is not None:
+            recv_hi = halo_decompress(recv_hi, compress, y_dofs.dtype)
+            recv_lo = halo_decompress(recv_lo, compress, y_dofs.dtype)
+        decoded.append((recv_hi, recv_lo))
+    acc = jnp.zeros(y_dofs.shape, acc_dt)
+    for r, (recv_hi, _) in reversed(list(zip(rounds, decoded))):
+        part = jnp.where(_expand_mask(r.hi_mask, recv_hi), recv_hi, 0.0)
+        acc = acc.at[r.hi_idx].add(part.astype(acc_dt))
+    acc = acc + y_dofs.astype(acc_dt)
+    for r, (_, recv_lo) in zip(rounds, decoded):
+        part = jnp.where(_expand_mask(r.lo_mask, recv_lo), recv_lo, 0.0)
+        acc = acc.at[r.lo_idx].add(part.astype(acc_dt))
+    return acc.astype(y_dofs.dtype)
+
+
+def halo_self_round(y_dofs: jnp.ndarray, shared_idx: jnp.ndarray,
+                    shared_present: jnp.ndarray,
+                    compress: str) -> jnp.ndarray:
+    """Round this shard's OWN interface partials through the wire codec.
+
+    A lossy codec silently breaks the exchange's consistency contract.
+    Every sharer of a dof must end the exchange holding the SAME value —
+    owner-wins reassembly and the psum'd solver scalars both assume it.
+    But with compression each sharer sums its own full-precision partial
+    with the other sharers' DECODED partials, so two sharers of one dof
+    accumulate different totals, their iterates drift apart, and the solve
+    can report a residual its assembled solution does not satisfy.
+
+    The fix is to make every sharer sum the identical set of codec-rounded
+    partials: after the sends are captured (they must encode the original
+    values — the int8 codec is not idempotent), replace the shard's own
+    interface partials with their own decode(encode(·)) image.  The codec
+    is per-dof (see `halo_compress`), so this self-rounding produces bit-
+    for-bit the value every neighbour decodes from the wire.  Call between
+    `neighbour_start` and `neighbour_finish`; a no-op when the field
+    already lives at the wire precision (e.g. a bf16 operator on a bf16
+    wire).
+    """
+    vals = shared_contrib(y_dofs, shared_idx, shared_present)
+    dec = halo_decompress(halo_compress(vals, compress), compress,
+                          y_dofs.dtype)
+    return apply_shared(y_dofs, shared_idx, dec)
 
 
 def exchange_neighbour(y_dofs: jnp.ndarray,
                        rounds: Sequence[NeighbourRound],
-                       axis_name: str) -> jnp.ndarray:
+                       axis_name: str,
+                       compress: Optional[str] = None,
+                       shared_idx: Optional[jnp.ndarray] = None,
+                       shared_present: Optional[jnp.ndarray] = None
+                       ) -> jnp.ndarray:
     """Sum interface-dof contributions pairwise across neighbour shards.
 
     Numerically equivalent to `exchange_shared` (same partials, summed in
-    per-shard neighbour order instead of the psum's reduction order)."""
-    return neighbour_finish(y_dofs, rounds,
-                            neighbour_start(y_dofs, rounds, axis_name))
+    per-shard neighbour order instead of the psum's reduction order);
+    `compress` additionally rounds the partials through the wire codec —
+    the received ones on decode AND this shard's own via `halo_self_round`
+    (which needs the full interface tables `shared_idx`/`shared_present`),
+    so every sharer sums the identical codec-rounded set."""
+    recvs = neighbour_start(y_dofs, rounds, axis_name, compress=compress)
+    if compress is not None:
+        if shared_idx is None or shared_present is None:
+            raise ValueError(
+                f"exchange_neighbour: compress={compress!r} requires "
+                f"shared_idx/shared_present for the self-rounding pass "
+                f"(halo_self_round) — a lossy wire without it leaves the "
+                f"sharers of a dof holding different sums")
+        y_dofs = halo_self_round(y_dofs, shared_idx, shared_present,
+                                 compress)
+    return neighbour_finish(y_dofs, rounds, recvs, compress=compress)
 
 
 def gather_sharded_neighbour(y_local: jnp.ndarray, local_ids: jnp.ndarray,
                              n_local: int,
                              rounds: Sequence[NeighbourRound],
-                             axis_name: Optional[str]) -> jnp.ndarray:
+                             axis_name: Optional[str],
+                             compress: Optional[str] = None,
+                             shared_idx: Optional[jnp.ndarray] = None,
+                             shared_present: Optional[jnp.ndarray] = None
+                             ) -> jnp.ndarray:
     """Per-shard Q^T with the neighbour-wise exchange.
 
     Drop-in replacement for `gather_sharded`: identical post-gather state
     (every real local slot holds the full global sum) with the mesh-wide
-    interface psum replaced by point-to-point ppermute rounds.
+    interface psum replaced by point-to-point ppermute rounds (optionally
+    codec-compressed on the wire — see `neighbour_start`; `compress`
+    requires the interface tables for the self-rounding pass).
     """
     y_dofs = gather(y_local, local_ids, n_local)
     if axis_name is None:
         return y_dofs
-    return exchange_neighbour(y_dofs, rounds, axis_name)
+    return exchange_neighbour(y_dofs, rounds, axis_name, compress=compress,
+                              shared_idx=shared_idx,
+                              shared_present=shared_present)

@@ -31,7 +31,7 @@ from repro.core import gather_scatter as gs
 from repro.core import geometry
 from repro.distributed.context import shard_map_compat
 from repro.core.mesh_gen import BoxMesh, MeshPartition, partition_elements
-from repro.core.pcg import PCGResult, owned_dot, pcg, pcg_block
+from repro.core.pcg import PCGResult, owned_dot, pcg, pcg_block, refine
 from repro.core.spectral import SpectralBasis, basis as make_basis
 from repro.resilience import inject as fault_inject
 
@@ -40,6 +40,13 @@ __all__ = ["NekboneProblem", "ShardedNekboneProblem", "setup_problem",
 
 
 class NekboneProblem(NamedTuple):
+    """`op`/`diag` are ALWAYS full precision (the problem `dtype`): with
+    ``precision="bf16_x32"`` the mixed-precision machinery lives in the
+    extra ``op_lo`` field (the bfloat16 operator the inner refinement
+    sweeps run on) while everything keyed off ``diag.dtype`` — tolerance
+    eps, true-residual verification, serving casts — correctly reads the
+    OUTER precision."""
+
     op: object                  # callable global operator A(x)
     diag: jnp.ndarray           # diag(A) on global dofs (for JACOBI)
     mask: Optional[jnp.ndarray]  # Dirichlet mask (None => no mask)
@@ -49,6 +56,8 @@ class NekboneProblem(NamedTuple):
     helmholtz: bool
     variant: str
     backend: str = "reference"
+    precision: Optional[str] = None   # None (plain) or "bf16_x32"
+    op_lo: object = None              # bf16 operator for the inner sweeps
 
 
 class ShardedNekboneProblem(NamedTuple):
@@ -74,6 +83,8 @@ class ShardedNekboneProblem(NamedTuple):
     shard_ctx: object            # distributed.context.SolverShardCtx
     partition: MeshPartition
     run_pcg: object              # (b, tol, max_iter, precond=) -> PCGResult
+    precision: Optional[str] = None  # None (plain) or "bf16_x32"
+    run_refined: object = None   # sharded fp32-outer/bf16-inner runner
 
 
 def _global_op(element_op, mesh: BoxMesh, mask):
@@ -135,6 +146,9 @@ def _global_diag(mesh: BoxMesh, b: SpectralBasis, factors, lam0, lam1,
     return diag
 
 
+PRECISIONS = (None, "bf16_x32")
+
+
 def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
                   helmholtz: bool = False, lam0=None, lam1=None,
                   dirichlet: bool | None = None,
@@ -143,7 +157,8 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
                   block_elems=None,
                   interpret: bool | None = None,
                   shard_ctx=None,
-                  nrhs: int | None = None) -> NekboneProblem:
+                  nrhs: int | None = None,
+                  precision: str | None = None) -> NekboneProblem:
     """Build the global operator + Jacobi diagonal for a mesh/variant.
 
     `backend` selects the element-kernel implementation ("reference",
@@ -166,7 +181,25 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     runs at setup, outside any jit trace, with the VMEM feasibility model
     charged for the declared batch (an X window `nrhs`x larger, geometry
     unchanged).
+
+    `precision="bf16_x32"` builds the mixed-precision solve: the problem's
+    `op`/`diag` stay at full precision (`dtype` must be float32 — it IS
+    the outer precision) and a SECOND bfloat16 operator is built over the
+    same mesh/coefficients (`op_lo` here, a second sharded elem_ops set on
+    the sharded path).  `solve` then dispatches to `core.pcg.refine`: the
+    true residual and the correction accumulate in fp32, the inner PCG
+    sweeps run the bf16 operator — MXU-width compute with a full-precision
+    safety net (see DESIGN.md "Mixed precision").
     """
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; expected one "
+                         f"of {PRECISIONS}")
+    if precision == "bf16_x32" and jnp.dtype(dtype) != jnp.dtype(
+            jnp.float32):
+        raise ValueError(
+            f"precision='bf16_x32' keeps the outer solve in float32 (the "
+            f"bf16 operator is the separate inner machinery); pass "
+            f"dtype=jnp.float32, got {jnp.dtype(dtype).name}")
     b = make_basis(mesh.order)
     verts = jnp.asarray(mesh.verts, dtype=dtype)
     if nrhs is None:
@@ -202,14 +235,23 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
                     f"it.  A box decomposition (make_solver_ctx(grid="
                     f"'auto')) shrinks the interface surface and restores "
                     f"the overlap window.", UserWarning, stacklevel=2)
+    block_arg = block_elems
     block_elems = _resolve_auto_block(variant, b, d, helmholtz, dtype,
                                       backend, block_elems, interpret, nrhs,
                                       e_shard)
+    block_lo = None
+    if precision == "bf16_x32":
+        # the bf16 operator tunes its own block size: smaller windows,
+        # but a full-width fp32 accumulator (see kernels/axhelm/tune.py)
+        block_lo = _resolve_auto_block(variant, b, d, helmholtz,
+                                       jnp.bfloat16, backend, block_arg,
+                                       interpret, nrhs, e_shard)
 
     if part is not None:
         return _setup_problem_sharded(
             mesh, b, variant, d, helmholtz, lam0, lam1, mask, dtype,
-            backend, block_elems, interpret, shard_ctx, part)
+            backend, block_elems, interpret, shard_ctx, part,
+            precision, block_lo)
 
     op = axhelm_mod.make_axhelm(variant, b, verts, lam0=lam0, lam1=lam1,
                                 helmholtz=helmholtz, dtype=dtype,
@@ -218,8 +260,16 @@ def setup_problem(mesh: BoxMesh, variant: str = "precomputed", d: int = 1,
     apply = _global_op(op.apply, mesh, mask)
     diag = _global_diag(mesh, b, op.factors, lam0, lam1, helmholtz, d, mask,
                         dtype)
+    op_lo_apply = None
+    if precision == "bf16_x32":
+        lo = jnp.bfloat16
+        op_lo = axhelm_mod.make_axhelm(
+            variant, b, verts.astype(lo), lam0=_cast_opt(lam0, lo),
+            lam1=_cast_opt(lam1, lo), helmholtz=helmholtz, dtype=lo,
+            backend=backend, block_elems=block_lo, interpret=interpret)
+        op_lo_apply = _global_op(op_lo.apply, mesh, mask)
     return NekboneProblem(apply, diag, mask, mesh, b, d, helmholtz, variant,
-                          op.backend)
+                          op.backend, precision, op_lo_apply)
 
 
 def _neighbour_launch_plan(part: MeshPartition):
@@ -275,6 +325,11 @@ def _resolve_auto_block(variant: str, b: SpectralBasis, d: int,
                                 e_total=e_shard)
 
 
+def _cast_opt(lam, dtype):
+    """Cast an optional scalar/field coefficient (None passes through)."""
+    return None if lam is None else jnp.asarray(lam, dtype)
+
+
 def _diag_factors(variant: str, b: SpectralBasis, verts: jnp.ndarray):
     """Per-element factor arrays for the Jacobi diagonal — the same choices
     `make_axhelm` makes, computed on the *unpartitioned* mesh so the sharded
@@ -302,7 +357,8 @@ def _partition_lam_field(lam, part: MeshPartition, dtype) -> jnp.ndarray:
 def _setup_problem_sharded(mesh: BoxMesh, b: SpectralBasis, variant: str,
                            d: int, helmholtz: bool, lam0, lam1, mask, dtype,
                            backend, block_elems, interpret, shard_ctx,
-                           part: MeshPartition) -> "ShardedNekboneProblem":
+                           part: MeshPartition, precision=None,
+                           block_lo=None) -> "ShardedNekboneProblem":
     # Per-element lambda FIELDS are partitioned into the shard element
     # layout and travel as elem_ops operands; scalars pass through.  The
     # Jacobi diagonal below keeps the UNPARTITIONED fields — it is computed
@@ -326,16 +382,31 @@ def _setup_problem_sharded(mesh: BoxMesh, b: SpectralBasis, variant: str,
     verts = jnp.asarray(mesh.verts, dtype=dtype)
     diag = _global_diag(mesh, b, _diag_factors(variant, b, verts), lam0,
                         lam1, helmholtz, d, mask, dtype)
-    apply_global, run_pcg = _build_sharded_runner(
+    elem_ops_lo = elem_apply_lo = None
+    if precision == "bf16_x32":
+        # a SECOND operand set at bfloat16 over the same partition: the
+        # inner refinement sweeps shard and exchange exactly like the
+        # fp32 operator, just half-width (and codec-compressed on the
+        # wire when ctx.compress says so)
+        lo = jnp.bfloat16
+        elem_ops_lo, elem_apply_lo, _ = axhelm_mod.make_axhelm_elem_ops(
+            variant, b, flat_verts.astype(lo), lam0=_cast_opt(lam_sh[0], lo),
+            lam1=_cast_opt(lam_sh[1], lo), helmholtz=helmholtz, dtype=lo,
+            backend=backend, block_elems=block_lo, interpret=interpret)
+    apply_global, run_pcg, run_refined = _build_sharded_runner(
         part, shard_ctx, elem_ops, elem_apply, mask, diag, d,
-        mesh.n_global)
+        mesh.n_global, elem_ops_lo=elem_ops_lo,
+        elem_apply_lo=elem_apply_lo,
+        compress=getattr(shard_ctx, "compress", None))
     return ShardedNekboneProblem(apply_global, diag, mask, mesh, b, d,
                                  helmholtz, variant, backend_used, shard_ctx,
-                                 part, run_pcg)
+                                 part, run_pcg, precision, run_refined)
 
 
 def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
-                          mask, diag, d: int, n_global: int):
+                          mask, diag, d: int, n_global: int, *,
+                          elem_ops_lo=None, elem_apply_lo=None,
+                          compress=None):
     """Wire the per-shard pipeline into `shard_map` over `ctx`'s 1-D mesh.
 
     Index sets are flattened over a leading (n_shards * per_shard) axis and
@@ -345,6 +416,21 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
     `owned_dot`; with "neighbour" the interface psum is replaced by
     point-to-point `ppermute` rounds launched BEFORE the interior-element
     compute, so the exchange and the bulk of the axhelm work can overlap.
+
+    `elem_ops_lo`/`elem_apply_lo` (the bfloat16 operand set of a
+    ``precision="bf16_x32"`` problem) additionally wire `run_refined`: the
+    whole `core.pcg.refine` loop inside ONE sharded region — fp32 true
+    residual through the full-precision operator, bf16 inner sweeps
+    through the lo operator, both sharing the same index sets and
+    partition.  `compress` (ctx.compress) is the wire codec of the
+    neighbour exchange; it applies to the operator that runs the INNER
+    sweeps — the lo operator when one exists, else the plain operator —
+    while a refined problem's fp32 outer operator always exchanges at
+    full width (the outer residual is the safety net; compressing it
+    would re-introduce the very floor the refinement removes).
+
+    Returns ``(apply_global, run_pcg, run_refined)`` — the last is None
+    without a lo operand set.
     """
     axis = ctx.axis
     s, ep, nl, ns = (part.n_shards, part.e_per_shard, part.n_local,
@@ -388,75 +474,100 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         shape = (n_global,) + xl.shape[1:]
         return jnp.zeros(shape, xl.dtype).at[l2g].add(jnp.where(w, xl, 0))
 
-    def _elem_batch(xl, eo, lid, lo, hi, bshape):
-        """axhelm + local gather on element slots [lo, hi)."""
-        xb = xl[lo:hi]
-        eob = jax.tree.map(lambda a: a[lo:hi], eo)
-        yb = elem_apply(xb, eob)
-        if bshape:
-            yb = jnp.moveaxis(yb, 1, -1)
-        return gs.gather(yb, lid[lo:hi], nl)
+    def _make_a_op(apply_fn, wire):
+        """The per-shard operator body for ONE element-kernel apply fn.
 
-    def a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr,
-                   it=None, fault=None, fdof=None):
-        """Per-shard A(x): scatter -> axhelm -> sharded gather (+ mask).
-
-        Shape-polymorphic like `_global_op`: trailing batch axes (d, nrhs,
-        or both) are flattened into one component column, so the interface
-        exchange is ONE (NS, c) psum — or one set of per-neighbour
-        ppermutes — for the whole RHS batch.
-
-        In neighbour mode the interface elements run FIRST: their local
-        gather completes every shared-dof partial, the ppermute rounds
-        launch, and the interior elements (which by construction touch no
-        shared dof) compute while the permutes are in flight.
-
-        `fault` (a static `resilience.inject.FaultSpec`, threaded from
-        `run_pcg`) corrupts THIS shard pipeline when the traced iteration
-        counter `it` hits its key: point faults (nan/bitflip) poison the
-        precomputed local dof `fdof` after all masking, a drop_exchange
-        fault makes the flagged shard keep its pre-exchange local partials
-        (shared dofs lose every remote contribution for that application,
-        exactly a lost neighbour message).  `fault=None` — the default and
-        the `apply_global` path — traces the identical computation as
-        before.
+        `wire` is the halo codec its neighbour exchange sends with (None
+        — full width).  The hi and lo operators of a refined problem are
+        two instances of this factory over the same index sets.
         """
-        x_in = x
-        bshape = x.shape[1:]
-        if has_mask:
-            x = jnp.where(expand(m, x), 0.0, x)
-        xf = x.reshape((x.shape[0], -1)) if bshape else x
-        xl = xf[lid]                                  # (EP, N1,N1,N1[, c])
-        if bshape:
-            xl = jnp.moveaxis(xl, -1, 1)
-        fire = None
-        if fault is not None:
-            fire = jnp.logical_and(
-                jnp.asarray(it, jnp.int32) == fault.iteration,
-                jax.lax.axis_index(axis) == fault.shard)
-        if neighbour:
-            rounds = gs.neighbour_rounds(part.nbr_offsets, s, nbr)
-            y = _elem_batch(xl, eo, lid, 0, cut, bshape)
-            recvs = gs.neighbour_start(y, rounds, axis)  # permutes in flight
-            if split:
-                y = y + _elem_batch(xl, eo, lid, cut, ep, bshape)
-            y_pre = y
-            y = gs.neighbour_finish(y, rounds, recvs)
-        else:
-            y_pre = _elem_batch(xl, eo, lid, 0, ep, bshape)
-            y = gs.exchange_shared(y_pre, sidx, spres, axis)
-        if fault is not None and fault.mode == "drop_exchange":
-            y = jnp.where(fire, y_pre, y)
-        if bshape:
-            y = y.reshape((nl,) + bshape)
-        if has_mask:
-            y = jnp.where(expand(m, y), x_in, y)
-        # dead-element and padding slots must stay exactly zero: anything
-        # accumulating there would feed inf/nan into later iterations
-        y = jnp.where(expand(val, y), y, 0)
-        if fault is not None and fault.mode != "drop_exchange":
-            y = fault_inject.poison(y, fdof, fire, fault)
-        return y
+
+        def _elem_batch(xl, eo, lid, lo, hi, bshape):
+            """axhelm + local gather on element slots [lo, hi)."""
+            xb = xl[lo:hi]
+            eob = jax.tree.map(lambda a: a[lo:hi], eo)
+            yb = apply_fn(xb, eob)
+            if bshape:
+                yb = jnp.moveaxis(yb, 1, -1)
+            return gs.gather(yb, lid[lo:hi], nl)
+
+        def a_op_local(x, eo, lid, sidx, spres, own, val, m, *nbr,
+                       it=None, fault=None, fdof=None):
+            """Per-shard A(x): scatter -> axhelm -> sharded gather (+ mask).
+
+            Shape-polymorphic like `_global_op`: trailing batch axes (d,
+            nrhs, or both) are flattened into one component column, so the
+            interface exchange is ONE (NS, c) psum — or one set of
+            per-neighbour ppermutes — for the whole RHS batch.
+
+            In neighbour mode the interface elements run FIRST: their
+            local gather completes every shared-dof partial, the ppermute
+            rounds launch, and the interior elements (which by
+            construction touch no shared dof) compute while the permutes
+            are in flight.
+
+            `fault` (a static `resilience.inject.FaultSpec`, threaded from
+            `run_pcg`) corrupts THIS shard pipeline when the traced
+            iteration counter `it` hits its key: point faults
+            (nan/bitflip) poison the precomputed local dof `fdof` after
+            all masking, a drop_exchange fault makes the flagged shard
+            keep its pre-exchange local partials (shared dofs lose every
+            remote contribution for that application, exactly a lost
+            neighbour message).  `fault=None` — the default and the
+            `apply_global` path — traces the identical computation as
+            before.
+            """
+            x_in = x
+            bshape = x.shape[1:]
+            if has_mask:
+                x = jnp.where(expand(m, x), 0.0, x)
+            xf = x.reshape((x.shape[0], -1)) if bshape else x
+            xl = xf[lid]                              # (EP, N1,N1,N1[, c])
+            if bshape:
+                xl = jnp.moveaxis(xl, -1, 1)
+            fire = None
+            if fault is not None:
+                fire = jnp.logical_and(
+                    jnp.asarray(it, jnp.int32) == fault.iteration,
+                    jax.lax.axis_index(axis) == fault.shard)
+            if neighbour:
+                rounds = gs.neighbour_rounds(part.nbr_offsets, s, nbr)
+                y = _elem_batch(xl, eo, lid, 0, cut, bshape)
+                recvs = gs.neighbour_start(y, rounds, axis,
+                                           compress=wire)  # in flight
+                if split:
+                    y = y + _elem_batch(xl, eo, lid, cut, ep, bshape)
+                if wire is not None:
+                    # interior elements touch no shared dof, so this still
+                    # rounds exactly the partials the sends encoded; every
+                    # sharer then sums the same codec-rounded set (see
+                    # gs.halo_self_round — skipping it lets sharers drift)
+                    y = gs.halo_self_round(y, sidx, spres, wire)
+                y_pre = y
+                y = gs.neighbour_finish(y, rounds, recvs, compress=wire)
+            else:
+                y_pre = _elem_batch(xl, eo, lid, 0, ep, bshape)
+                y = gs.exchange_shared(y_pre, sidx, spres, axis)
+            if fault is not None and fault.mode == "drop_exchange":
+                y = jnp.where(fire, y_pre, y)
+            if bshape:
+                y = y.reshape((nl,) + bshape)
+            if has_mask:
+                y = jnp.where(expand(m, y), x_in, y)
+            # dead-element and padding slots must stay exactly zero:
+            # anything accumulating there would feed inf/nan into later
+            # iterations
+            y = jnp.where(expand(val, y), y, 0)
+            if fault is not None and fault.mode != "drop_exchange":
+                y = fault_inject.poison(y, fdof, fire, fault)
+            return y
+
+        return a_op_local
+
+    a_op_local = _make_a_op(elem_apply,
+                            compress if elem_apply_lo is None else None)
+    a_op_lo_local = (None if elem_apply_lo is None
+                     else _make_a_op(elem_apply_lo, compress))
 
     smap = functools.partial(shard_map_compat, mesh=ctx.mesh)
 
@@ -504,6 +615,20 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
                 res.initial_residual[None], res.breakdown[None],
                 res.status[None])
 
+    def _validate_fault(fault):
+        """Static fault checks + the poisoned local dof (None for
+        drop_exchange)."""
+        if not 0 <= fault.shard < s:
+            raise ValueError(
+                f"fault.shard {fault.shard} out of range for {s} shards")
+        if fault.mode == "drop_exchange":
+            return None
+        if part.elem_perm[fault.shard, fault.element] < 0:
+            raise ValueError(
+                f"fault.element {fault.element} is a dead padding "
+                f"slot on shard {fault.shard}: pick a live element")
+        return fault_inject.fault_dof(part.local_ids[fault.shard], fault)
+
     @functools.partial(jax.jit, static_argnames=("precond",
                                                  "stagnation_window",
                                                  "fault"))
@@ -511,18 +636,7 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
                 stagnation_window=0, fault=None):
         # trailing axes beyond the (Ng[, d]) base layout are the RHS batch
         batched = b_global.ndim > (2 if d > 1 else 1)
-        fdof = None
-        if fault is not None:
-            if not 0 <= fault.shard < s:
-                raise ValueError(
-                    f"fault.shard {fault.shard} out of range for {s} shards")
-            if fault.mode != "drop_exchange":
-                if part.elem_perm[fault.shard, fault.element] < 0:
-                    raise ValueError(
-                        f"fault.element {fault.element} is a dead padding "
-                        f"slot on shard {fault.shard}: pick a live element")
-                fdof = fault_inject.fault_dof(part.local_ids[fault.shard],
-                                             fault)
+        fdof = _validate_fault(fault) if fault is not None else None
         b_loc = localize(b_global)
         # pcg treats a zero x0 identically to x0=None (the initial
         # residual applies A either way), so the restart path can always
@@ -540,7 +654,80 @@ def _build_sharded_runner(part: MeshPartition, ctx, elem_ops, elem_apply,
         return PCGResult(globalize(x_loc), it[0], rr[0], r0[0], brk[0],
                          st[0])
 
-    return apply_global, run_pcg
+    run_refined = None
+    if elem_apply_lo is not None:
+        ops_specs_lo = jax.tree.map(lambda _: pe, elem_ops_lo)
+
+        def refined_body(b_loc, dg, tol, max_iter, x0_loc, eo, eo_lo, lid,
+                         sidx, spres, own, val, m, *nbr, use_jacobi,
+                         batched, window, fault, fdof):
+            """The whole refine loop on one shard: fp32 outer residual via
+            the full-precision operator, bf16 inner sweeps via the lo one.
+            A `fault` is threaded into the LO operator (iteration-aware
+            like pcg_body's), so the corruption recurs in EVERY sweep at
+            its inner-iteration key — a persistently-broken bf16 operator,
+            exactly what the precision:float32 escape-hatch rung exists
+            for."""
+
+            def a_hi(x):
+                return a_op_local(x, eo, lid, sidx, spres, own, val, m,
+                                  *nbr)
+
+            if fault is None:
+                def a_lo(x):
+                    return a_op_lo_local(x, eo_lo, lid, sidx, spres, own,
+                                         val, m, *nbr)
+            else:
+                def a_lo(x, it):
+                    return a_op_lo_local(x, eo_lo, lid, sidx, spres, own,
+                                         val, m, *nbr, it=it, fault=fault,
+                                         fdof=fdof)
+
+                a_lo.takes_iteration = True
+
+            pre = None
+            if use_jacobi:
+                # the inner iterates are bf16; so is their preconditioner
+                inv_lo = (1.0 / dg).astype(jnp.bfloat16)
+
+                def pre(r):
+                    return (inv_lo[..., None] if batched else inv_lo) * r
+            res = refine(a_hi, a_lo, b_loc, x0=x0_loc, precond=pre,
+                         tol=tol, max_iter=max_iter,
+                         dot=owned_dot(own, axis, batched=batched),
+                         batched=batched,
+                         inner_window=window if window else 5)
+            return (res.x, res.iterations[None], res.residual[None],
+                    res.initial_residual[None], res.breakdown[None],
+                    res.status[None])
+
+        @functools.partial(jax.jit, static_argnames=("precond",
+                                                     "stagnation_window",
+                                                     "fault"))
+        def run_refined(b_global, tol, max_iter, precond="jacobi", x0=None,
+                        stagnation_window=0, fault=None):
+            batched = b_global.ndim > (2 if d > 1 else 1)
+            fdof = _validate_fault(fault) if fault is not None else None
+            b_loc = localize(jnp.asarray(b_global, jnp.float32))
+            x0_loc = localize(jnp.asarray(x0, jnp.float32)) \
+                if x0 is not None else jnp.zeros_like(b_loc)
+            body = smap(
+                functools.partial(refined_body,
+                                  use_jacobi=precond == "jacobi",
+                                  batched=batched,
+                                  window=stagnation_window,
+                                  fault=fault, fdof=fdof),
+                in_specs=(pe, pe, P(), P(), pe, ops_specs,
+                          ops_specs_lo) + idx_specs,
+                out_specs=(pe, pe, pe, pe, pe, pe))
+            x_loc, it, rr, r0, brk, st = body(
+                b_loc, diag_loc, jnp.asarray(tol),
+                jnp.asarray(max_iter, jnp.int32), x0_loc, elem_ops,
+                elem_ops_lo, *idx_args)
+            return PCGResult(globalize(x_loc), it[0], rr[0], r0[0], brk[0],
+                             st[0])
+
+    return apply_global, run_pcg, run_refined
 
 
 def rhs_from_solution(problem: NekboneProblem, x_true: jnp.ndarray) -> jnp.ndarray:
@@ -598,10 +785,29 @@ def solve(problem: NekboneProblem, b_rhs: jnp.ndarray, precond: str = "jacobi",
         return PCGResult(res.x[..., None], res.iterations[None],
                          res.residual[None], res.initial_residual[None],
                          res.breakdown[None], res.status[None])
+    refined = getattr(problem, "precision", None) == "bf16_x32"
     if isinstance(problem, ShardedNekboneProblem):
-        return problem.run_pcg(b_rhs, tol, max_iter, precond=precond, x0=x0,
-                               stagnation_window=stagnation_window,
-                               fault=fault)
+        runner = problem.run_refined if refined else problem.run_pcg
+        return runner(b_rhs, tol, max_iter, precond=precond, x0=x0,
+                      stagnation_window=stagnation_window, fault=fault)
+    if refined:
+        # mixed precision: fp32 outer residual/correction through the
+        # full-precision operator, bf16 inner sweeps through op_lo (a
+        # fault corrupts the LO operator — recurring every sweep — the
+        # case the precision:float32 resilience rung escapes)
+        a_lo = problem.op_lo
+        if fault is not None:
+            a_lo = fault_inject.wrap_operator(a_lo, fault,
+                                              problem.mesh.global_ids)
+        pre = None
+        if precond == "jacobi":
+            inv_lo = (1.0 / problem.diag).astype(jnp.bfloat16)
+
+            def pre(r):
+                return (inv_lo[..., None] if batched else inv_lo) * r
+        return refine(problem.op, a_lo, b_rhs, x0=x0, precond=pre, tol=tol,
+                      max_iter=max_iter, batched=batched,
+                      inner_window=stagnation_window or 5)
     a_op = problem.op
     if fault is not None:
         a_op = fault_inject.wrap_operator(a_op, fault,

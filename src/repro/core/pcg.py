@@ -32,7 +32,22 @@ import numpy as np
 
 from repro.resilience.status import SolveStatus, classify
 
-__all__ = ["PCGResult", "pcg", "pcg_block", "owned_dot"]
+__all__ = ["PCGResult", "pcg", "pcg_block", "refine", "owned_dot"]
+
+
+def _up(u: jnp.ndarray) -> jnp.ndarray:
+    """Upcast sub-fp32 floats for reduction accumulation.
+
+    The PCG inner products feed the tolerance check, alpha/beta, and the
+    stagnation/divergence flags; accumulating them at the ITERATE dtype
+    hands those consumers 8-bit-mantissa scalars on a bf16 solve (a sum of
+    a few thousand like-magnitude bf16 terms stops absorbing new terms
+    entirely).  fp32 and wider pass through untouched, so full-precision
+    solves stay bit-identical.
+    """
+    if jnp.issubdtype(u.dtype, jnp.floating) and u.dtype.itemsize < 4:
+        return u.astype(jnp.float32)
+    return u
 
 
 def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None,
@@ -50,12 +65,16 @@ def owned_dot(weight: jnp.ndarray, axis_name: Optional[str] = None,
     With `batched=True` the trailing axis of u/v is an RHS batch: the
     reduction runs over every axis EXCEPT the last and returns per-column
     dots of shape (nrhs,) — still one psum, just of an (nrhs,) buffer.
+
+    Reduced-precision operands are accumulated in fp32 (see `_up`): the
+    psum'd partials stay fp32 scalars, so the collective count is
+    unchanged and fp32/fp64 fields reduce bit-identically to before.
     """
 
     def dot(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
         w = weight if u.ndim == weight.ndim else weight.reshape(
             weight.shape + (1,) * (u.ndim - weight.ndim))
-        prod = jnp.where(w, u * v, 0)
+        prod = jnp.where(w, _up(u) * _up(v), 0)
         if batched:
             part = jnp.sum(prod, axis=tuple(range(prod.ndim - 1)))
         else:
@@ -144,10 +163,16 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     iteration trace bit-identical to the unmonitored loop; the NaN/Inf and
     breakdown checks are always on and only fire on already-poisoned
     solves).
+
+    Reductions accumulate in fp32 even on reduced-precision iterates (the
+    default dot upcasts, `owned_dot` does the same): ``rr``/``rz``/``p.Ap``
+    — and everything derived from them — are fp32 scalars on a bf16 solve,
+    while the iterate vectors stay at the solve dtype (alpha/beta are cast
+    back before the axpy updates, so the while_loop carry is dtype-stable).
     """
     if dot is None:
         def dot(u, v):
-            return jnp.vdot(u, v)
+            return jnp.vdot(_up(u), _up(v))
     if precond is None:
         def precond(r):
             return r
@@ -187,8 +212,9 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         # denominator would keep "converging" to a wrong answer.
         bad = pap <= 0.0
         alpha = jnp.where(bad, 0.0, rz / jnp.where(bad, 1.0, pap))
-        x_new = x + alpha * p
-        r_new = r - alpha * ap
+        step = alpha.astype(x.dtype)   # fp32 scalar -> iterate dtype
+        x_new = x + step * p
+        r_new = r - step * ap
         z_new = precond(r_new)
         rz_new = dot(r_new, z_new)
         rr_new = dot(r_new, r_new)
@@ -204,7 +230,7 @@ def pcg(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         rr2 = jnp.where(hurt, rr, rr_new)
         beta = jnp.where(bad | hurt, 0.0,
                          rz_new / jnp.where(rz != 0, rz, 1.0))
-        p = jnp.where(bad | hurt, p, z + beta * p)
+        p = jnp.where(bad | hurt, p, z + beta.astype(p.dtype) * p)
         advanced = ~bad & ~hurt
         # stagnation: count iterations since the last new rr minimum
         improved = rr2 < best
@@ -262,7 +288,8 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
     """
     if dot is None:
         def dot(u, v):
-            return jnp.sum(u * v, axis=tuple(range(u.ndim - 1)))
+            uv = _up(u) * _up(v)
+            return jnp.sum(uv, axis=tuple(range(uv.ndim - 1)))
     if precond is None:
         def precond(r):
             return r
@@ -303,8 +330,9 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         # converged/broke (the where-guards keep 0/0 NaNs out of dead
         # columns)
         alpha = jnp.where(active, rz / jnp.where(pap > 0, pap, 1.0), 0.0)
-        x_new = x + alpha * p
-        r_new = r - alpha * ap
+        step = alpha.astype(x.dtype)   # fp32 per-column -> iterate dtype
+        x_new = x + step * p
+        r_new = r - step * ap
         z_new = precond(r_new)
         rz_new = dot(r_new, z_new)
         rr_new = dot(r_new, r_new)
@@ -322,7 +350,7 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         rr2 = jnp.where(hurt, rr, rr_new)
         beta = jnp.where(active & ~hurt,
                          rz_new / jnp.where(rz != 0, rz, 1.0), 0.0)
-        p = jnp.where(active & ~hurt, z + beta * p, p)
+        p = jnp.where(active & ~hurt, z + beta.astype(p.dtype) * p, p)
         advanced = active & ~hurt
         # stagnation: per-column count of iterations since a new rr minimum
         improved = rr2 < best
@@ -343,3 +371,137 @@ def pcg_block(a_op: Callable[[jnp.ndarray], jnp.ndarray],
         jax.lax.while_loop(cond, body, state)
     status = classify(rr, tol2, brk, div, stag)
     return PCGResult(x, it[:nrhs], jnp.sqrt(rr), r0, brk, status)
+
+
+def refine(a_hi, a_lo, b: jnp.ndarray,
+           x0: Optional[jnp.ndarray] = None,
+           precond: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+           tol: float = 1e-8,
+           max_iter: int = 200,
+           dot: Optional[Callable[[jnp.ndarray, jnp.ndarray],
+                                  jnp.ndarray]] = None,
+           batched: bool = False,
+           lo_dtype=jnp.bfloat16,
+           inner_tol: float = 0.03,
+           inner_window: int = 5,
+           max_outer: int = 40,
+           stall_limit: int = 1) -> PCGResult:
+    """Mixed-precision iterative refinement: fp32 outer, `lo_dtype` inner.
+
+    The Haidar-et-al recipe adapted to matrix-free PCG: the outer loop
+    keeps the solution ``x``, the TRUE residual ``r = b - A_hi(x)`` and
+    the correction accumulation in fp32 (``a_hi`` is the full-precision
+    operator), while each sweep solves the correction system
+    ``A d = r / ||r||`` with an inner :func:`pcg`/:func:`pcg_block` run on
+    the reduced-precision operator ``a_lo`` — iterates, operator and
+    preconditioner all at ``lo_dtype``, reductions in fp32 (see `_up`).
+    Normalizing the inner RHS per column keeps the bf16 dynamic range
+    centred whatever the outer residual's magnitude, and the correction is
+    scaled back in fp32 (``x += d * ||r||``).
+
+    Per-column semantics match :func:`pcg_block`: with ``batched=True``
+    every scalar below is an (nrhs,) array, a converged/flagged column's
+    inner RHS is zeroed — the inner solve freezes it at iteration 0 — and
+    its fp32 state stops moving.  A sweep whose recomputed true residual
+    does not IMPROVE a column is rolled back for that column (the sweep is
+    deterministic, so re-trying the same sweep cannot help): after
+    ``stall_limit`` consecutive non-improving sweeps the column is flagged
+    ``STAGNATED`` — the escape hatch `resilience.retry`'s
+    ``precision:float32`` rung catches.  A non-finite recomputed ``rr``
+    rolls back likewise and flags ``DIVERGED`` immediately.
+
+    Each sweep's inner stop is ADAPTIVE: on the unit-normalized RHS the
+    reduction still needed is ``tol / ||r||``, so that (with a small
+    safety factor, floored at ``inner_tol`` and capped at 0.3) is the
+    sweep's target.  The ``inner_tol`` floor defaults to a few times the
+    bf16 operator discrepancy (~2^-8): the TRUE-residual gain a sweep can
+    buy saturates near ``eps_lo * kappa_eff`` however deep the inner
+    drills, so drilling past the floor burns reduced-precision iterations
+    that purchase nothing (measured on the bench mesh: floor 0.03 beats
+    floor 0.001 by ~20% total iterations at tight tolerances).
+    A first sweep that can reach ``tol`` outright therefore runs exactly
+    as deep as a plain fp32 solve would and the refinement adds no extra
+    iterations; when ``tol`` is below the reduced-precision floor, later
+    sweeps only buy the factor they are asked for instead of re-running to
+    the floor every time.  ``inner_window`` is the inner stagnation window
+    that exits a sweep at the attainable floor instead of burning the
+    iteration budget there.  The one `dot` serves both precisions (it
+    upcasts).  ``iterations`` in the returned result counts TOTAL inner
+    iterations per column — the number of reduced-precision operator
+    applications, the quantity comparable to a plain fp32 solve's count —
+    and the loop stops when it reaches ``max_iter`` (or after
+    ``max_outer`` sweeps).
+    """
+    if dot is None:
+        if batched:
+            def dot(u, v):
+                uv = _up(u) * _up(v)
+                return jnp.sum(uv, axis=tuple(range(uv.ndim - 1)))
+        else:
+            def dot(u, v):
+                return jnp.vdot(_up(u), _up(v))
+    b32 = jnp.asarray(b, jnp.float32)
+    runner = pcg_block if batched else pcg
+
+    x = jnp.zeros_like(b32) if x0 is None else jnp.asarray(x0, jnp.float32)
+    r = (b32 - a_hi(x)).astype(jnp.float32)
+    rr = dot(r, r)
+    r0 = jnp.sqrt(rr)
+    tol2 = tol * tol
+    it_shape = rr.shape  # () or (nrhs,)
+    mi = jnp.asarray(max_iter, jnp.int32)
+
+    def cond(state):
+        x, r, rr, it, sweeps, div, stag, stall = state
+        live = (rr > tol2) & ~div & ~stag
+        return (sweeps < max_outer) & (jnp.max(it) < mi) & jnp.any(live)
+
+    def body(state):
+        x, r, rr, it, sweeps, div, stag, stall = state
+        active = (rr > tol2) & ~div & ~stag
+        rnorm = jnp.sqrt(rr)
+        safe = jnp.where(active & (rnorm > 0), rnorm, 1.0)
+        # frozen columns get a zero inner RHS: their inner column has
+        # r0 = 0, converges at iteration 0, and block-PCG's freeze keeps
+        # it from perturbing live columns
+        r_hat = jnp.where(active, r / safe, 0.0).astype(lo_dtype)
+        # adaptive inner target: the reduction this sweep still needs is
+        # tol/||r|| per column; take the tightest active column (with a
+        # 0.5 safety factor so the fp32 true residual lands below tol
+        # despite the lo/hi operator discrepancy), floored at the
+        # attainable per-sweep depth and capped well under 1
+        maxr = jnp.max(jnp.where(active, rnorm, 0.0))
+        itol = jnp.clip(
+            0.5 * jnp.sqrt(tol2) / jnp.where(maxr > 0, maxr, 1.0),
+            inner_tol, 0.3)
+        res = runner(a_lo, r_hat, precond=precond, tol=itol,
+                     max_iter=jnp.maximum(mi - jnp.max(it), 1), dot=dot,
+                     stagnation_window=inner_window)
+        d = res.x.astype(jnp.float32) * jnp.where(active, rnorm, 0.0)
+        x_new = x + d
+        r_new = (b32 - a_hi(x_new)).astype(jnp.float32)
+        rr_new = dot(r_new, r_new)
+        hurt = active & ~jnp.isfinite(rr_new)
+        div = div | hurt
+        # a finite sweep that did not improve its column is rolled back
+        # too: the sweep is a deterministic function of (r, a_lo), so
+        # keeping the worse iterate would only compound, and re-running
+        # from the old one reproduces the failure — count the stall
+        worse = active & ~hurt & (rr_new >= rr)
+        keep = hurt | worse
+        x = jnp.where(keep, x, x_new)
+        r = jnp.where(keep, r, r_new)
+        rr2 = jnp.where(keep, rr, rr_new)
+        stall = jnp.where(active & ~keep, 0,
+                          stall + worse.astype(jnp.int32))
+        stag = stag | (worse & (stall >= stall_limit))
+        it = it + jnp.where(active, res.iterations, 0).astype(jnp.int32)
+        return (x, r, rr2, it, sweeps + 1, div, stag, stall)
+
+    state = (x, r, rr, jnp.zeros(it_shape, jnp.int32),
+             jnp.asarray(0, jnp.int32), jnp.zeros(it_shape, bool),
+             jnp.zeros(it_shape, bool), jnp.zeros(it_shape, jnp.int32))
+    x, r, rr, it, _, div, stag, _ = jax.lax.while_loop(cond, body, state)
+    brk = jnp.zeros(it_shape, bool)
+    status = classify(rr, tol2, brk, div, stag)
+    return PCGResult(x, it, jnp.sqrt(rr), r0, brk, status)

@@ -24,7 +24,7 @@ from repro.distributed.context import (PARTIAL_MANUAL_SHARD_MAP,
                                        shard_map_compat)
 
 __all__ = ["quantize_int8", "dequantize_int8", "ef_compress",
-           "compressed_crosspod_grads"]
+           "halo_compress", "halo_decompress", "compressed_crosspod_grads"]
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -48,6 +48,45 @@ def ef_compress(g: jnp.ndarray, err: jnp.ndarray):
     g32 = g.astype(jnp.float32) + err
     q, s = quantize_int8(g32)
     return q, s, g32 - dequantize_int8(q, s)
+
+
+def halo_compress(vals: jnp.ndarray, method: str) -> Tuple[jnp.ndarray, ...]:
+    """Encode one neighbour-halo buffer for the wire.
+
+    Returns the tuple of arrays that must travel (each is ppermuted
+    separately by `core.gather_scatter.neighbour_start`): ("bf16") one
+    bfloat16 cast of the partials; ("int8") the `quantize_int8` pair —
+    int8 codes plus the per-dof fp32 scale.  The buffer is (M[, c]) with
+    trash-padded lanes already ZEROED by `shared_contrib` upstream, so an
+    all-padding row quantizes to scale 1.0 / codes 0 and a real row's
+    per-row amax never sees trash values — the codec needs no mask of its
+    own.  `distributed.context.HALO_COMPRESS` names the valid methods.
+
+    The codec is strictly PER-DOF — 1-D buffers quantize with per-element
+    scales, not one global amax.  That is a correctness requirement, not
+    a quality knob: a dof's encoding must come out identical whichever
+    per-neighbour pair table (or the shard's own self-rounding pass — see
+    `core.gather_scatter.halo_self_round`) slices it, and any scale
+    computed over a whole buffer would differ between those slicings.
+    """
+    if method == "bf16":
+        return (vals.astype(jnp.bfloat16),)
+    if method == "int8":
+        if vals.ndim == 1:
+            q, s = quantize_int8(vals[:, None])
+            return q[:, 0], s[:, 0]
+        return quantize_int8(vals)
+    raise ValueError(f"unknown halo compress method {method!r}")
+
+
+def halo_decompress(parts: Tuple[jnp.ndarray, ...], method: str,
+                    dtype) -> jnp.ndarray:
+    """Decode the wire parts of `halo_compress` back to `dtype` partials."""
+    if method == "bf16":
+        return parts[0].astype(dtype)
+    if method == "int8":
+        return dequantize_int8(*parts).astype(dtype)
+    raise ValueError(f"unknown halo compress method {method!r}")
 
 
 def _compressed_mean(g: jnp.ndarray, axis: str) -> jnp.ndarray:

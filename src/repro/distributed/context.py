@@ -18,8 +18,8 @@ import numpy as np
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
-__all__ = ["ShardCtx", "SolverShardCtx", "EXCHANGES", "make_ctx",
-           "make_solver_ctx", "parse_grid_arg", "constraint",
+__all__ = ["ShardCtx", "SolverShardCtx", "EXCHANGES", "HALO_COMPRESS",
+           "make_ctx", "make_solver_ctx", "parse_grid_arg", "constraint",
            "shard_map_compat", "PARTIAL_MANUAL_SHARD_MAP"]
 
 # jax >= 0.5 exposes top-level jax.shard_map; that release is also where
@@ -102,6 +102,21 @@ class SolverShardCtx(NamedTuple):
     the smallest-surface factorization for the mesh at setup time.  The
     device mesh itself stays 1-D: the shard grid is linearized into the
     single `axis`, and neighbour offsets become linearized grid shifts.
+
+    `compress` selects an on-the-wire codec for the neighbour halo
+    buffers (`HALO_COMPRESS`; None — full-width sends):
+      "bf16" — cast the per-neighbour partials to bfloat16 for the
+               ppermute, halving interface bytes (a ~2^-8 relative
+               perturbation of the exchanged partials);
+      "int8" — per-dof symmetric int8 quantization (the
+               `distributed.compression` machinery), quartering interface
+               bytes, with a tiny fp32 per-row scale riding along.
+    Lossy on full-precision solves (the operator is perturbed at the
+    codec's precision, which floors the attainable residual) — built for
+    the bf16_x32 refined solve, whose inner sweeps are already
+    reduced-precision and whose fp32 outer loop absorbs the codec error;
+    requires exchange="neighbour" (the psum exchange has no per-buffer
+    seam to compress at).
     """
 
     mesh: Mesh
@@ -109,6 +124,7 @@ class SolverShardCtx(NamedTuple):
     nrhs: int = 1
     exchange: str = "psum"
     grid: object = None
+    compress: Optional[str] = None
 
     @property
     def n_shards(self) -> int:
@@ -116,6 +132,7 @@ class SolverShardCtx(NamedTuple):
 
 
 EXCHANGES = ("psum", "neighbour")
+HALO_COMPRESS = ("bf16", "int8")
 
 
 def parse_grid_arg(spec: str):
@@ -150,7 +167,9 @@ def make_solver_ctx(devices: Optional[int] = None,
                     axis: str = "elem",
                     nrhs: int = 1,
                     exchange: str = "psum",
-                    grid=None) -> Optional[SolverShardCtx]:
+                    grid=None,
+                    compress: Optional[str] = None
+                    ) -> Optional[SolverShardCtx]:
     """Build a 1-D element mesh over the first `devices` local devices.
 
     devices=None uses every visible device; devices=1 (or a single visible
@@ -161,14 +180,23 @@ def make_solver_ctx(devices: Optional[int] = None,
     dropping them (which would let a bench row mislabel the exchange it
     actually ran), the collapse warns and normalizes.  `nrhs` declares the
     RHS-batch width of the planned solves, `exchange` the interface
-    exchange implementation, and `grid` the element-partition shard-grid
-    shape (see `SolverShardCtx`).
+    exchange implementation, `grid` the element-partition shard-grid
+    shape, and `compress` the on-the-wire halo codec (neighbour mode
+    only; see `SolverShardCtx`).
     """
     if nrhs < 1:
         raise ValueError(f"nrhs must be >= 1, got {nrhs}")
     if exchange not in EXCHANGES:
         raise ValueError(f"unknown exchange {exchange!r}; expected one of "
                          f"{EXCHANGES}")
+    if compress is not None and compress not in HALO_COMPRESS:
+        raise ValueError(f"unknown halo compress {compress!r}; expected "
+                         f"None or one of {HALO_COMPRESS}")
+    if compress is not None and exchange != "neighbour":
+        raise ValueError(
+            f"compress={compress!r} requires exchange='neighbour': the "
+            f"psum exchange is one fused all-reduce with no per-buffer "
+            f"seam to compress at (got exchange={exchange!r})")
     devs = jax.devices()
     if devices is not None:
         if devices > len(devs):
@@ -179,7 +207,8 @@ def make_solver_ctx(devices: Optional[int] = None,
         devs = devs[:devices]
     if len(devs) <= 1:
         dropped = [f"{name}={val!r}" for name, val, default in
-                   (("exchange", exchange, "psum"), ("grid", grid, None))
+                   (("exchange", exchange, "psum"), ("grid", grid, None),
+                    ("compress", compress, None))
                    if val != default]
         if dropped:
             warnings.warn(
@@ -190,7 +219,7 @@ def make_solver_ctx(devices: Optional[int] = None,
         return None
     _validate_grid_spec(grid, len(devs))
     return SolverShardCtx(Mesh(np.asarray(devs), (axis,)), axis, nrhs,
-                          exchange, grid)
+                          exchange, grid, compress)
 
 
 def make_ctx(mesh: Optional[Mesh]) -> Optional[ShardCtx]:

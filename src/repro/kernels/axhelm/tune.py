@@ -79,7 +79,12 @@ def block_vmem_bytes(variant: str, n1: int, d: int, dtype, eb: int,
     ws = jnp.dtype(dtype).itemsize
     fp32 = 4
     nodes = n1 ** 3
-    total = 2 * eb * nrhs * d * nodes * ws      # x in + y out
+    total = eb * nrhs * d * nodes * ws           # x operand window
+    # the y block is the kernel's ACCUMULATOR, fp32 no matter how narrow
+    # the storage dtype (preferred_element_type=f32 on every contraction)
+    # — charging it at bf16 width undercounted a bf16 block by n/8 of its
+    # real footprint and admitted block sizes that overflow VMEM
+    total += eb * nrhs * d * nodes * max(ws, fp32)
     total += 6 * eb * nrhs * d * nodes * fp32   # xr/xs/xt + gxr/gxs/gxt
     if variant == "precomputed":
         total += eb * nodes * (6 + (1 if helmholtz else 0)) * ws
@@ -129,7 +134,12 @@ def _backend_tag(interpret: Optional[bool]) -> str:
 
 def _config_key(variant: str, n1: int, d: int, dtype,
                 helmholtz: bool, nrhs: int = 1) -> str:
-    key = f"{variant}/n1={n1}/d={d}/{jnp.dtype(dtype).name}/helm={int(helmholtz)}"
+    # "v2/": the VMEM-model schema version.  v1 entries were tuned with a
+    # model that charged the fp32 y accumulator at the storage width, so a
+    # v1 bf16 winner can be a block size the corrected model rejects as
+    # over-budget — those entries must MISS, not resolve.
+    key = f"v2/{variant}/n1={n1}/d={d}/" \
+          f"{jnp.dtype(dtype).name}/helm={int(helmholtz)}"
     # nrhs=1 keeps the pre-batching key so existing caches stay valid
     return key if nrhs == 1 else key + f"/nrhs={nrhs}"
 

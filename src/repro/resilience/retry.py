@@ -13,10 +13,12 @@ columns only, climbing a bounded escalation ladder:
 2. **backend:reference** — rebuild the problem with the reference element
    kernel (only when the failing problem ran ``backend="pallas"``): a
    kernel-level bug disappears with the kernel.
-3. **precision:float32** — rebuild in f32 (only when the problem ran a
-   reduced precision like bf16): the jax analog of the paper's Tensor
-   Core lever needs exactly this net under it (ROADMAP: mixed-precision
-   MXU solve).
+3. **precision:float32** — rebuild in f32 (only when the problem leaned
+   on reduced precision: a bf16 dtype, or a ``precision="bf16_x32"``
+   mixed-precision solve whose inner sweeps ran the bf16 operator): the
+   jax analog of the paper's Tensor Core lever needs exactly this net
+   under it.  For bf16_x32 the rebuild drops the precision tag — its
+   dtype is already fp32.
 
 Rebuild rungs run CLEAN (no injected fault): an injected fault models a
 backend/precision-bound defect, which switching backend/precision
@@ -42,7 +44,8 @@ import numpy as np
 from repro.core import nekbone as _nek
 from repro.resilience.status import SolveStatus
 
-__all__ = ["RetryPolicy", "AttemptRecord", "SolveReport", "solve_resilient"]
+__all__ = ["RetryPolicy", "AttemptRecord", "SolveReport",
+           "has_precision_fallback", "solve_resilient"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +113,21 @@ class SolveReport:
 _LOW_PRECISION = ("bfloat16", "float16")
 
 
+def has_precision_fallback(problem) -> bool:
+    """True when the precision:float32 rung applies to this problem.
+
+    Two ways a solve leans on reduced precision: the whole problem lives
+    at a low dtype (``dtype=bfloat16``), or a full-precision problem runs
+    its inner sweeps through the bf16 operator (``precision="bf16_x32"``
+    — the diag/dtype stay fp32 there, so the dtype check alone would miss
+    it).  The serving layer uses the same predicate to decide which
+    problems need their fp32 fallback warmed (see
+    `serving.solve_service.SolveService.warmup`).
+    """
+    return (problem.diag.dtype.name in _LOW_PRECISION
+            or getattr(problem, "precision", None) == "bf16_x32")
+
+
 def _default_rebuild(problem, full_nrhs):
     """Rebuild factory recovering `setup_problem` arguments from a built
     problem.  Scalar lambda defaults are re-derived by `setup_problem`
@@ -126,6 +144,14 @@ def _default_rebuild(problem, full_nrhs):
     """
 
     def rebuild(backend=None, dtype=None, nrhs=None):
+        # an explicit dtype override IS the precision:float32 rung — a
+        # bf16_x32 problem's dtype is already fp32, so the rung's whole
+        # effect is dropping the precision tag (and with it the bf16
+        # inner operator); every other rung keeps the tag so e.g. the
+        # backend fallback rebuilds the SAME mixed-precision solve on
+        # the reference kernel
+        precision = None if dtype is not None \
+            else getattr(problem, "precision", None)
         return _nek.setup_problem(
             problem.mesh, variant=problem.variant, d=problem.d,
             helmholtz=problem.helmholtz,
@@ -133,6 +159,7 @@ def _default_rebuild(problem, full_nrhs):
             dtype=dtype if dtype is not None else problem.diag.dtype,
             backend=backend if backend is not None else problem.backend,
             shard_ctx=getattr(problem, "shard_ctx", None),
+            precision=precision,
             nrhs=full_nrhs if nrhs is None else nrhs)
 
     return rebuild
@@ -268,8 +295,7 @@ def solve_resilient(problem, b, policy: Optional[RetryPolicy] = None, *,
         ladder.append(("backend:reference",
                        lambda n: rebuild(n, backend="reference"), None,
                        policy.warm_start))
-    if policy.precision_fallback and \
-            problem.diag.dtype.name in _LOW_PRECISION:
+    if policy.precision_fallback and has_precision_fallback(problem):
         ladder.append(("precision:float32",
                        lambda n: rebuild(n, dtype=jnp.float32), None,
                        policy.warm_start))

@@ -19,8 +19,8 @@ the padded columns back off before returning — they are masked out of
 convergence accounting and never reach a caller (or a `SolveReport`).
 
 Cache entries are keyed by ``(mesh-id, equation, variant, d, backend,
-dtype, nrhs-bucket)`` — everything that selects a distinct compiled
-computation for a fixed (tol, max_iter, precond) cache.  The rebuilt
+precision-or-dtype, nrhs-bucket)`` — everything that selects a distinct
+compiled computation for a fixed (tol, max_iter, precond) cache.  The rebuilt
 problems of `resilience.retry.solve_resilient`'s fallback rungs
 (backend:reference, precision:float32) key their own entries, and a
 failed-column SUBSET solve re-enters through the same ladder (a 3-of-8
@@ -63,10 +63,17 @@ def problem_key(problem) -> tuple:
     ``id(mesh)`` is the in-process mesh identity: the fallback rungs
     rebuild AROUND the same mesh object, so their entries share it while
     differing in backend/dtype exactly as their compilations do.
+
+    The last component is the PRECISION tag, not just the dtype: a
+    ``precision="bf16_x32"`` mixed-precision problem shares its fp32
+    dtype with the plain build its precision:float32 fallback rung
+    rebuilds, and the dtype name alone would alias the two distinct
+    compilations onto one entry (the fallback would silently reuse the
+    very solver it is escaping).
     """
     return (id(problem.mesh), "helmholtz" if problem.helmholtz else
             "poisson", problem.variant, problem.d, problem.backend,
-            problem.diag.dtype.name)
+            getattr(problem, "precision", None) or problem.diag.dtype.name)
 
 
 def _pad_cols(x, pad: int):

@@ -52,7 +52,8 @@ import numpy as np
 
 from repro.core import nekbone as _nek
 from repro.resilience.retry import (RetryPolicy, SolveReport,
-                                    solve_resilient)
+                                    _default_rebuild, _rebuild_caller,
+                                    has_precision_fallback, solve_resilient)
 from repro.resilience.status import SolveStatus
 from repro.serving.bucket_cache import BucketedSolveCache
 
@@ -134,8 +135,27 @@ class SolveService:
     def warmup(self) -> int:
         """Pre-compile the bucket ladder; returns the trace count paid.
         After this, serving any mix of queue depths 1..max_batch
-        compiles nothing new (machine-checked in bench_serve.py)."""
-        return self.cache.warmup(self.problem)
+        compiles nothing new (machine-checked in bench_serve.py).
+
+        A problem that leans on reduced precision (bf16 dtype or a
+        bf16_x32 mixed-precision solve) additionally warms its
+        precision:float32 FALLBACK ladder: the resilience rung rebuilds
+        the fp32 problem mid-request, and without pre-warming, the first
+        bf16 divergence in production would pay the fallback's full
+        compile inside a request's latency — and trip the zero-trace
+        gate.  The rebuilt fallback shares its cache key with the warmed
+        build (same mesh identity/backend, precision tag dropped), so
+        rung-time rebuilds replay these compilations.
+        """
+        n = self.cache.warmup(self.problem)
+        if self.policy.precision_fallback and \
+                has_precision_fallback(self.problem):
+            rb = _rebuild_caller(
+                self.rebuild if self.rebuild is not None
+                else _default_rebuild(self.problem, self.max_batch))
+            fallback = rb(self.max_batch, dtype=jnp.float32)
+            n += self.cache.warmup(fallback)
+        return n
 
     def submit(self, req: SolveRequest):
         """Validate and enqueue one request.

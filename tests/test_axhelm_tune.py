@@ -37,6 +37,41 @@ def test_feasible_candidates_respect_budget(variant):
                                  True) > tune.VMEM_BUDGET_BYTES
 
 
+def test_bf16_block_charges_fp32_accumulator():
+    """REGRESSION (pre-fix: the y block was charged at the storage dtype).
+
+    The kernels accumulate in fp32 regardless of input width
+    (`preferred_element_type` on every contraction), so a bf16 block's y
+    window occupies fp32 bytes of VMEM.  The pre-fix model halved it with
+    the storage dtype and admitted bf16 block sizes whose real footprint
+    overflows the budget."""
+    eb, n1 = 16, 8
+    nodes = n1 ** 3
+    # trilinear/bf16: x at 2B, y at 4B (accumulator), 6 fp32 gradient
+    # intermediates, 24 vertex coords at 2B, (9 + 7) fp32 factor fields
+    expect = eb * (nodes * (2 + 4 + 6 * 4 + 16 * 4) + 24 * 2)
+    got = tune.block_vmem_bytes("trilinear", n1, 1, jnp.bfloat16, eb)
+    assert got == expect, (got, expect)
+    # halving the storage dtype narrows the x and vertex windows ONLY —
+    # pre-fix the difference also carried a (phantom) narrowed y window
+    f32 = tune.block_vmem_bytes("trilinear", n1, 1, jnp.float32, eb)
+    assert f32 - got == eb * (nodes * 2 + 24 * 2), (f32, got)
+
+
+def test_v1_cache_entries_miss_under_v2_schema(isolated_cache):
+    """Entries tuned under the v1 VMEM model (which undercounted bf16
+    blocks) must MISS, not resolve: the key carries the model schema."""
+    backend = tune._backend_tag(None)
+    v1_key = "trilinear/n1=3/d=1/bfloat16/helm=0"
+    isolated_cache.write_text(json.dumps(
+        {backend: {v1_key: {"block_elems": 256}}}))
+    assert tune._config_key(
+        "trilinear", 3, 1, jnp.bfloat16, False).startswith("v2/")
+    eb = tune.get_block_elems("trilinear", 3, 1, jnp.bfloat16)
+    assert eb != 256
+    assert eb in tune.feasible_block_elems("trilinear", 3, 1, jnp.bfloat16)
+
+
 def test_get_block_elems_heuristic_fallback(isolated_cache):
     """With empty caches and no sweep, the static heuristic (clamped to a
     feasible candidate) is returned."""

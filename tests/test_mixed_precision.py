@@ -1,0 +1,414 @@
+"""precision="bf16_x32": the mixed-precision MXU solve, end to end.
+
+The ROADMAP's bf16 lever: `setup_problem(..., precision="bf16_x32")`
+keeps the problem's canonical operator/diag at fp32 and adds a bf16
+operator that runs the inner sweeps of `core.pcg.refine` — fp32 true
+residual and correction accumulation around reduced-precision inner
+PCG.  On the element-sharded solve the bf16 operator's neighbour halo
+exchange can additionally ship a compressed wire
+(`make_solver_ctx(compress="bf16"/"int8")`).
+
+Covered here:
+
+- parity with the plain fp32 solve: converges to the SAME (absolute,
+  fp32-level) tolerance on both equations, both backends, nrhs 1 and 4,
+  and in the single-sweep regime adds <= 2 iterations;
+- the sharded solve on 2 and 4 devices (non-divisible E), every wire:
+  psum, neighbour, neighbour+bf16 (bit-identical to uncompressed — the
+  codec is lossless on bf16 partials), neighbour+int8;
+- the HLO gate: the compiled compressed solve moves bf16 (or int8)
+  interface buffers through collective-permutes and contains ZERO
+  interface-sized all-reduces;
+- the resilience net: a persistently-broken bf16 operator climbs to the
+  precision:float32 rung (which drops the precision tag — the problem's
+  dtype is already fp32) and converges; the serving layer pre-warms that
+  fallback so the escape costs no post-warmup trace;
+- validation at the construction sites.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mesh_gen, nekbone
+from repro.distributed.context import HALO_COMPRESS, make_solver_ctx
+from repro.resilience.inject import FaultSpec
+from repro.resilience.retry import (RetryPolicy, has_precision_fallback,
+                                    solve_resilient)
+from repro.resilience.status import SolveStatus
+from repro.serving.solve_service import SolveRequest, SolveService
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str, devices: int) -> list:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return [json.loads(line) for line in out.stdout.strip().splitlines()
+            if line.startswith("{")]
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3), seed=3)
+
+
+def _rhs(mesh, rng, nrhs=1, norm=30.0, masked=False):
+    shape = (mesh.n_global,) if nrhs == 1 else (mesh.n_global, nrhs)
+    b = rng.standard_normal(shape).astype(np.float32)
+    if masked:
+        bc = np.asarray(mesh.boundary)
+        b[bc] = 0.0
+    b = b / np.linalg.norm(b, axis=0, keepdims=(nrhs > 1)) * norm
+    return jnp.asarray(b)
+
+
+# ------------------------------------------------------------- validation --
+
+
+def test_precision_validation(mesh):
+    with pytest.raises(ValueError, match="precision"):
+        nekbone.setup_problem(mesh, precision="fp8")
+    with pytest.raises(ValueError, match="float32"):
+        nekbone.setup_problem(mesh, precision="bf16_x32",
+                              dtype=jnp.bfloat16)
+
+
+def test_compress_validation():
+    with pytest.raises(ValueError, match="compress"):
+        make_solver_ctx(devices=1, compress="zstd")
+    with pytest.raises(ValueError, match="neighbour"):
+        make_solver_ctx(devices=1, exchange="psum", compress="bf16")
+    assert set(HALO_COMPRESS) == {"bf16", "int8"}
+
+
+def test_plain_problem_has_no_lo_operator(mesh):
+    p = nekbone.setup_problem(mesh)
+    assert getattr(p, "precision", None) is None
+    assert p.op_lo is None
+
+
+# ------------------------------------------------- unsharded parity suite --
+
+
+@pytest.mark.parametrize("helm", [False, True])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_refined_solve_reaches_fp32_tolerance(mesh, rng, helm, backend):
+    """bf16_x32 reaches the same ABSOLUTE tolerance as the fp32 solve, on
+    both equations and both backends, within a bounded iteration overhead
+    (the per-sweep true-residual gain saturates at ~eps_bf16 * kappa, so
+    tight tolerances cost extra sweeps — bounded, not free).
+
+    Dirichlet-masked systems: refinement's envelope is
+    ``kappa_eff * eps_bf16 < 1``, and the UNMASKED Helmholtz system's
+    lowest mode is anchored only by the tiny ``lam1 * h^3`` mass scale —
+    outside the envelope by design (see
+    test_outside_envelope_stagnates_and_escapes)."""
+    variant = "merged" if (helm and backend == "pallas") else "trilinear"
+    kw = dict(variant=variant, helmholtz=helm, backend=backend,
+              dirichlet=True)
+    b = _rhs(mesh, rng, masked=True)
+    tol = 1e-4
+    p32 = nekbone.setup_problem(mesh, **kw)
+    r32 = nekbone.solve(p32, b, tol=tol, max_iter=400)
+    pmx = nekbone.setup_problem(mesh, precision="bf16_x32", **kw)
+    rmx = nekbone.solve(pmx, b, tol=tol, max_iter=400)
+    assert int(rmx.status) == int(SolveStatus.CONVERGED), int(rmx.status)
+    true = float(jnp.linalg.norm(b - p32.op(rmx.x)))
+    assert true <= tol * 1.5, true
+    assert rmx.x.dtype == jnp.float32
+    assert int(rmx.iterations) <= 2 * int(r32.iterations) + 2, \
+        (int(rmx.iterations), int(r32.iterations))
+
+
+def test_refined_solve_single_sweep_iteration_parity(mesh, rng):
+    """In the single-sweep regime (tol within one inner sweep's reach —
+    the inner sweeps run to at least 0.03 relative, so any outer tol
+    looser than that) the refinement adds at most 2 iterations over
+    plain fp32."""
+    b = _rhs(mesh, rng)
+    tol = 0.05 * float(jnp.linalg.norm(b))
+    p32 = nekbone.setup_problem(mesh)
+    pmx = nekbone.setup_problem(mesh, precision="bf16_x32")
+    r32 = nekbone.solve(p32, b, tol=tol, max_iter=200)
+    rmx = nekbone.solve(pmx, b, tol=tol, max_iter=200)
+    assert int(rmx.status) == int(SolveStatus.CONVERGED)
+    assert abs(int(rmx.iterations) - int(r32.iterations)) <= 2, \
+        (int(rmx.iterations), int(r32.iterations))
+
+
+def test_refined_solve_block_nrhs4(mesh, rng):
+    b = _rhs(mesh, rng, nrhs=4)
+    tol = 1e-4
+    p32 = nekbone.setup_problem(mesh, nrhs=4)
+    pmx = nekbone.setup_problem(mesh, precision="bf16_x32", nrhs=4)
+    rmx = nekbone.solve(pmx, b, tol=tol, max_iter=400)
+    assert rmx.status.shape == (4,)
+    assert np.all(np.asarray(rmx.status) == int(SolveStatus.CONVERGED))
+    true = np.asarray(jnp.linalg.norm(b - p32.op(rmx.x), axis=0))
+    assert np.all(true <= tol * 1.5), true
+
+
+def test_refined_solve_jacobi_and_x0(mesh, rng):
+    b = _rhs(mesh, rng)
+    pmx = nekbone.setup_problem(mesh, precision="bf16_x32")
+    cold = nekbone.solve(pmx, b, precond="jacobi", tol=1e-4, max_iter=400)
+    assert int(cold.status) == int(SolveStatus.CONVERGED)
+    warm = nekbone.solve(pmx, b, precond="jacobi", tol=1e-4, max_iter=400,
+                         x0=cold.x)
+    assert int(warm.iterations) < int(cold.iterations)
+
+
+def test_refined_problem_keeps_full_precision_canonical_fields(mesh):
+    """op/diag stay fp32 — every diag.dtype-based cast in retry/serving
+    (and the true-residual audit) must see the HI precision."""
+    p = nekbone.setup_problem(mesh, precision="bf16_x32")
+    assert p.diag.dtype == jnp.float32
+    assert p.op_lo is not None
+    x = jnp.ones(mesh.n_global, jnp.float32)
+    assert p.op(x).dtype == jnp.float32
+    rel = float(jnp.linalg.norm(
+        p.op_lo(x.astype(jnp.bfloat16)).astype(jnp.float32) - p.op(x))
+        / jnp.linalg.norm(p.op(x)))
+    assert 1e-5 < rel < 0.03, rel  # bf16-rounded operator, not fp32, not junk
+
+
+def test_outside_envelope_stagnates_and_escapes(mesh, rng):
+    """Refinement's convergence envelope is ``kappa_eff * eps_bf16 < 1``.
+    The UNMASKED Helmholtz system sits outside it: its lowest mode is
+    anchored only by the ``lam1 * h^3`` mass scale, so the bf16 inner
+    operator cannot produce a correction that moves the true residual.
+    The honest answer is STAGNATED (never a false CONVERGED), and the
+    resilience ladder's precision:float32 rung — no fault injection,
+    this is a NATURAL failure — carries the solve home."""
+    kw = dict(helmholtz=True, dirichlet=False)
+    b = _rhs(mesh, rng)
+    tol = 1e-4
+    pmx = nekbone.setup_problem(mesh, precision="bf16_x32", **kw)
+    res = nekbone.solve(pmx, b, tol=tol, max_iter=400)
+    assert int(res.status) == int(SolveStatus.STAGNATED), int(res.status)
+    assert np.all(np.isfinite(np.asarray(res.x)))
+    true = float(jnp.linalg.norm(b - pmx.op(res.x)))
+    assert true > tol * 1.5, true  # stagnated means NOT at tolerance
+
+    rep = solve_resilient(pmx, b, RetryPolicy(), tol=tol, max_iter=400)
+    assert rep.converged, (rep.rung, rep.status, rep.true_residual)
+    assert rep.rung[0] == "precision:float32", rep.rung
+
+
+# ------------------------------------------------------- sharded parity ----
+
+
+_SHARD_SCRIPT = """
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import mesh_gen, nekbone
+from repro.distributed.context import make_solver_ctx
+
+devices = %(devices)d
+assert jax.device_count() == devices, jax.devices()
+# E = 18: not divisible by 4
+mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3), seed=3)
+rng = np.random.default_rng(0)
+ref = nekbone.setup_problem(mesh, backend="reference")
+tol = %(tol)g
+for nrhs in (1, 4):
+    shape = (mesh.n_global, nrhs) if nrhs > 1 else (mesh.n_global,)
+    b = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    b = b / jnp.linalg.norm(b, axis=0, keepdims=nrhs > 1) * 30.0
+    for exch, comp in [("psum", None), ("neighbour", None),
+                       ("neighbour", "bf16"), ("neighbour", "int8")]:
+        ctx = make_solver_ctx(devices=devices, nrhs=nrhs, exchange=exch,
+                              compress=comp)
+        p = nekbone.setup_problem(mesh, backend="reference", shard_ctx=ctx,
+                                  precision="bf16_x32")
+        res = nekbone.solve(p, b, tol=tol, max_iter=500)
+        true = np.asarray(jnp.linalg.norm(
+            b - ref.op(res.x), axis=0 if nrhs > 1 else None))
+        print(json.dumps({
+            "nrhs": nrhs, "exchange": exch, "compress": comp,
+            "it": np.atleast_1d(np.asarray(res.iterations)).tolist(),
+            "status": np.atleast_1d(np.asarray(res.status)).tolist(),
+            "true": np.atleast_1d(true).tolist(),
+            "xsum": float(jnp.sum(jnp.abs(res.x)))}))
+"""
+
+
+@pytest.mark.parametrize("devices", [2, 4])
+def test_sharded_refined_solve_every_wire(devices):
+    """The sharded bf16_x32 solve converges to the TRUE (reference
+    operator) tolerance on every wire; the bf16 codec is bit-identical to
+    the uncompressed neighbour exchange (the inner partials are already
+    bf16, so the codec is lossless); int8 stays within tolerance thanks
+    to the self-rounding consistency pass."""
+    tol = 1e-5
+    rows = _run(_SHARD_SCRIPT % {"devices": devices, "tol": tol}, devices)
+    assert len(rows) == 8
+    by = {(r["nrhs"], r["exchange"], r["compress"]): r for r in rows}
+    for r in rows:
+        assert all(s == int(SolveStatus.CONVERGED) for s in r["status"]), r
+        assert all(t <= tol * 1.5 for t in r["true"]), r
+    for nrhs in (1, 4):
+        plain = by[(nrhs, "neighbour", None)]
+        bf16 = by[(nrhs, "neighbour", "bf16")]
+        assert bf16["it"] == plain["it"], (bf16, plain)
+        assert bf16["xsum"] == plain["xsum"], (bf16, plain)
+
+
+def test_sharded_refined_hlo_gate():
+    """CI gate, two layers.  The LOWERED module (what we hand to XLA) must
+    ship REDUCED-width interface buffers through its collective-permutes
+    (bf16 wire -> bf16 permutes; int8 wire -> i8 + f32-scale permutes) —
+    this is the graph the repo constructs, and the width that reaches a
+    TPU wire.  The COMPILED module must contain ZERO interface-sized
+    all-reduces — the exchange stays point-to-point through XLA's
+    optimizer.  The compiled wire WIDTH is deliberately not asserted:
+    the CPU backend hoists the (lossless) bf16<->f32 / i8->f32 converts
+    across its collective-permutes and runs the emulated wire at f32,
+    which says nothing about the TPU lowering."""
+    rows = _run(textwrap.dedent("""
+        import json, re
+        import jax, jax.numpy as jnp
+        from repro.core import mesh_gen, nekbone
+        from repro.distributed.context import make_solver_ctx
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
+                                         seed=3)
+        for comp in ("bf16", "int8"):
+            ctx = make_solver_ctx(devices=4, exchange="neighbour",
+                                  compress=comp)
+            sh = nekbone.setup_problem(mesh, variant="trilinear",
+                                       dtype=jnp.float32, shard_ctx=ctx,
+                                       precision="bf16_x32")
+            ns = int(sh.partition.n_shared)
+            B = jnp.zeros((mesh.n_global,), jnp.float32)
+            low = jax.jit(lambda b: sh.run_refined(b, 1e-5, 300)).lower(B)
+            wire = re.compile(r"stablehlo\\.collective_permute.[^\\n]*?"
+                              r"->\\s*tensor<\\d+x(\\w+)>")
+            kinds = sorted(set(wire.findall(low.as_text())))
+            txt = low.compile().as_text()
+            iface = re.compile(r"= f32\\[" + str(ns)
+                               + r"[,\\]]\\S* all-reduce(?:-start)?\\(")
+            cperm = re.compile(r"= \\w+\\[[^\\]]*\\]\\S* "
+                               r"collective-permute(?:-start)?\\(")
+            print(json.dumps({
+                "compress": comp, "iface_psums": len(iface.findall(txt)),
+                "wire_types": kinds,
+                "n_cperms": len(cperm.findall(txt))}))
+    """), devices=4)
+    assert len(rows) == 2
+    for r in rows:
+        assert r["iface_psums"] == 0, r
+        assert r["n_cperms"] > 0, r
+    bf16 = next(r for r in rows if r["compress"] == "bf16")
+    int8 = next(r for r in rows if r["compress"] == "int8")
+    # hi-operator exchanges stay f32; the lo wire adds the narrow types
+    assert "bf16" in bf16["wire_types"], bf16
+    assert "i8" in int8["wire_types"], int8
+
+
+# ------------------------------------------------------ resilience ladder --
+
+
+def test_has_precision_fallback_predicate(mesh):
+    assert not has_precision_fallback(nekbone.setup_problem(mesh))
+    assert has_precision_fallback(
+        nekbone.setup_problem(mesh, precision="bf16_x32"))
+    assert has_precision_fallback(
+        nekbone.setup_problem(mesh, dtype=jnp.bfloat16))
+
+
+def test_broken_bf16_operator_escapes_to_fp32_rung(mesh, rng):
+    """A PERSISTENT fault in the bf16 operator refires on every refine
+    sweep (and again on the restart rung), so the only way out is the
+    precision:float32 rebuild — which must drop the precision tag and
+    converge."""
+    p = nekbone.setup_problem(mesh, precision="bf16_x32")
+    b = _rhs(mesh, rng)
+    fault = FaultSpec(mode="nan", iteration=1, element=0)
+    rep = solve_resilient(p, b, RetryPolicy(), tol=1e-4, max_iter=400,
+                          fault=fault, persistent=True)
+    assert rep.converged, (rep.rung, rep.status, rep.true_residual)
+    assert rep.rung[0] == "precision:float32", rep.rung
+    rungs = [a.rung for a in rep.attempts]
+    assert rungs == ["initial", "restart", "precision:float32"], rungs
+
+
+def test_transient_bf16_fault_recovers_on_restart(mesh, rng):
+    p = nekbone.setup_problem(mesh, precision="bf16_x32")
+    b = _rhs(mesh, rng)
+    fault = FaultSpec(mode="nan", iteration=1, element=0)
+    rep = solve_resilient(p, b, RetryPolicy(), tol=1e-4, max_iter=400,
+                          fault=fault, persistent=False)
+    assert rep.converged
+    assert rep.rung[0] == "restart", rep.rung
+
+
+# ------------------------------------------------------------ serving ------
+
+
+def test_service_warms_fp32_fallback_and_trace_gate(rng):
+    """The production gate: a reduced-precision problem's service warms
+    BOTH ladders, so a mid-stream escape to precision:float32 compiles
+    nothing (post-warmup traces == 0) and the request still converges."""
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 1, 3), seed=3)
+    # an OUT-OF-ENVELOPE bf16_x32 problem (unmasked Helmholtz — see
+    # test_outside_envelope_stagnates_and_escapes): every request
+    # NATURALLY stagnates on the mixed-precision rungs and climbs to
+    # precision:float32 — no injection, exactly the production failure
+    # mode the fallback pre-warm exists for
+    p = nekbone.setup_problem(mesh, helmholtz=True, dirichlet=False,
+                              precision="bf16_x32")
+    tol = 1e-3   # within the fp32 rung's audit reach at this conditioning
+    svc = SolveService(p, RetryPolicy(), max_batch=2,
+                       tol=tol, max_iter=400)
+    svc.warmup()
+    t0 = svc.trace_count
+    reqs = []
+    for uid in range(3):
+        b = rng.standard_normal(mesh.n_global).astype(np.float32)
+        b = b / np.linalg.norm(b) * 30.0
+        reqs.append(SolveRequest(uid=uid, b=jnp.asarray(b)))
+        svc.submit(reqs[-1])
+    svc.run_until_drained()
+    assert svc.trace_count == t0, (svc.trace_count, t0)
+    assert svc.served == 3
+    for r in reqs:
+        assert r.done and r.report is not None and r.report.converged, \
+            (r.error, None if r.report is None else r.report.rung)
+        assert r.report.rung[0] == "precision:float32", r.report.rung
+
+
+def test_service_bf16_x32_problem_round_trip(rng):
+    """A bf16_x32 problem serves end-to-end: the healthy path converges
+    on the mixed-precision solver itself, with zero post-warmup traces
+    (the fp32 fallback ladder is warmed but idle)."""
+    mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(2, 2, 1, 3), seed=3)
+    p = nekbone.setup_problem(mesh, precision="bf16_x32")
+    svc = SolveService(p, RetryPolicy(), max_batch=2, tol=1e-4,
+                       max_iter=400)
+    svc.warmup()
+    t0 = svc.trace_count
+    reqs = []
+    for uid in range(3):
+        b = rng.standard_normal(mesh.n_global).astype(np.float32)
+        b = b / np.linalg.norm(b) * 30.0
+        reqs.append(SolveRequest(uid=uid, b=b))
+        svc.submit(reqs[-1])
+    svc.run_until_drained()
+    assert svc.trace_count == t0, (svc.trace_count, t0)
+    for r in reqs:
+        assert r.done and r.report is not None and r.report.converged, \
+            (r.error, None if r.report is None else r.report.rung)
+        assert r.report.rung[0] == "initial", r.report.rung

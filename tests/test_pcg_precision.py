@@ -1,0 +1,290 @@
+"""Reduced-precision PCG reductions + the fp32 iterative-refinement loop.
+
+Two root-fixed bugs are pinned here:
+
+1. The default `dot` of `pcg`/`pcg_block` (and `owned_dot`) inherited the
+   OPERAND dtype for its accumulation, so a bf16 solve reduced its
+   alpha/beta/tolerance scalars at 8-bit mantissa — a sum of a few
+   thousand like-magnitude bf16 terms stops absorbing new terms.  The fix
+   upcasts reduced-precision operands to fp32 before the contraction
+   (`core.pcg._up`); fp32/fp64 solves must stay BIT-identical.
+
+2. `refine` is the mixed-precision outer loop the ROADMAP's MXU lever
+   needs: fp32 true residual + correction accumulation around
+   reduced-precision inner sweeps.  Its contract — converges to fp32
+   tolerances a pure bf16 solve cannot reach, matches plain PCG's
+   answer, per-column semantics under `batched=True` — is tested on
+   dense SPD systems where the ground truth is a direct solve.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pcg import owned_dot, pcg, pcg_block, refine
+from repro.resilience.status import SolveStatus
+
+
+def _spd(rng, n, cond_boost=1.0):
+    a = rng.standard_normal((n, n))
+    a = a @ a.T / n + cond_boost * np.eye(n)
+    return np.asarray(a, np.float32)
+
+
+def _ops(a):
+    """(fp32 matvec, bf16 matvec) for one dense SPD matrix."""
+    a32 = jnp.asarray(a, jnp.float32)
+    a16 = jnp.asarray(a, jnp.bfloat16)
+
+    def hi(v):
+        return a32 @ v
+
+    def lo(v):
+        return (a16 @ v.astype(jnp.bfloat16)).astype(v.dtype)
+
+    return hi, lo
+
+
+# --------------------------------------------------------------------------
+# bug 1: reduction accumulation dtype
+# --------------------------------------------------------------------------
+
+
+def test_owned_dot_accumulates_bf16_operands_in_fp32():
+    """REGRESSION (pre-fix: owned_dot summed at the operand dtype).
+
+    linspace(1, 2, 4096) has sum-of-squares 9557.2; a bf16-rounded result
+    is 9536 (8-bit mantissa), a fp32-accumulated one is exact to ~1e-3.
+    """
+    v = jnp.asarray(np.linspace(1, 2, 4096), jnp.bfloat16)
+    w = jnp.ones(4096, bool)
+    d = owned_dot(w)(v, v)
+    assert d.dtype == jnp.float32
+    ref = float(np.sum(np.asarray(v, np.float64) ** 2))
+    assert abs(float(d) - ref) < 1.0, (float(d), ref)
+
+
+def test_owned_dot_fp32_bit_identical_to_plain_sum():
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.standard_normal(777), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(777), jnp.float32)
+    w = jnp.ones(777, bool)
+    assert float(owned_dot(w)(u, v)) == float(jnp.sum(u * v))
+
+
+def test_pcg_default_dot_matches_explicit_fp32_dot_on_bf16():
+    """REGRESSION: a bf16 solve with the default dot must follow the same
+    trajectory as one whose dot explicitly accumulates in fp32 — pre-fix
+    the default returned bf16 scalars and the trajectories split."""
+    rng = np.random.default_rng(1)
+    n = 2048
+    a = _spd(rng, n, cond_boost=4.0)
+    b = rng.standard_normal(n).astype(np.float32)
+    b = b / np.linalg.norm(b)
+    a16 = jnp.asarray(a, jnp.bfloat16)
+    b16 = jnp.asarray(b, jnp.bfloat16)
+
+    def op(v):
+        return a16 @ v
+
+    def fp32_dot(u, v):
+        return jnp.vdot(u.astype(jnp.float32), v.astype(jnp.float32))
+
+    res_default = pcg(op, b16, tol=5e-3, max_iter=100)
+    res_fp32 = pcg(op, b16, tol=5e-3, max_iter=100, dot=fp32_dot)
+    assert int(res_default.iterations) == int(res_fp32.iterations)
+    assert res_default.residual.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(res_default.x, np.float32),
+        np.asarray(res_fp32.x, np.float32))
+
+
+def test_pcg_fp32_path_bit_identical_to_pre_fix_dot():
+    """The fp32 upcast is a passthrough: the default dot must reproduce
+    the pre-fix `jnp.vdot(u, v)` contraction bit-for-bit on fp32."""
+    rng = np.random.default_rng(2)
+    n = 300
+    a = jnp.asarray(_spd(rng, n))
+    b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+    def op(v):
+        return a @ v
+
+    res_default = pcg(op, b, tol=1e-6, max_iter=200)
+    res_legacy = pcg(op, b, tol=1e-6, max_iter=200,
+                     dot=lambda u, v: jnp.vdot(u, v))
+    assert int(res_default.iterations) == int(res_legacy.iterations)
+    np.testing.assert_array_equal(np.asarray(res_default.x),
+                                  np.asarray(res_legacy.x))
+
+
+def test_pcg_block_default_dot_fp32_on_bf16_columns():
+    rng = np.random.default_rng(3)
+    n = 1024
+    a16 = jnp.asarray(_spd(rng, n, cond_boost=4.0), jnp.bfloat16)
+    b = rng.standard_normal((n, 3)).astype(np.float32)
+    b = b / np.linalg.norm(b, axis=0, keepdims=True)
+
+    def op(v):
+        return a16 @ v
+
+    res = pcg_block(op, jnp.asarray(b, jnp.bfloat16), tol=5e-3,
+                    max_iter=100)
+    assert res.residual.dtype == jnp.float32
+    assert np.all(np.asarray(res.status) == int(SolveStatus.CONVERGED)), \
+        np.asarray(res.status)
+
+
+# --------------------------------------------------------------------------
+# refine: the fp32 outer loop
+# --------------------------------------------------------------------------
+
+
+def test_refine_reaches_fp32_tolerance_bf16_cannot():
+    rng = np.random.default_rng(4)
+    n = 500
+    a = _spd(rng, n)
+    hi, lo = _ops(a)
+    b = rng.standard_normal(n).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b))
+    tol = 1e-6
+
+    res = refine(hi, lo, b, tol=tol, max_iter=400)
+    true = float(jnp.linalg.norm(b - hi(res.x)))
+    assert int(res.status) == int(SolveStatus.CONVERGED), int(res.status)
+    assert true <= tol * 1.5, true
+
+    # a pure bf16 solve bottoms out orders of magnitude above that
+    res16 = pcg(lo, b.astype(jnp.bfloat16), tol=tol, max_iter=400,
+                stagnation_window=10)
+    true16 = float(jnp.linalg.norm(
+        b - hi(res16.x.astype(jnp.float32))))
+    assert true16 > 10 * tol, true16
+
+
+def test_refine_matches_plain_pcg_solution():
+    rng = np.random.default_rng(5)
+    n = 400
+    a = _spd(rng, n)
+    hi, lo = _ops(a)
+    b = rng.standard_normal(n).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b))
+    ref = pcg(hi, b, tol=1e-6, max_iter=400)
+    res = refine(hi, lo, b, tol=1e-6, max_iter=400)
+    err = float(jnp.linalg.norm(res.x - ref.x) / jnp.linalg.norm(ref.x))
+    assert err < 1e-4, err
+
+
+def test_refine_single_sweep_regime_adds_no_restart():
+    """A tolerance one sweep can reach runs exactly one inner solve —
+    sweeps = 1 is observable as iterations == the inner solve's count
+    with no second true-residual recomputation changing the answer."""
+    rng = np.random.default_rng(6)
+    n = 400
+    a = _spd(rng, n)
+    hi, lo = _ops(a)
+    b = rng.standard_normal(n).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b))
+    tol = 0.05  # well above the per-sweep bf16 floor
+    ref = pcg(hi, b, tol=tol, max_iter=200)
+    res = refine(hi, lo, b, tol=tol, max_iter=200)
+    assert abs(int(res.iterations) - int(ref.iterations)) <= 2, \
+        (int(res.iterations), int(ref.iterations))
+
+
+def test_refine_batched_per_column_status():
+    rng = np.random.default_rng(7)
+    n = 400
+    a = _spd(rng, n)
+    hi, lo = _ops(a)
+    b = rng.standard_normal((n, 4)).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b, axis=0, keepdims=True))
+    tol = 1e-5
+    res = refine(hi, lo, b, tol=tol, max_iter=600, batched=True)
+    true = np.asarray(jnp.linalg.norm(b - hi(res.x), axis=0))
+    assert res.x.shape == b.shape
+    assert res.status.shape == (4,)
+    assert np.all(np.asarray(res.status) == int(SolveStatus.CONVERGED))
+    assert np.all(true <= tol * 1.5), true
+
+
+def test_refine_warm_start_converges_faster():
+    rng = np.random.default_rng(8)
+    n = 400
+    a = _spd(rng, n)
+    hi, lo = _ops(a)
+    b = rng.standard_normal(n).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b))
+    cold = refine(hi, lo, b, tol=1e-5, max_iter=400)
+    warm = refine(hi, lo, b, x0=cold.x, tol=1e-5, max_iter=400)
+    assert int(warm.iterations) < int(cold.iterations)
+
+
+def test_refine_jacobi_precond():
+    rng = np.random.default_rng(9)
+    n = 400
+    a = _spd(rng, n)
+    # skew the diagonal so jacobi actually matters
+    d = np.linspace(1.0, 50.0, n).astype(np.float32)
+    a = a * np.outer(np.sqrt(d), np.sqrt(d))
+    hi, lo = _ops(a)
+    b = rng.standard_normal(n).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b))
+    inv = jnp.asarray(1.0 / np.diag(a), jnp.bfloat16)
+
+    def pre(r):
+        return inv * r
+
+    plain = refine(hi, lo, b, tol=1e-5, max_iter=2000)
+    prec = refine(hi, lo, b, precond=pre, tol=1e-5, max_iter=2000)
+    assert int(prec.status) == int(SolveStatus.CONVERGED)
+    assert int(prec.iterations) < int(plain.iterations)
+
+
+def test_refine_broken_lo_operator_flags_stagnated():
+    """A lo operator whose corrections cannot improve the true residual
+    (here: the NEGATED system — the inner CG breaks down at iteration 0
+    and returns a zero correction) must be flagged STAGNATED by the
+    monotone-acceptance rollback (the precision:float32 rung's trigger),
+    not loop forever or report convergence."""
+    rng = np.random.default_rng(10)
+    n = 300
+    a = _spd(rng, n)
+    hi, _ = _ops(a)
+    a16 = jnp.asarray(a, jnp.bfloat16)
+
+    def lo(v):
+        return -(a16 @ v.astype(jnp.bfloat16)).astype(v.dtype)
+
+    b = rng.standard_normal(n).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b))
+    res = refine(hi, lo, b, tol=1e-6, max_iter=400)
+    assert int(res.status) == int(SolveStatus.STAGNATED), int(res.status)
+    assert np.all(np.isfinite(np.asarray(res.x)))
+
+
+def test_refine_nan_lo_operator_flags_without_poisoning_x():
+    rng = np.random.default_rng(11)
+    n = 200
+    a = _spd(rng, n)
+    hi, _ = _ops(a)
+
+    def lo(v):
+        return jnp.full_like(v, jnp.nan)
+
+    b = rng.standard_normal(n).astype(np.float32)
+    b = jnp.asarray(b / np.linalg.norm(b))
+    res = refine(hi, lo, b, tol=1e-6, max_iter=100)
+    assert int(res.status) != int(SolveStatus.CONVERGED)
+    assert np.all(np.isfinite(np.asarray(res.x)))
+
+
+def test_refine_zero_rhs_converges_immediately():
+    n = 100
+    a = _spd(np.random.default_rng(12), n)
+    hi, lo = _ops(a)
+    res = refine(hi, lo, jnp.zeros(n, jnp.float32), tol=1e-8, max_iter=50)
+    assert int(res.iterations) == 0
+    assert int(res.status) == int(SolveStatus.CONVERGED)
+    assert float(jnp.linalg.norm(res.x)) == 0.0
