@@ -1,0 +1,24 @@
+"""Performance-contract static analysis over HLO / StableHLO / jaxprs.
+
+The paper's claims — bytes moved, collectives paid, accumulation widths —
+are statically checkable on the artifacts jax already produces.  This
+package turns the repo's scattered regex gates into one layer:
+
+  * ``hlo_ir``     — structured module/computation/instruction IR parsed
+                     from ``compiled.as_text()`` (HLO) and
+                     ``lowered.as_text()`` (StableHLO), with async
+                     start/done pairing, replica groups, trip counts.
+  * ``contracts``  — declarative contract objects (`CollectiveCensus`,
+                     `WireWidth`, `AccumulationDtype`, `NoF64Leak`,
+                     `NoHostTransfer`, `VmemBudget`, `NoRetrace`)
+                     evaluated against an entry point's artifacts.
+  * ``lint``       — registry of the repo's real entry points bound to
+                     contract suites; ``python -m repro.analysis.lint``
+                     is the blocking CI step.
+
+See DESIGN.md "Performance contracts".
+"""
+
+from repro.analysis import hlo_ir  # noqa: F401
+
+__all__ = ["hlo_ir"]

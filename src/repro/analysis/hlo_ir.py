@@ -1,0 +1,423 @@
+"""Structured IR over compiled HLO and lowered StableHLO module text.
+
+`launch/hlo_analysis.py` grew a regex walker good enough for FLOP/traffic
+costing; the performance contracts need the same parse with *structure*:
+per-instruction dtype/dims, replica groups, channel ids, async
+`-start`/`-done` pairing, called computations, while trip counts.  This
+module owns the parse; the cost walker and the contract layer both consume
+it.  Parsing semantics (the regexes, operand splitting, entry detection)
+are kept verbatim from the walker so `analyze_hlo` stays bit-compatible.
+
+Two dialects appear in this repo:
+
+  * **HLO text** — ``compiled.as_text()``; full module/computation parse
+    via :class:`HloModule`.
+  * **StableHLO (MLIR) text** — ``lowered.as_text()``; no computation
+    nesting worth modelling, so collectives are scraped line-wise
+    (``stablehlo.collective_permute`` et al.) with their result element
+    types — this is the graph the repo *constructs*, and the only place
+    the reduced wire width is visible (CPU's compiled modules hoist the
+    converts and run the emulated wire at f32).
+
+The census helpers at the bottom (`collective_census`,
+`interface_allreduce_count`, `wire_dtypes`) auto-detect the dialect and
+count async pairs ONCE — the contract layer and the test gates go through
+them instead of hand-rolled regexes.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+__all__ = [
+    "DTYPE_BYTES", "COLLECTIVES", "Instruction", "Computation", "HloModule",
+    "type_bytes", "shape_dims", "parse_operands", "group_size", "trip_count",
+    "called", "parse_module", "collective_census", "interface_allreduce_count",
+    "wire_dtypes", "normalize_dtype",
+]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+
+
+def type_bytes(type_str: str) -> int:
+    """Total bytes of every shape mentioned in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> List[int]:
+    """Dims of the FIRST shape in an HLO type string ([] for scalars)."""
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def parse_operands(rest: str) -> List[str]:
+    """Operand names up to the closing paren of the op's argument list.
+
+    Operands may carry inline types — `f32[32,64]{1,0} %Arg_0.1` — whose
+    `[dims]` and `{layout}` contain commas, so the splitter must track
+    bracket/brace nesting, not just parens: splitting on every depth-1
+    comma used to shred `f32[32,64]` into fragments, the `%name` lookup
+    came back empty, and every dot's contraction dims resolved to 1 (the
+    FLOP undercount the walker tests pinned).
+    """
+    depth = 1
+    out, cur = [], []
+    for ch in rest:
+        if depth == 1 and ch == ",":
+            out.append("".join(cur)); cur = []
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+            if depth == 0:
+                break
+        cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for o in out:
+        m = re.search(r"%([\w.\-]+)", o)
+        names.append(m.group(1) if m else "")
+    return names
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_MLIR_RE = re.compile(
+    r"replica_groups\s*=\s*dense<[^>]*>\s*:\s*tensor<(\d+)x(\d+)xi64>")
+
+
+def group_size(rest: str, default: int = 1) -> int:
+    """Participants per replica group, across the dialect spellings:
+    HLO iota `replica_groups=[2,4]<=[8]`, HLO list `{{0,1,2,3},{...}}`,
+    StableHLO `dense<[[0,1],[2,3]]> : tensor<2x2xi64>`."""
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_MLIR_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def trip_count(rest: str) -> Optional[int]:
+    """`known_trip_count` of a counted while, plain or \\"-escaped
+    backend_config spelling."""
+    m = re.search(r'known_trip_count[\\"]*:\s*{[\\"]*n[\\"]*:[\\"]*(\d+)',
+                  rest)
+    return int(m.group(1)) if m else None
+
+
+def called(rest: str, key: str) -> Optional[str]:
+    """Computation named by a `key=%target` attribute (body/condition/
+    to_apply/calls)."""
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+@dataclass
+class Instruction:
+    """One HLO instruction with derived structure on top of the raw parse.
+
+    The raw fields (`name`, `type_str`, `opcode`, `rest`, `operands`) are
+    exactly what the legacy walker's `Instr` carried; everything else is
+    computed from them on demand.
+    """
+
+    name: str
+    type_str: str        # result type, raw
+    opcode: str
+    rest: str            # operand list + attributes, raw
+    operands: List[str] = field(default_factory=list)
+
+    # -- derived ----------------------------------------------------------
+    @property
+    def dtype(self) -> Optional[str]:
+        """Element dtype of the first shape in the result type."""
+        for m in _SHAPE_RE.finditer(self.type_str):
+            if m.group(1) in DTYPE_BYTES:
+                return m.group(1)
+        return None
+
+    @property
+    def dims(self) -> List[int]:
+        return shape_dims(self.type_str)
+
+    @property
+    def result_bytes(self) -> int:
+        return type_bytes(self.type_str)
+
+    @property
+    def is_start(self) -> bool:
+        return self.opcode.endswith("-start")
+
+    @property
+    def is_done(self) -> bool:
+        return self.opcode.endswith("-done")
+
+    @property
+    def base_opcode(self) -> str:
+        """Opcode with any async `-start`/`-done` suffix stripped."""
+        for suf in ("-start", "-done"):
+            if self.opcode.endswith(suf):
+                return self.opcode[: -len(suf)]
+        return self.opcode
+
+    @property
+    def is_collective(self) -> bool:
+        return self.base_opcode in COLLECTIVES
+
+    @property
+    def channel_id(self) -> Optional[int]:
+        m = re.search(r"channel_id=(\d+)", self.rest)
+        return int(m.group(1)) if m else None
+
+    def group_size(self, default: int = 1) -> int:
+        return group_size(self.rest, default)
+
+    @property
+    def trip_count(self) -> Optional[int]:
+        return trip_count(self.rest)
+
+    def called(self, key: str) -> Optional[str]:
+        return called(self.rest, key)
+
+    @property
+    def called_computations(self) -> List[str]:
+        """Every computation this instruction enters (while body/cond,
+        call target, fusion body, conditional branches)."""
+        out = []
+        for key in ("body", "condition", "to_apply", "calls"):
+            c = self.called(key)
+            if c:
+                out.append(c)
+        out += re.findall(
+            r"(?:branch_computations=\{|true_computation=|"
+            r"false_computation=)%?([\w.\-]+)", self.rest)
+        return out
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+
+    def __iter__(self) -> Iterator[Instruction]:
+        return iter(self.instructions)
+
+    def __len__(self) -> int:
+        return len(self.instructions)
+
+    def get(self, name: str) -> Optional[Instruction]:
+        for i in self.instructions:
+            if i.name == name:
+                return i
+        return None
+
+
+@dataclass
+class HloModule:
+    """Parsed HLO module: computations by name + the detected entry."""
+
+    computations: Dict[str, Computation]
+    entry: Optional[str] = None
+
+    @classmethod
+    def parse(cls, txt: str) -> "HloModule":
+        comps: Dict[str, Computation] = {}
+        cur: Optional[Computation] = None
+        for line in txt.splitlines():
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = Computation(m.group(1))
+                    comps[cur.name] = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                name, type_str, opcode, rest = m.groups()
+                cur.instructions.append(
+                    Instruction(name, type_str, opcode, rest,
+                                parse_operands(rest)))
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.MULTILINE)
+        entry = m.group(1) if m else (next(iter(comps)) if comps else None)
+        return cls(comps, entry)
+
+    def instructions(self) -> Iterator[Tuple[str, Instruction]]:
+        """(computation name, instruction) over the whole module."""
+        for cname, comp in self.computations.items():
+            for i in comp:
+                yield cname, i
+
+    def result_type(self, cname: str, name: str) -> str:
+        comp = self.computations.get(cname)
+        if comp is None:
+            return ""
+        i = comp.get(name)
+        return i.type_str if i else ""
+
+    def collectives(self, pairs_once: bool = True
+                    ) -> Iterator[Tuple[str, Instruction]]:
+        """Collective instructions module-wide.  With `pairs_once` (the
+        default) an async `-start`/`-done` pair contributes its `-start`
+        only, so censuses count each collective exactly once whether XLA
+        emitted it sync or async."""
+        for cname, i in self.instructions():
+            if not i.is_collective:
+                continue
+            if pairs_once and i.is_done:
+                continue
+            yield cname, i
+
+    def async_pairs(self) -> List[Tuple[str, Instruction, Instruction]]:
+        """(computation, start, done) triples, matched by the done op's
+        first operand naming the start op in the same computation."""
+        out = []
+        for cname, comp in self.computations.items():
+            starts = {i.name: i for i in comp if i.is_start}
+            for i in comp:
+                if i.is_done and i.operands and i.operands[0] in starts:
+                    out.append((cname, starts[i.operands[0]], i))
+        return out
+
+
+def parse_module(txt: str) -> HloModule:
+    return HloModule.parse(txt)
+
+
+# ---------------------------------------------------------------- census ---
+
+# StableHLO collectives appear line-wise in the lowered MLIR; the result
+# tensor after `->` is the payload a TPU wire would carry.
+_MLIR_OP_TO_HLO = {
+    "all_reduce": "all-reduce", "all_gather": "all-gather",
+    "reduce_scatter": "reduce-scatter", "all_to_all": "all-to-all",
+    "collective_permute": "collective-permute",
+}
+# DOTALL because region-bearing ops (all_reduce, reduce_scatter) put the
+# result type on the closing `}) : (...) -> tensor<...>` line; the region
+# body itself never contains `->`, so the first arrow is the op's own type
+_MLIR_COLL_RE = re.compile(
+    r"stablehlo\.(all_reduce|all_gather|reduce_scatter|all_to_all|"
+    r"collective_permute)\b.*?->\s*(?:tuple<)?tensor<([^>]*?)>", re.S)
+
+# StableHLO integer spellings -> HLO spellings
+_MLIR_DTYPE_TO_HLO = {
+    "i1": "pred", "i8": "s8", "i16": "s16", "i32": "s32", "i64": "s64",
+    "ui8": "u8", "ui16": "u16", "ui32": "u32", "ui64": "u64",
+}
+
+
+def normalize_dtype(dt: str) -> str:
+    """Map a StableHLO element-type spelling onto the HLO one (i8 -> s8);
+    HLO spellings pass through."""
+    return _MLIR_DTYPE_TO_HLO.get(dt, dt)
+
+
+def _mlir_elem_dtype(tensor_spec: str) -> str:
+    """Element type of a `tensor<...>` body: last `x`-separated token
+    (`14xbf16` -> bf16, `2x14xi8` -> i8, `f32` -> f32)."""
+    return tensor_spec.rsplit("x", 1)[-1]
+
+
+def _is_mlir(txt: str) -> bool:
+    return "stablehlo." in txt or "module @" in txt
+
+
+def collective_census(txt: str) -> Dict[str, int]:
+    """Per-kind collective counts for a module in EITHER dialect, async
+    pairs counted once.  Always returns all five kinds (zeros included) so
+    censuses compare with `==`."""
+    counts = {k: 0 for k in COLLECTIVES}
+    if _is_mlir(txt):
+        for m in _MLIR_COLL_RE.finditer(txt):
+            counts[_MLIR_OP_TO_HLO[m.group(1)]] += 1
+        return counts
+    for _, i in HloModule.parse(txt).collectives(pairs_once=True):
+        counts[i.base_opcode] += 1
+    return counts
+
+
+def interface_allreduce_count(txt: str, n_shared: int,
+                              nrhs: Optional[int] = None,
+                              dtype: str = "f32") -> int:
+    """All-reduces over interface-sized buffers in compiled HLO text,
+    async pairs counted once.
+
+    `nrhs=None` matches any buffer whose LEADING dim is `n_shared` (the
+    neighbour/box gates' `f32[<ns>[,\\]]` predicate); `nrhs=1` requires
+    exactly `[n_shared]`; `nrhs=k>1` requires `[n_shared, k]`.
+    """
+    n = 0
+    for _, i in HloModule.parse(txt).collectives(pairs_once=True):
+        if i.base_opcode != "all-reduce" or i.dtype != dtype:
+            continue
+        dims = i.dims
+        if nrhs is None:
+            ok = bool(dims) and dims[0] == n_shared
+        elif nrhs == 1:
+            ok = dims == [n_shared]
+        else:
+            ok = dims == [n_shared, nrhs]
+        n += ok
+    return n
+
+
+def wire_dtypes(txt: str, kind: str = "collective-permute",
+                normalize: bool = False) -> List[str]:
+    """Sorted element dtypes shipped through `kind` collectives, either
+    dialect.  On lowered StableHLO this is the width the repo constructs
+    (bf16/i8 wires); `normalize=True` maps MLIR spellings onto HLO ones."""
+    kinds: set = set()
+    if _is_mlir(txt):
+        for m in _MLIR_COLL_RE.finditer(txt):
+            if _MLIR_OP_TO_HLO[m.group(1)] == kind:
+                kinds.add(_mlir_elem_dtype(m.group(2)))
+    else:
+        for _, i in HloModule.parse(txt).collectives(pairs_once=True):
+            if i.base_opcode == kind and i.dtype:
+                kinds.add(i.dtype)
+    if normalize:
+        kinds = {normalize_dtype(k) for k in kinds}
+    return sorted(kinds)
+
+
+def find_instructions(txt: str, pred: Callable[[Instruction], bool]
+                      ) -> List[Tuple[str, Instruction]]:
+    """(computation, instruction) pairs matching a predicate — the
+    contract layer's generic query."""
+    return [(c, i) for c, i in HloModule.parse(txt).instructions()
+            if pred(i)]

@@ -58,13 +58,23 @@ def gather(y_local: jnp.ndarray, global_ids: jnp.ndarray,
             f"into a single trailing axis (got shape {y_local.shape} vs ids "
             f"{global_ids.shape})")
     ids = global_ids.reshape(-1)
+    # The scatter-add must not accumulate at sub-fp32 width (shared dofs
+    # collect up to 8 element contributions; the `AccumulationDtype`
+    # contract forbids bf16 accumulation) — sum in f32, round once, like
+    # `neighbour_finish` already does on the sharded path.
+    dt = y_local.dtype
+    acc_dt = jnp.promote_types(dt, jnp.float32) \
+        if jnp.issubdtype(dt, jnp.floating) and jnp.finfo(dt).bits < 32 \
+        else dt
     if y_local.ndim == global_ids.ndim:  # scalar field
-        return jax.ops.segment_sum(y_local.reshape(-1), ids,
-                                   num_segments=n_global)
-    # vector field: trailing component axis
-    d = y_local.shape[-1]
-    vals = y_local.reshape(-1, d)
-    return jax.ops.segment_sum(vals, ids, num_segments=n_global)
+        out = jax.ops.segment_sum(y_local.reshape(-1).astype(acc_dt), ids,
+                                  num_segments=n_global)
+    else:
+        # vector field: trailing component axis
+        d = y_local.shape[-1]
+        vals = y_local.reshape(-1, d).astype(acc_dt)
+        out = jax.ops.segment_sum(vals, ids, num_segments=n_global)
+    return out.astype(dt)
 
 
 def dssum(y_local: jnp.ndarray, global_ids: jnp.ndarray,

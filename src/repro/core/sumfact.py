@@ -16,19 +16,33 @@ import jax.numpy as jnp
 __all__ = ["grad_ref", "grad_ref_transpose", "apply_dr", "apply_ds", "apply_dt"]
 
 
+def _einsum(subscripts: str, dhat: jnp.ndarray, x: jnp.ndarray):
+    """Contraction with >= fp32 accumulation, like the Pallas kernels.
+
+    For sub-fp32 float inputs (the bf16 twin operator) the dot must not
+    accumulate at the storage width — the `AccumulationDtype` contract
+    forbids it everywhere — so accumulate in f32 and round once at the
+    end.  The >= fp32 path is left untouched (bit-identical)."""
+    out_dt = jnp.promote_types(dhat.dtype, x.dtype)
+    if jnp.issubdtype(out_dt, jnp.floating) and jnp.finfo(out_dt).bits < 32:
+        return jnp.einsum(subscripts, dhat, x,
+                          preferred_element_type=jnp.float32).astype(out_dt)
+    return jnp.einsum(subscripts, dhat, x)
+
+
 def apply_dr(x: jnp.ndarray, dhat: jnp.ndarray) -> jnp.ndarray:
     """y(..., k, j, i) = sum_m Dhat(i, m) x(..., k, j, m)."""
-    return jnp.einsum("im,...m->...i", dhat, x)
+    return _einsum("im,...m->...i", dhat, x)
 
 
 def apply_ds(x: jnp.ndarray, dhat: jnp.ndarray) -> jnp.ndarray:
     """y(..., k, j, i) = sum_m Dhat(j, m) x(..., k, m, i)."""
-    return jnp.einsum("jm,...mi->...ji", dhat, x)
+    return _einsum("jm,...mi->...ji", dhat, x)
 
 
 def apply_dt(x: jnp.ndarray, dhat: jnp.ndarray) -> jnp.ndarray:
     """y(..., k, j, i) = sum_m Dhat(k, m) x(..., m, j, i)."""
-    return jnp.einsum("km,...mji->...kji", dhat, x)
+    return _einsum("km,...mji->...kji", dhat, x)
 
 
 def grad_ref(x: jnp.ndarray, dhat: jnp.ndarray):
@@ -39,7 +53,7 @@ def grad_ref(x: jnp.ndarray, dhat: jnp.ndarray):
 def grad_ref_transpose(gr: jnp.ndarray, gs: jnp.ndarray, gt: jnp.ndarray,
                        dhat: jnp.ndarray) -> jnp.ndarray:
     """y = D_r^T gr + D_s^T gs + D_t^T gt (the adjoint contractions)."""
-    y = jnp.einsum("mi,...m->...i", dhat, gr)
-    y = y + jnp.einsum("mj,...mi->...ji", dhat, gs)
-    y = y + jnp.einsum("mk,...mji->...kji", dhat, gt)
+    y = _einsum("mi,...m->...i", dhat, gr)
+    y = y + _einsum("mj,...mi->...ji", dhat, gs)
+    y = y + _einsum("mk,...mji->...kji", dhat, gt)
     return y

@@ -3,7 +3,8 @@
 Why not `compiled.cost_analysis()` alone?  XLA's cost analysis counts a
 `while` body ONCE, so anything under `lax.scan` (our layer stacks, microbatch
 accumulation, attention KV chunking) is undercounted by its trip count.  This
-walker parses `compiled.as_text()` and:
+walker runs over the structured module IR (`repro.analysis.hlo_ir` parses
+`compiled.as_text()`) and:
 
   * multiplies loop bodies by their `known_trip_count` (emitted by XLA for
     counted loops — all our scans),
@@ -14,7 +15,10 @@ walker parses `compiled.as_text()` and:
     dynamic-update-slice is special-cased as in-place),
   * sums per-collective wire bytes with ring-algorithm factors
     (all-reduce 2x(n-1)/n, all-gather/reduce-scatter/all-to-all (n-1)/n,
-    collective-permute 1x).
+    collective-permute 1x).  Async `-start`/`-done` pairs are charged once,
+    on the `-start`; an in-place collective-permute-start ships only its
+    SOURCE operand (the destination buffer operand is local storage, not
+    wire payload).
 
 All numbers are per-device (the SPMD module is per-device).
 """
@@ -26,57 +30,24 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis.hlo_ir import (
+    COLLECTIVES,
+    DTYPE_BYTES as _DTYPE_BYTES,  # noqa: F401  (re-export, tests import it)
+    HloModule,
+    Instruction as Instr,
+    group_size as _group_size,
+    parse_operands as _parse_operands,
+    shape_dims as _shape_dims,
+    trip_count as _trip_count,
+    type_bytes as _type_bytes,
+)
+
 __all__ = ["analyze_hlo", "HloCost"]
-
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
-    "token": 0,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
-
-COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-               "collective-permute")
 
 _SKIP_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
                  "bitcast", "while", "conditional", "after-all",
                  "partition-id", "replica-id", "iota", "rng-bit-generator",
                  "custom-call"}
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        numel = 1
-        if dims:
-            for d in dims.split(","):
-                numel *= int(d)
-        total += numel * _DTYPE_BYTES[dt]
-    return total
-
-
-def _shape_dims(type_str: str) -> List[int]:
-    m = _SHAPE_RE.search(type_str)
-    if not m or not m.group(2):
-        return []
-    return [int(d) for d in m.group(2).split(",")]
-
-
-@dataclass
-class Instr:
-    name: str
-    type_str: str
-    opcode: str
-    rest: str            # operand list + attributes, raw
-    operands: List[str] = field(default_factory=list)
 
 
 @dataclass
@@ -97,73 +68,10 @@ class HloCost:
         return sum(self.collective_bytes.values())
 
 
-def _parse_operands(rest: str) -> List[str]:
-    """Operand names up to the closing paren of the op's argument list.
-
-    Operands may carry inline types — `f32[32,64]{1,0} %Arg_0.1` — whose
-    `[dims]` and `{layout}` contain commas, so the splitter must track
-    bracket/brace nesting, not just parens: splitting on every depth-1
-    comma used to shred `f32[32,64]` into fragments, the `%name` lookup
-    came back empty, and every dot's contraction dims resolved to 1 (the
-    FLOP undercount the walker tests pinned).
-    """
-    depth = 1
-    out, cur = [], []
-    for ch in rest:
-        if depth == 1 and ch == ",":
-            out.append("".join(cur)); cur = []
-            continue
-        if ch in "([{":
-            depth += 1
-        elif ch in ")]}":
-            depth -= 1
-            if depth == 0:
-                break
-        cur.append(ch)
-    out.append("".join(cur))
-    names = []
-    for o in out:
-        m = re.search(r"%([\w.\-]+)", o)
-        names.append(m.group(1) if m else "")
-    return names
-
-
 def _parse_computations(txt: str) -> Dict[str, List[Instr]]:
-    comps: Dict[str, List[Instr]] = {}
-    cur: Optional[str] = None
-    for line in txt.splitlines():
-        if cur is None:
-            m = _COMP_RE.match(line)
-            if m:
-                cur = m.group(1)
-                comps[cur] = []
-            continue
-        if line.startswith("}"):
-            cur = None
-            continue
-        m = _INSTR_RE.match(line)
-        if m:
-            name, type_str, opcode, rest = m.groups()
-            instr = Instr(name, type_str, opcode, rest,
-                          _parse_operands(rest))
-            comps[cur].append(instr)
-    return comps
-
-
-def _group_size(rest: str, default: int = 1) -> int:
-    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
-    if m:
-        return int(m.group(2))
-    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
-    if m:
-        return len(m.group(1).split(","))
-    return default
-
-
-def _trip_count(rest: str) -> Optional[int]:
-    m = re.search(r'known_trip_count[\\"]*:\s*{[\\"]*n[\\"]*:[\\"]*(\d+)',
-                  rest)
-    return int(m.group(1)) if m else None
+    """Legacy view of the parse: computation name -> instruction list."""
+    return {name: comp.instructions
+            for name, comp in HloModule.parse(txt).computations.items()}
 
 
 def _called(rest: str, key: str) -> Optional[str]:
@@ -172,10 +80,13 @@ def _called(rest: str, key: str) -> Optional[str]:
 
 
 class _Walker:
-    def __init__(self, comps: Dict[str, List[Instr]]):
-        self.comps = comps
+    def __init__(self, mod: HloModule):
+        self.mod = mod
+        self.comps: Dict[str, List[Instr]] = {
+            name: comp.instructions
+            for name, comp in mod.computations.items()}
         self.shapes: Dict[Tuple[str, str], str] = {}
-        for cname, instrs in comps.items():
+        for cname, instrs in self.comps.items():
             for i in instrs:
                 self.shapes[(cname, i.name)] = i.type_str
         self._memo: Dict[Tuple[str, bool], HloCost] = {}
@@ -190,8 +101,8 @@ class _Walker:
             c = order.pop(0)
             for i in self.comps.get(c, []):
                 if i.opcode == "while":
-                    body = _called(i.rest, "body")
-                    trip = _trip_count(i.rest) or 1
+                    body = i.called("body")
+                    trip = i.trip_count or 1
                     if body:
                         mults[body] = mults.get(body, 0.0) \
                             + mults[c] * trip
@@ -199,7 +110,7 @@ class _Walker:
                             seen.add(body); order.append(body)
         for c, m in mults.items():
             for i in self.comps.get(c, []):
-                if i.opcode in _SKIP_TRAFFIC or i.opcode.endswith("-done"):
+                if i.opcode in _SKIP_TRAFFIC or i.is_done:
                     continue
                 if i.opcode == "fusion":
                     b = self._fusion_traffic(c, i)
@@ -233,6 +144,28 @@ class _Walker:
         o = max(rhs_dims[0], 1)
         return 2.0 * out_numel * math.prod(rhs_dims) / o
 
+    def _collective_wire(self, cname: str, i: Instr) -> Tuple[str, float]:
+        """(base kind, per-execution wire bytes) with ring factors."""
+        base = i.base_opcode
+        if base == "collective-permute":
+            # a sync permute's single operand IS the payload; the in-place
+            # async form carries (src, dst[, offsets]) and only the source
+            # buffer crosses the wire — summing all operands double-counts
+            src = i.operands[0] if i.operands else ""
+            return base, float(
+                _type_bytes(self.shapes.get((cname, src), "")))
+        op_bytes = sum(_type_bytes(self.shapes.get((cname, o), ""))
+                       for o in i.operands if o)
+        out_bytes = _type_bytes(i.type_str)
+        n = i.group_size(1)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if base == "all-reduce":
+            return base, 2.0 * op_bytes * frac
+        if base == "all-gather":
+            return base, out_bytes * frac
+        # reduce-scatter / all-to-all
+        return base, op_bytes * frac
+
     def cost(self, cname: str, inside_fusion: bool = False) -> HloCost:
         key = (cname, inside_fusion)
         if key in self._memo:
@@ -241,9 +174,9 @@ class _Walker:
         for i in self.comps.get(cname, []):
             op = i.opcode
             if op == "while":
-                body = _called(i.rest, "body")
-                cond = _called(i.rest, "condition")
-                trip = _trip_count(i.rest) or 1
+                body = i.called("body")
+                cond = i.called("condition")
+                trip = i.trip_count or 1
                 if body:
                     total.add(self.cost(body, inside_fusion), trip)
                 if cond:
@@ -256,7 +189,7 @@ class _Walker:
                     total.add(self.cost(branch, inside_fusion), 1.0)
                 continue
             if op == "fusion":
-                called = _called(i.rest, "calls")
+                called = i.called("calls")
                 if called:
                     inner = self.cost(called, True)
                     total.flops += inner.flops
@@ -267,7 +200,7 @@ class _Walker:
                     total.traffic_bytes += self._fusion_traffic(cname, i)
                 continue
             if op == "call":
-                called = _called(i.rest, "to_apply")
+                called = i.called("to_apply")
                 if called:
                     total.add(self.cost(called, inside_fusion), 1.0)
                 continue
@@ -275,26 +208,12 @@ class _Walker:
                 total.flops += self._dot_flops(cname, i)
             elif op == "convolution":
                 total.flops += self._conv_flops(cname, i)
-            if op in COLLECTIVES or any(op.startswith(c + "-start")
-                                        for c in COLLECTIVES):
-                base = op.replace("-start", "")
-                op_bytes = sum(_type_bytes(self.shapes.get(
-                    (cname, o), "")) for o in i.operands if o)
-                out_bytes = _type_bytes(i.type_str)
-                n = _group_size(i.rest, 1)
-                frac = (n - 1) / n if n > 1 else 0.0
-                if base == "all-reduce":
-                    wire = 2.0 * op_bytes * frac
-                elif base == "all-gather":
-                    wire = out_bytes * frac
-                elif base in ("reduce-scatter", "all-to-all"):
-                    wire = op_bytes * frac
-                else:  # collective-permute
-                    wire = op_bytes
+            if i.is_collective and not i.is_done:
+                base, wire = self._collective_wire(cname, i)
                 total.collective_bytes[base] = \
                     total.collective_bytes.get(base, 0.0) + wire
             if not inside_fusion and op not in _SKIP_TRAFFIC \
-                    and not op.endswith("-done"):
+                    and not i.is_done:
                 total.traffic_bytes += self._plain_traffic(cname, i)
         self._memo[key] = total
         return total
@@ -329,11 +248,10 @@ class _Walker:
 
 def analyze_hlo(txt: str, entry: Optional[str] = None,
                 top_n: int = 0) -> HloCost:
-    comps = _parse_computations(txt)
+    mod = HloModule.parse(txt)
     if entry is None:
-        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", txt, re.MULTILINE)
-        entry = m.group(1) if m else next(iter(comps))
-    w = _Walker(comps)
+        entry = mod.entry or next(iter(mod.computations))
+    w = _Walker(mod)
     cost = w.cost(entry)
     if top_n:
         w.tally(entry, entry)

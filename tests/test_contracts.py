@@ -1,0 +1,394 @@
+"""Negative controls for `repro.analysis.contracts`.
+
+Every contract the gates migrated onto is exercised against a
+DELIBERATELY violated module/jaxpr and must fire with an actionable
+message naming the offending instruction — plus a positive control
+showing the same suite stays silent on conforming input.  The capstone
+is the real-HLO cross-check from the acceptance criteria: a psum-based
+exchange checked against the NEIGHBOUR contract suite makes exactly the
+collective-census contract fail, naming the interface all-reduce.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.contracts import (AccumulationDtype, CollectiveCensus,
+                                      EntryArtifacts, NoF64Leak,
+                                      NoHostTransfer, NoRetrace, VmemBudget,
+                                      WireWidth, check_suite,
+                                      interface_allreduce)
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# ------------------------------------------------------------- fixtures ----
+
+# a psum-style exchange: one interface-sized all-reduce, no permutes
+_PSUM_HLO = """
+HloModule psum_like
+
+ENTRY %main (p0: f32[169]) -> f32[169] {
+  %p0 = f32[169] parameter(0)
+  ROOT %iface-ar = f32[169] all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+
+# a neighbour-style exchange: permutes only, zero all-reduces
+_NEIGHBOUR_HLO = """
+HloModule neighbour_like
+
+ENTRY %main (p0: f32[169]) -> f32[169] {
+  %p0 = f32[169] parameter(0)
+  %cp0 = f32[169] collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+  ROOT %cp1 = f32[169] collective-permute(%cp0), source_target_pairs={{1,0},{0,1}}
+}
+"""
+
+_F64_HLO = """
+HloModule leak
+
+ENTRY %main (p0: f32[8]) -> f64[8] {
+  %p0 = f32[8] parameter(0)
+  ROOT %widened = f64[8] convert(%p0)
+}
+"""
+
+_HOST_HLO = """
+HloModule host
+
+ENTRY %main (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8] parameter(0)
+  %out = token[] outfeed(%p0), outfeed_config="x"
+  ROOT %cb = f32[8] custom-call(%p0), custom_call_target="xla_python_cpu_callback"
+}
+"""
+
+_F32_WIRE_MLIR = """
+module @jit_exchange {
+  func.func public @main(%arg0: tensor<14xf32>) -> tensor<14xf32> {
+    %0 = "stablehlo.collective_permute"(%arg0) : (tensor<14xf32>) -> tensor<14xf32>
+    return %0 : tensor<14xf32>
+  }
+}
+"""
+
+_BF16_WIRE_MLIR = """
+module @jit_exchange {
+  func.func public @main(%arg0: tensor<14xf32>) -> tensor<14xf32> {
+    %0 = stablehlo.convert %arg0 : (tensor<14xf32>) -> tensor<14xbf16>
+    %1 = "stablehlo.collective_permute"(%0) : (tensor<14xbf16>) -> tensor<14xbf16>
+    %2 = stablehlo.convert %1 : (tensor<14xbf16>) -> tensor<14xf32>
+    return %2 : tensor<14xf32>
+  }
+}
+"""
+
+
+def _art(**kw):
+    return EntryArtifacts(name="test-entry", **kw)
+
+
+def _neighbour_suite(ns, rounds):
+    """The suite the neighbour gates run: permute count exact, ZERO
+    interface all-reduces."""
+    return [
+        CollectiveCensus(
+            exact={"collective-permute": rounds},
+            matchers=[interface_allreduce(ns, exact=0)]),
+        NoF64Leak(),
+    ]
+
+
+# -------------------------------------------------- census / matchers ------
+
+
+def test_census_exact_count_fires_with_counts_in_message():
+    c = CollectiveCensus(exact={"collective-permute": 2, "all-reduce": 0})
+    v = c.check(_art(compiled_text=_PSUM_HLO))
+    assert len(v) == 2
+    msgs = "\n".join(str(x) for x in v)
+    assert "expected exactly 2 collective-permute" in msgs
+    assert "has 0" in msgs and "has 1" in msgs
+    assert c.check(_art(compiled_text=_NEIGHBOUR_HLO)) == []
+
+
+def test_interface_matcher_names_offending_allreduce():
+    """A psum exchange checked against the neighbour contract: the
+    violation must NAME the interface all-reduce instruction."""
+    suite = _neighbour_suite(ns=169, rounds=2)
+    v = check_suite(_art(compiled_text=_PSUM_HLO), suite)
+    # only the census contract fires, twice (permute count + matcher)
+    assert {x.contract for x in v} == {"collective-census"}
+    msgs = "\n".join(x.message for x in v)
+    assert "%iface-ar" in msgs and "all-reduce" in msgs
+    assert "interface all-reduce f32[169" in msgs
+    # the conforming neighbour module passes the same suite untouched
+    assert check_suite(_art(compiled_text=_NEIGHBOUR_HLO), suite) == []
+
+
+def test_interface_matcher_nrhs_discriminates():
+    m1 = interface_allreduce(169, nrhs=1, exact=1)
+    m4 = interface_allreduce(169, nrhs=4, exact=1)
+    assert CollectiveCensus(matchers=[m1]).check(
+        _art(compiled_text=_PSUM_HLO)) == []
+    v = CollectiveCensus(matchers=[m4]).check(_art(compiled_text=_PSUM_HLO))
+    assert len(v) == 1 and "found 0" in v[0].message
+
+
+def test_min_counts_fires_when_wire_disappears():
+    c = CollectiveCensus(min_counts={"collective-permute": 1})
+    v = c.check(_art(compiled_text=_PSUM_HLO))
+    assert len(v) == 1 and "at least 1" in v[0].message
+    assert c.check(_art(compiled_text=_NEIGHBOUR_HLO)) == []
+
+
+# ------------------------------------------------------------ wire width ---
+
+
+def test_wire_width_fires_when_reduced_wire_lost():
+    c = WireWidth(require={"bf16"})
+    v = c.check(_art(lowered_text=_F32_WIRE_MLIR))
+    assert len(v) == 1
+    assert v[0].contract == "wire-width"
+    assert "no collective-permute ships bf16" in v[0].message
+    assert "f32" in v[0].message          # observed dtypes listed
+    assert c.check(_art(lowered_text=_BF16_WIRE_MLIR)) == []
+
+
+def test_wire_width_allowed_set_fires_on_full_width():
+    c = WireWidth(allowed={"bf16"})
+    v = c.check(_art(lowered_text=_F32_WIRE_MLIR))
+    assert len(v) == 1 and "ships f32" in v[0].message
+
+
+# ---------------------------------------------------- accumulation dtype ---
+
+
+def test_accumulation_dtype_fires_on_bf16_dot():
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 4), jnp.bfloat16)
+    jx = jax.make_jaxpr(lambda a: a @ a)(x)
+    v = AccumulationDtype().check(_art(jaxpr=jx))
+    assert len(v) == 1
+    assert "dot_general accumulates in bfloat16" in v[0].message
+    assert "preferred_element_type=float32" in v[0].message
+
+
+def test_accumulation_dtype_fires_on_f16_preferred():
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((4, 4), jnp.float16)
+    jx = jax.make_jaxpr(
+        lambda a: jax.lax.dot(a, a, preferred_element_type=jnp.float16))(x)
+    v = AccumulationDtype().check(_art(jaxpr=jx))
+    assert len(v) == 1 and "float16" in v[0].message
+
+
+def test_accumulation_dtype_fires_on_bf16_reduce_and_segment_sum():
+    import jax
+    import jax.numpy as jnp
+
+    x = jnp.ones((16,), jnp.bfloat16)
+    # jnp.sum itself upcasts (part of the root-fix class) — bind the raw
+    # primitive to model a hand-rolled bf16 accumulation
+    v = AccumulationDtype().check(_art(jaxpr=jax.make_jaxpr(
+        lambda a: jax.lax.reduce_sum_p.bind(a, axes=(0,)))(x)))
+    assert len(v) == 1 and "reduce_sum" in v[0].message
+
+    ids = jnp.arange(16) % 4
+    v = AccumulationDtype().check(_art(jaxpr=jax.make_jaxpr(
+        lambda a: jax.ops.segment_sum(a, ids, num_segments=4))(x)))
+    assert len(v) == 1 and "scatter-add" in v[0].message
+
+
+def test_accumulation_dtype_descends_into_jitted_subjaxprs():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def inner(a):
+        return a @ a
+
+    x = jnp.ones((4, 4), jnp.bfloat16)
+    jx = jax.make_jaxpr(lambda a: inner(a) + 1)(x)
+    v = AccumulationDtype().check(_art(jaxpr=jx))
+    assert len(v) == 1 and "bfloat16" in v[0].message
+
+
+def test_accumulation_dtype_passes_root_fixed_reference_path():
+    """The repo's own bf16 twin-operator building blocks (sumfact einsums,
+    dense gather) accumulate in f32 by construction — the contract must
+    stay silent on them, and on an explicitly f32-accumulated dot."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import gather_scatter as gs
+    from repro.core import sumfact
+
+    dhat = jnp.ones((4, 4), jnp.bfloat16)
+    x = jnp.ones((2, 4, 4, 4), jnp.bfloat16)
+    jx = jax.make_jaxpr(
+        lambda a: sumfact.grad_ref_transpose(*sumfact.grad_ref(a, dhat),
+                                             dhat))(x)
+    assert AccumulationDtype().check(_art(jaxpr=jx)) == []
+
+    ids = jnp.arange(16).reshape(2, 8) % 5
+    y = jnp.ones((2, 8), jnp.bfloat16)
+    jx = jax.make_jaxpr(lambda a: gs.gather(a, ids, 5))(y)
+    assert AccumulationDtype().check(_art(jaxpr=jx)) == []
+
+    a32 = jnp.ones((4, 4), jnp.bfloat16)
+    jx = jax.make_jaxpr(lambda a: jax.lax.dot(
+        a, a, preferred_element_type=jnp.float32).astype(jnp.bfloat16))(a32)
+    assert AccumulationDtype().check(_art(jaxpr=jx)) == []
+
+
+# -------------------------------------------------------------- f64 / host -
+
+
+def test_no_f64_leak_fires_both_dialects():
+    v = NoF64Leak().check(_art(compiled_text=_F64_HLO))
+    assert len(v) == 1 and "%widened" in v[0].message
+    mlir = _F32_WIRE_MLIR.replace("f32", "f64")
+    v = NoF64Leak().check(_art(lowered_text=mlir))
+    assert len(v) == 1 and "f64" in v[0].message
+    assert NoF64Leak().check(_art(compiled_text=_PSUM_HLO)) == []
+
+
+def test_no_host_transfer_fires_on_outfeed_and_callback():
+    v = NoHostTransfer().check(_art(compiled_text=_HOST_HLO))
+    assert len(v) == 2
+    msgs = "\n".join(x.message for x in v)
+    assert "%out" in msgs and "outfeed" in msgs
+    assert "%cb" in msgs and "custom-call" in msgs
+    assert NoHostTransfer().check(_art(compiled_text=_NEIGHBOUR_HLO)) == []
+
+
+# ------------------------------------------------------------ vmem budget --
+
+
+def test_vmem_budget_fires_on_oversized_block():
+    import jax.numpy as jnp
+    from repro.kernels.axhelm import tune
+
+    ok = VmemBudget("precomputed", n1=8, d=1, dtype=jnp.float32,
+                    block_elems=8)
+    assert ok.check(_art()) == []
+    # same configuration against a deliberately tiny budget must fail
+    # with the model's byte count in the message
+    tiny = VmemBudget("precomputed", n1=8, d=1, dtype=jnp.float32,
+                      block_elems=8, budget=1024)
+    v = tiny.check(_art())
+    assert len(v) == 1
+    need = tune.block_vmem_bytes("precomputed", 8, 1, jnp.float32, 8)
+    assert f"needs {need} B" in v[0].message
+    assert "shrink the block" in v[0].message
+
+
+# -------------------------------------------------------------- no-retrace -
+
+
+def test_no_retrace_counts_helper():
+    assert NoRetrace.counts(5, 5, "warm") == []
+    v = NoRetrace.counts(5, 7, "cold")
+    assert len(v) == 1
+    assert "5 -> 7" in v[0].message and "2 post-warmup" in v[0].message
+    assert v[0].entry == "cold"
+
+
+# ------------------------------------------------------- missing artifacts -
+
+
+def test_missing_artifact_is_a_violation_not_a_pass():
+    for c in (CollectiveCensus(exact={"all-reduce": 0}),
+              WireWidth(require={"bf16"}), AccumulationDtype(),
+              NoF64Leak(), NoHostTransfer(), NoRetrace()):
+        v = c.check(_art())
+        assert len(v) == 1, c.name
+        assert "missing" in v[0].message, c.name
+
+
+# ------------------------------------------- real-HLO cross-check (2 dev) --
+
+
+def test_psum_solve_fails_neighbour_contract_on_real_hlo():
+    """Acceptance negative control on REAL compiled modules: lower both
+    exchange paths at 2 devices, check each against BOTH suites.  Each
+    passes its own; the psum module fails the neighbour suite on exactly
+    the census contract, naming the all-reduce."""
+    script = textwrap.dedent("""
+        import json
+        import jax, jax.numpy as jnp
+        from repro.analysis.contracts import (CollectiveCensus, NoF64Leak,
+                                              check_suite, EntryArtifacts,
+                                              interface_allreduce)
+        from repro.core import mesh_gen, nekbone
+        from repro.distributed.context import make_solver_ctx
+
+        mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
+                                         seed=3)
+        txts, ns, rounds = {}, None, None
+        for exchange in ("psum", "neighbour"):
+            ctx = make_solver_ctx(devices=2, exchange=exchange)
+            sh = nekbone.setup_problem(mesh, variant="trilinear",
+                                       dtype=jnp.float32, shard_ctx=ctx)
+            ns = int(sh.partition.n_shared)
+            if exchange == "neighbour":
+                rounds = 2 * len(sh.partition.nbr_offsets)
+            b = jnp.zeros(mesh.n_global, jnp.float32)
+            txts[exchange] = jax.jit(sh.op).lower(b).compile().as_text()
+
+        def psum_suite():
+            return [CollectiveCensus(
+                        exact={"collective-permute": 0},
+                        matchers=[interface_allreduce(ns, exact=1)]),
+                    NoF64Leak()]
+
+        def neighbour_suite():
+            return [CollectiveCensus(
+                        exact={"collective-permute": rounds},
+                        matchers=[interface_allreduce(ns, exact=0)]),
+                    NoF64Leak()]
+
+        out = {}
+        for exchange, txt in txts.items():
+            art = EntryArtifacts(name=exchange, compiled_text=txt)
+            out[exchange] = {
+                "own": [str(v) for v in check_suite(
+                    art, psum_suite() if exchange == "psum"
+                    else neighbour_suite())],
+                "crossed": [{"contract": v.contract, "message": v.message}
+                            for v in check_suite(
+                                art, neighbour_suite()
+                                if exchange == "psum" else psum_suite())]}
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = _SRC
+    run = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert run.returncode == 0, run.stderr[-4000:]
+    out = json.loads(run.stdout.strip().splitlines()[-1])
+
+    for exchange in ("psum", "neighbour"):
+        assert out[exchange]["own"] == [], out[exchange]["own"]
+        crossed = out[exchange]["crossed"]
+        assert crossed, f"{exchange} should fail the other suite"
+        # exactly the census contract fires — never f64/other contracts
+        assert {v["contract"] for v in crossed} == {"collective-census"}
+
+    # the psum module's cross-failure names the offending all-reduce
+    psum_msgs = "\n".join(v["message"] for v in out["psum"]["crossed"])
+    assert "all-reduce" in psum_msgs
+    assert "interface all-reduce" in psum_msgs
+    assert "%" in psum_msgs          # instruction name included
+    # the neighbour module's cross-failure reports the unexpected permutes
+    nbr_msgs = "\n".join(v["message"] for v in out["neighbour"]["crossed"])
+    assert "collective-permute" in nbr_msgs

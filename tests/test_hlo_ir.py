@@ -1,0 +1,211 @@
+"""Parser edge cases + cost-walker regressions for `repro.analysis.hlo_ir`.
+
+Covers both dialect spellings (HLO text vs StableHLO/MLIR) of replica
+groups, trip counts, and collective payload types; the async
+`-start`/`-done` pairing; and the two counting regressions the IR
+refactor fixed at the root:
+
+  * async all-reduce pairs must contribute their wire bytes ONCE, and
+  * an in-place `collective-permute-start` ships only its SOURCE buffer
+    (summing all operands used to double-count the destination).
+"""
+
+import pytest
+
+from repro.analysis import hlo_ir
+from repro.analysis.hlo_ir import (HloModule, collective_census, group_size,
+                                   interface_allreduce_count, parse_operands,
+                                   trip_count, wire_dtypes)
+from repro.launch.hlo_analysis import analyze_hlo
+
+# ------------------------------------------------------------- fixtures ----
+
+_SYNC = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64] parameter(0)
+  %ar = f32[64] all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  ROOT %cp = f32[64] collective-permute(%ar), source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+# the same collectives, async: ar start/done pair + an IN-PLACE permute
+# (operands = source buffer, destination buffer)
+_ASYNC = """
+HloModule m
+
+ENTRY %main (p0: f32[64]) -> f32[64] {
+  %p0 = f32[64] parameter(0)
+  %ars = f32[64] all-reduce-start(%p0), replica_groups={{0,1}}, to_apply=%add
+  %ard = f32[64] all-reduce-done(%ars)
+  %buf = f32[64] custom-call(), custom_call_target="AllocateBuffer"
+  %cps = (f32[64], f32[64], u32[], u32[]) collective-permute-start(%ard, %buf), source_target_pairs={{0,1},{1,0}}
+  ROOT %cpd = f32[64] collective-permute-done(%cps)
+}
+"""
+
+_MLIR = """
+module @jit_exchange attributes {mhlo.num_partitions = 4 : i32} {
+  func.func public @main(%arg0: tensor<14xf32>) -> tensor<14xf32> {
+    %0 = stablehlo.convert %arg0 : (tensor<14xf32>) -> tensor<14xbf16>
+    %1 = "stablehlo.collective_permute"(%0) <{channel_handle = #stablehlo.channel_handle<handle = 1, type = 1>, source_target_pairs = dense<[[0, 1], [1, 0]]> : tensor<2x2xi64>}> : (tensor<14xbf16>) -> tensor<14xbf16>
+    %2 = "stablehlo.collective_permute"(%arg0) <{channel_handle = #stablehlo.channel_handle<handle = 2, type = 1>}> : (tensor<14xf32>) -> tensor<14xf32>
+    %3 = stablehlo.convert %1 : (tensor<14xbf16>) -> tensor<14xf32>
+    %4 = "stablehlo.all_reduce"(%3) <{replica_groups = dense<[[0, 1], [2, 3]]> : tensor<2x2xi64>}> ({
+    ^bb0(%a: tensor<f32>, %b: tensor<f32>):
+      %s = stablehlo.add %a, %b : tensor<f32>
+      stablehlo.return %s : tensor<f32>
+    }) : (tensor<14xf32>) -> tensor<14xf32>
+    %5 = "stablehlo.collective_permute"(%4) : (tensor<2x14xi8>) -> tensor<2x14xi8>
+    return %4 : tensor<14xf32>
+  }
+}
+"""
+
+
+# ---------------------------------------------------------- spellings ------
+
+
+def test_group_size_spellings():
+    # HLO iota form
+    assert group_size("replica_groups=[2,4]<=[8]") == 4
+    # HLO explicit list
+    assert group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    # StableHLO dense tensor
+    assert group_size(
+        "replica_groups = dense<[[0, 1], [2, 3]]> : tensor<2x2xi64>") == 2
+    assert group_size("channel_id=1", default=7) == 7
+
+
+def test_trip_count_spellings():
+    plain = 'backend_config={"known_trip_count":{"n":"12"}}'
+    escaped = 'backend_config="{\\"known_trip_count\\":{\\"n\\":\\"12\\"}}"'
+    assert trip_count(plain) == 12
+    assert trip_count(escaped) == 12
+    assert trip_count("backend_config={}") is None
+
+
+def test_parse_operands_nested_inline_types():
+    rest = ("f32[32,64]{1,0} %Arg_0.1, f32[64,16]{1,0} %Arg_1.2), "
+            "lhs_contracting_dims={1}, rhs_contracting_dims={0}")
+    assert parse_operands(rest) == ["Arg_0.1", "Arg_1.2"]
+    # constants without a %name come back empty, not shredded
+    assert parse_operands("f32[2]{0} constant({1,2})), foo=%bar") == [""]
+
+
+# ------------------------------------------------------ module structure ---
+
+
+def test_module_parse_and_instruction_properties():
+    mod = HloModule.parse(_SYNC)
+    assert mod.entry == "main"
+    assert set(mod.computations) == {"add", "main"}
+    ar = mod.computations["main"].get("ar")
+    assert ar.opcode == "all-reduce" and ar.is_collective
+    assert ar.dtype == "f32" and ar.dims == [64]
+    assert ar.result_bytes == 256
+    assert ar.group_size() == 2
+    assert not ar.is_start and not ar.is_done
+    assert ar.called("to_apply") == "add"
+    assert "add" in ar.called_computations
+
+
+def test_async_start_done_pairing():
+    mod = HloModule.parse(_ASYNC)
+    pairs = mod.async_pairs()
+    assert {(s.name, d.name) for _, s, d in pairs} == \
+        {("ars", "ard"), ("cps", "cpd")}
+    # pairs-once iteration sees each collective exactly once
+    once = [i.base_opcode for _, i in mod.collectives(pairs_once=True)]
+    assert sorted(once) == ["all-reduce", "collective-permute"]
+    both = [i.opcode for _, i in mod.collectives(pairs_once=False)]
+    assert len(both) == 4
+
+
+def test_tuple_result_start_op_properties():
+    mod = HloModule.parse(_ASYNC)
+    cps = mod.computations["main"].get("cps")
+    assert cps.is_start and cps.base_opcode == "collective-permute"
+    # first shape of the tuple result drives dtype/dims
+    assert cps.dtype == "f32" and cps.dims == [64]
+    assert cps.operands[:2] == ["ard", "buf"]
+
+
+# ------------------------------------------------------ census helpers -----
+
+
+def test_collective_census_counts_pairs_once():
+    assert collective_census(_SYNC)["all-reduce"] == 1
+    assert collective_census(_SYNC)["collective-permute"] == 1
+    # identical counts for the async spelling of the same program
+    assert collective_census(_ASYNC) == collective_census(_SYNC)
+
+
+def test_collective_census_mlir_dialect():
+    census = collective_census(_MLIR)
+    assert census["collective-permute"] == 3
+    assert census["all-reduce"] == 1
+    assert census["all-gather"] == 0
+
+
+def test_interface_allreduce_count_semantics():
+    assert interface_allreduce_count(_SYNC, 64) == 1
+    assert interface_allreduce_count(_SYNC, 64, nrhs=1) == 1
+    assert interface_allreduce_count(_SYNC, 64, nrhs=4) == 0
+    assert interface_allreduce_count(_SYNC, 63) == 0
+    # async spelling: the start/done pair is ONE interface exchange
+    assert interface_allreduce_count(_ASYNC, 64) == 1
+
+
+def test_wire_dtypes_both_dialects():
+    assert wire_dtypes(_MLIR) == ["bf16", "f32", "i8"]
+    assert wire_dtypes(_MLIR, normalize=True) == ["bf16", "f32", "s8"]
+    assert wire_dtypes(_SYNC) == ["f32"]
+    assert wire_dtypes(_MLIR, kind="all-reduce") == ["f32"]
+
+
+# ------------------------------------------------- cost-walker regressions -
+
+
+def test_async_allreduce_pair_counted_once():
+    sync = analyze_hlo(_SYNC)
+    asyn = analyze_hlo(_ASYNC)
+    assert sync.collective_bytes["all-reduce"] == 256.0
+    assert asyn.collective_bytes["all-reduce"] == 256.0
+
+
+def test_inplace_permute_start_ships_source_only():
+    """The in-place collective-permute-start carries (src, dst) operands;
+    only the 64 x f32 source crosses the wire — 256 B, not 512."""
+    sync = analyze_hlo(_SYNC)
+    asyn = analyze_hlo(_ASYNC)
+    assert sync.collective_bytes["collective-permute"] == 256.0
+    assert asyn.collective_bytes["collective-permute"] == 256.0
+
+
+def test_legacy_reexports_still_resolve():
+    # the walker module keeps its old private surface for importers
+    from repro.launch import hlo_analysis as ha
+
+    assert ha._type_bytes("f32[8,2]") == 64
+    assert ha._type_bytes("(f32[4], bf16[4])") == 24
+    assert ha._shape_dims("f32[3,5]{1,0}") == [3, 5]
+    assert ha._group_size is hlo_ir.group_size
+    assert ha._trip_count is hlo_ir.trip_count
+    assert ha._parse_operands is hlo_ir.parse_operands
+    comps = ha._parse_computations(_SYNC)
+    assert {c for c in comps} == {"add", "main"}
+    assert isinstance(comps["main"][0], hlo_ir.Instruction)
+
+
+def test_find_instructions_predicate():
+    hits = hlo_ir.find_instructions(
+        _ASYNC, lambda i: i.is_collective and i.is_start)
+    assert {i.name for _, i in hits} == {"ars", "cps"}

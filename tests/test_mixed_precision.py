@@ -279,8 +279,9 @@ def test_sharded_refined_hlo_gate():
     across its collective-permutes and runs the emulated wire at f32,
     which says nothing about the TPU lowering."""
     rows = _run(textwrap.dedent("""
-        import json, re
+        import json
         import jax, jax.numpy as jnp
+        from repro.analysis import contracts
         from repro.core import mesh_gen, nekbone
         from repro.distributed.context import make_solver_ctx
         mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
@@ -294,18 +295,17 @@ def test_sharded_refined_hlo_gate():
             ns = int(sh.partition.n_shared)
             B = jnp.zeros((mesh.n_global,), jnp.float32)
             low = jax.jit(lambda b: sh.run_refined(b, 1e-5, 300)).lower(B)
-            wire = re.compile(r"stablehlo\\.collective_permute.[^\\n]*?"
-                              r"->\\s*tensor<\\d+x(\\w+)>")
-            kinds = sorted(set(wire.findall(low.as_text())))
+            # permute element dtypes in the LOWERED (StableHLO) module —
+            # the width the repo constructs
+            kinds = contracts.wire_dtypes(low.as_text())
             txt = low.compile().as_text()
-            iface = re.compile(r"= f32\\[" + str(ns)
-                               + r"[,\\]]\\S* all-reduce(?:-start)?\\(")
-            cperm = re.compile(r"= \\w+\\[[^\\]]*\\]\\S* "
-                               r"collective-permute(?:-start)?\\(")
             print(json.dumps({
-                "compress": comp, "iface_psums": len(iface.findall(txt)),
+                "compress": comp,
+                "iface_psums": contracts.interface_allreduce_count(
+                    txt, ns),
                 "wire_types": kinds,
-                "n_cperms": len(cperm.findall(txt))}))
+                "n_cperms": contracts.collective_census(
+                    txt)["collective-permute"]}))
     """), devices=4)
     assert len(rows) == 2
     for r in rows:

@@ -339,8 +339,9 @@ def test_box_grid_hlo_gate():
     offset per apply) and ZERO interface-sized all-reduces — the box
     decomposition's extra edge/corner rounds stay point-to-point."""
     rows = _run(textwrap.dedent("""
-        import json, re
+        import json
         import jax, jax.numpy as jnp
+        from repro.analysis import contracts
         from repro.core import mesh_gen, nekbone
         from repro.distributed.context import make_solver_ctx
         mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(4, 4, 2, 2),
@@ -353,9 +354,6 @@ def test_box_grid_hlo_gate():
             ns = int(sh.partition.n_shared)
             shape = (mesh.n_global, nrhs) if nrhs > 1 else (mesh.n_global,)
             B = jnp.zeros(shape, jnp.float32)
-            iface = re.compile(r"= f32\\[" + str(ns)
-                               + r"[,\\]]\\S* all-reduce(?:-start)?\\(")
-            cperm = re.compile(r" collective-permute(?:-start)?\\(")
             txt_op = jax.jit(sh.op).lower(B).compile().as_text()
             txt_solve = jax.jit(lambda b: sh.run_pcg(b, 1e-6, 300)).lower(
                 B).compile().as_text()
@@ -363,10 +361,14 @@ def test_box_grid_hlo_gate():
                 "nrhs": nrhs, "n_shared": ns,
                 "offsets": list(sh.partition.nbr_offsets),
                 "rounds": 2 * len(sh.partition.nbr_offsets),
-                "op_iface_psums": len(iface.findall(txt_op)),
-                "op_cperms": len(cperm.findall(txt_op)),
-                "solve_iface_psums": len(iface.findall(txt_solve)),
-                "solve_cperms": len(cperm.findall(txt_solve))}))
+                "op_iface_psums": contracts.interface_allreduce_count(
+                    txt_op, ns),
+                "op_cperms": contracts.collective_census(
+                    txt_op)["collective-permute"],
+                "solve_iface_psums": contracts.interface_allreduce_count(
+                    txt_solve, ns),
+                "solve_cperms": contracts.collective_census(
+                    txt_solve)["collective-permute"]}))
     """), devices=4)
     assert len(rows) == 2
     for r in rows:

@@ -16,7 +16,6 @@ tests/test_nekbone_sharded.py (the main pytest process stays at 1 device).
 
 import json
 import os
-import re
 import subprocess
 import sys
 import textwrap
@@ -191,9 +190,10 @@ def test_one_interface_psum_per_apply():
     in the full solve (initial residual + the single one in the while
     body), independent of the iteration count."""
     rows = _run(textwrap.dedent("""
-        import json, re
+        import json
         import jax, jax.numpy as jnp
         import numpy as np
+        from repro.analysis import contracts
         from repro.core import mesh_gen, nekbone
         from repro.distributed.context import make_solver_ctx
         mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
@@ -203,15 +203,15 @@ def test_one_interface_psum_per_apply():
                                    dtype=jnp.float32, shard_ctx=ctx)
         ns = int(sh.partition.n_shared)
         B = jnp.zeros((mesh.n_global, 5), jnp.float32)
-        iface = re.compile(r"= f32\\[" + str(ns)
-                           + r",5\\]\\S* all-reduce(?:-start)?\\(")
         txt_op = jax.jit(sh.op).lower(B).compile().as_text()
         txt_solve = jax.jit(
             lambda b: sh.run_pcg(b, 1e-6, 300)).lower(B).compile().as_text()
         print(json.dumps({
             "n_shared": ns,
-            "apply_iface_psums": len(iface.findall(txt_op)),
-            "solve_iface_psums": len(iface.findall(txt_solve)),
+            "apply_iface_psums": contracts.interface_allreduce_count(
+                txt_op, ns, nrhs=5),
+            "solve_iface_psums": contracts.interface_allreduce_count(
+                txt_solve, ns, nrhs=5),
             "iters_solved": int(jnp.max(nekbone.solve(
                 sh, jnp.ones((mesh.n_global, 5), jnp.float32),
                 tol=1e-6, max_iter=300).iterations))}))

@@ -20,7 +20,6 @@ tests/test_nekbone_sharded.py.
 import contextlib
 import json
 import os
-import re
 import subprocess
 import sys
 import textwrap
@@ -516,8 +515,9 @@ def test_neighbour_hlo_gate():
     ZERO interface-sized all-reduces — the whole interface exchange is
     point-to-point; only the scalar/batched dot psums remain in the solve."""
     rows = _run(textwrap.dedent("""
-        import json, re
+        import json
         import jax, jax.numpy as jnp
+        from repro.analysis import contracts
         from repro.core import mesh_gen, nekbone
         from repro.distributed.context import make_solver_ctx
         mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
@@ -530,20 +530,22 @@ def test_neighbour_hlo_gate():
             ns = int(sh.partition.n_shared)
             shape = (mesh.n_global, nrhs) if nrhs > 1 else (mesh.n_global,)
             B = jnp.zeros(shape, jnp.float32)
-            # any all-reduce whose leading buffer dim is the interface size
-            iface = re.compile(r"= f32\\[" + str(ns)
-                               + r"[,\\]]\\S* all-reduce(?:-start)?\\(")
-            cperm = re.compile(r" collective-permute(?:-start)?\\(")
             txt_op = jax.jit(sh.op).lower(B).compile().as_text()
             txt_solve = jax.jit(lambda b: sh.run_pcg(b, 1e-6, 300)).lower(
                 B).compile().as_text()
             n_rounds = 2 * len(sh.partition.nbr_offsets)
             print(json.dumps({
                 "nrhs": nrhs, "n_shared": ns, "rounds": n_rounds,
-                "op_iface_psums": len(iface.findall(txt_op)),
-                "op_cperms": len(cperm.findall(txt_op)),
-                "solve_iface_psums": len(iface.findall(txt_solve)),
-                "solve_cperms": len(cperm.findall(txt_solve))}))
+                # any all-reduce whose leading buffer dim is the
+                # interface size (nrhs=None: leading-dim predicate)
+                "op_iface_psums": contracts.interface_allreduce_count(
+                    txt_op, ns),
+                "op_cperms": contracts.collective_census(
+                    txt_op)["collective-permute"],
+                "solve_iface_psums": contracts.interface_allreduce_count(
+                    txt_solve, ns),
+                "solve_cperms": contracts.collective_census(
+                    txt_solve)["collective-permute"]}))
     """), devices=4)
     assert len(rows) == 2
     for r in rows:

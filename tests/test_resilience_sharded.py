@@ -163,16 +163,15 @@ def test_hlo_census_detection_adds_zero_collectives():
     neighbour-round permutes, zero interface psums) censuses hold on the
     detection-enabled build, and nrhs=4 pays exactly the nrhs=1 counts."""
     rows = _run(textwrap.dedent("""
-        import json, re
+        import json
         import jax, jax.numpy as jnp
+        from repro.analysis import contracts
         from repro.core import mesh_gen, nekbone
         from repro.distributed.context import make_solver_ctx
         from repro.resilience.inject import FaultSpec
 
         mesh = mesh_gen.deform_trilinear(mesh_gen.box_mesh(3, 3, 2, 3),
                                          seed=3)
-        allred = re.compile(r" all-reduce(?:-start)?\\(")
-        cperm = re.compile(r" collective-permute(?:-start)?\\(")
         for exchange in ("psum", "neighbour"):
             for nrhs in (1, 4):
                 ctx = make_solver_ctx(devices=4, nrhs=nrhs,
@@ -181,9 +180,6 @@ def test_hlo_census_detection_adds_zero_collectives():
                                            dtype=jnp.float32,
                                            shard_ctx=ctx, nrhs=nrhs)
                 ns = int(sh.partition.n_shared)
-                dims = str(ns) + (r",%d" % nrhs if nrhs > 1 else "")
-                iface = re.compile(r"= f32\\[" + dims
-                                   + r"\\]\\S* all-reduce(?:-start)?\\(")
                 shape = (mesh.n_global, nrhs) if nrhs > 1 \
                     else (mesh.n_global,)
                 B = jnp.zeros(shape, jnp.float32)
@@ -192,9 +188,11 @@ def test_hlo_census_detection_adds_zero_collectives():
                 def census(**kw):
                     txt = jax.jit(lambda b: sh.run_pcg(
                         b, 1e-6, 300, **kw)).lower(B).compile().as_text()
-                    return {"ar": len(allred.findall(txt)),
-                            "cp": len(cperm.findall(txt)),
-                            "iface": len(iface.findall(txt))}
+                    counts = contracts.collective_census(txt)
+                    return {"ar": counts["all-reduce"],
+                            "cp": counts["collective-permute"],
+                            "iface": contracts.interface_allreduce_count(
+                                txt, ns, nrhs=nrhs)}
                 base = census()
                 windowed = census(stagnation_window=8)
                 faulted = census(fault=spec)

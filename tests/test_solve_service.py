@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.contracts import NoRetrace
 from repro.core import mesh_gen, nekbone
 from repro.resilience.retry import RetryPolicy, solve_resilient
 from repro.resilience.status import SolveStatus
@@ -90,7 +91,9 @@ def test_warmup_then_randomized_depths_trace_nothing(poisson):
             reqs.append(req)
         svc.step()
     svc.run_until_drained()
-    assert svc.trace_count == warm, (svc.trace_count, warm)
+    violations = NoRetrace.counts(warm, svc.trace_count,
+                                  "randomized-depths")
+    assert not violations, [str(v) for v in violations]
     assert all(r.done and r.report.converged for r in reqs)
 
 
@@ -108,7 +111,8 @@ def test_unwarmed_service_traces_on_demand(poisson):
     for uid in range(2, 4):
         svc.submit(SolveRequest(uid=uid, b=_rhs(prob, rng)))
     svc.step()
-    assert svc.trace_count == first  # same bucket: replayed, not retraced
+    # same bucket: replayed, not retraced
+    assert not NoRetrace.counts(first, svc.trace_count, "unwarmed-repeat")
 
 
 # --------------------------------------------------------------------------
@@ -173,7 +177,7 @@ def test_padded_column_never_flips_a_real_columns_status(poisson):
     for r in (good[0], bad, good[1]):
         svc.submit(r)
     assert svc.step() == 3
-    assert svc.trace_count == warm
+    assert not NoRetrace.counts(warm, svc.trace_count, "failure-path")
     for r in good:
         assert r.done and r.error is None and r.report.converged
         assert int(r.report.status[0]) == SolveStatus.CONVERGED
